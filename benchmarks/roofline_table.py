@@ -1,0 +1,70 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json and emits the
+per-(arch x shape x mesh) roofline terms as markdown + CSV.
+
+    python -m benchmarks.roofline_table [--dir experiments/dryrun]
+                                        [--mesh 16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_md(rows: List[Dict], mesh: str) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| roofline_frac | MODEL/HLO flops | zero | micro |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                       f"{r.get('error','?')[:60]} | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+            f"| {r['model_flops_util']:.2f} | z{r.get('zero_stage','-')} "
+            f"| {r.get('microbatches','-')} |")
+    return "\n".join(out)
+
+
+def fmt_csv(rows: List[Dict]) -> str:
+    cols = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "roofline_fraction",
+            "model_flops_util", "zero_stage", "microbatches", "compile_s")
+    out = [",".join(cols)]
+    for r in rows:
+        out.append(",".join(str(r.get(c, "")) for c in cols))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.md:
+        print(fmt_md(rows, args.mesh))
+    else:
+        print(fmt_csv(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Design-space exploration example: evaluate a NEW cluster you are
+considering building — the core COMET use case.
+
+Here: would a hypothetical v5e-like pod with double HBM bandwidth, or one
+with CXL-style 1TB/s expanded memory, train the assigned archs faster?
+
+Run: PYTHONPATH=src python examples/cluster_dse.py
+"""
+
+import dataclasses
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import SHAPES
+from repro.core.cluster import TPU_V5E_POD
+from repro.core.simulator import simulate_iteration
+from repro.core.workload import decompose
+
+GB = 1e9
+shape = SHAPES["train_4k"]
+
+variants = {
+    "v5e-pod (baseline)": TPU_V5E_POD,
+    "2x HBM bandwidth": TPU_V5E_POD.with_node(
+        dataclasses.replace(TPU_V5E_POD.node, local_bw=2 * 819e9)),
+    "+CXL 1TB/s x 64GB": TPU_V5E_POD.with_node(
+        TPU_V5E_POD.node.with_expansion(cap=64 * GB, bw=1000 * GB)),
+    "2x ICI bandwidth": TPU_V5E_POD.with_topology(
+        dataclasses.replace(TPU_V5E_POD.topology, link_bw=100e9)),
+}
+
+archs = ["internlm2-20b", "llama4-maverick-400b-a17b", "mamba2-780m",
+         "internvl2-76b"]
+print(f"{'arch':<28}" + "".join(f"{v:>22}" for v in variants))
+for arch in archs:
+    cfg = get_config(arch)
+    wl = decompose(cfg, shape, mp=16, dp=16)
+    row = f"{arch:<28}"
+    base = None
+    for name, cl in variants.items():
+        t = simulate_iteration(wl, cl).total
+        base = base or t
+        row += f"{t:>14.2f}s ({base/t:4.2f}x)"
+    print(row)
+
+print("\nReading: speedup vs baseline per cluster variant — the COMET "
+      "answer to 'which upgrade moves which workload'.")

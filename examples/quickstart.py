@@ -1,0 +1,52 @@
+"""Quickstart: the COMET methodology in ~40 lines.
+
+1. Pick a model + cluster.
+2. Sweep (MP, DP) parallelization strategies (paper Fig. 8).
+3. Ask a what-if: how much expanded-memory bandwidth makes the
+   memory-hungry strategy worthwhile? (paper Fig. 9 / Ex. 1)
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import BASELINE_DGX_A100
+from repro.core.dse import memory_expansion_heatmap, mpdp_sweep
+from repro.core.memory import per_node_footprint
+from repro.core.workload import decompose
+
+GB = 1e9
+
+model = get_config("transformer-1t")
+shape = ShapeConfig("train", seq_len=2048, global_batch=1024, kind="train")
+cluster = BASELINE_DGX_A100
+
+print(f"model: {model.arch_id} ({model.param_count()/1e12:.2f}T params)")
+print(f"cluster: {cluster.name} ({cluster.num_nodes} x {cluster.node.name})\n")
+
+# ---- step 2: strategy sweep -------------------------------------------
+results = mpdp_sweep(model, shape, cluster)
+print(f"{'strategy':>14} {'iter_s':>9} {'exposed_comm_s':>15} {'mem_GB':>8}")
+for r in results:
+    d = r.breakdown.as_dict()
+    comm = d["fp_exposed_comm"] + d["ig_exposed_comm"] + d["wg_exposed_comm"]
+    print(f"{r.label:>14} {d['total']:9.2f} {comm:15.2f} "
+          f"{r.footprint_bytes/GB:8.1f}")
+best = min(results, key=lambda r: r.total)
+print(f"\nbest strategy: {best.label} "
+      f"(paper's answer: MP8_DP128)\n")
+
+# ---- step 3: memory-expansion what-if ---------------------------------
+wl = decompose(model, shape, mp=64, dp=16)
+baseline = [r for r in results if r.label == "MP64_DP16"][0]
+need = per_node_footprint(decompose(model, shape, mp=8, dp=128),
+                          cluster.node).total
+print(f"MP8_DP128 needs {need/GB:.0f} GB/node (local: "
+      f"{cluster.node.local_cap/GB:.0f} GB) -> requires memory expansion")
+hm = memory_expansion_heatmap(model, shape, cluster,
+                              em_bandwidths_gbs=(100, 250, 500, 1000, 2000),
+                              strategies=[(8, 128)])
+print(f"{'EM bandwidth':>14} {'runtime vs MP64_DP16 baseline':>30}")
+for bw, t in sorted(hm["MP8_DP128"].items()):
+    tag = "  <- expansion wins" if t < baseline.total else ""
+    print(f"{bw:>11.0f} GB/s {t/baseline.total:>24.2f}x{tag}")

@@ -1,0 +1,47 @@
+"""Serving example: batched requests through the continuous-batching engine.
+
+Mixed prompt lengths, staggered admission, greedy decoding — and a
+self-check that multi-slot batching reproduces single-request decoding
+exactly.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve import Engine, EngineConfig, Request
+
+cfg = get_config("smollm-135m", reduced=True)
+model = get_model(cfg)
+rng = jax.random.PRNGKey(0)
+params = model.init_params(rng, cfg, dtype=jnp.float32)
+
+engine = Engine(cfg, params, EngineConfig(max_batch=4, max_seq=96),
+                dtype=jnp.float32)
+rs = np.random.RandomState(0)
+t0 = time.monotonic()
+for i in range(10):
+    plen = int(rs.randint(3, 20))
+    engine.submit(Request(uid=i,
+                          prompt=rs.randint(0, cfg.vocab_size, plen),
+                          max_new_tokens=12))
+done = engine.run_until_drained()
+dt = time.monotonic() - t0
+tok = sum(len(r.out_tokens) for r in done)
+print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
+      f"({tok/dt:.0f} tok/s on CPU)")
+
+# self-check: slot batching == single-request decode
+req0 = [r for r in done if r.uid == 0][0]
+solo = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=96),
+              dtype=jnp.float32)
+solo.submit(Request(uid=0, prompt=req0.prompt, max_new_tokens=12))
+want = solo.run_until_drained()[0].out_tokens
+assert req0.out_tokens == want, "batched decode must match solo decode"
+print("batched == solo decode: OK")

@@ -1,0 +1,2 @@
+"""Atomic/async checkpointing with retention + elastic re-shard restore."""
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointManager  # noqa: F401

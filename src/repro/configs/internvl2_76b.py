@@ -1,0 +1,28 @@
+"""internvl2-76b — VLM: InternViT frontend (STUB) + LLaMA-3-70B-class backbone.
+[arXiv:2404.16821; unverified]
+
+Per the assignment the vision frontend is a stub: ``input_specs()`` provides
+precomputed patch embeddings (batch, num_patches, d_model) which are prepended
+to the token embeddings. Only the language backbone is modeled.
+"""
+
+from repro.configs.base import ModelConfig, VisionStubConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    activation="swiglu",
+    vision=VisionStubConfig(num_patches=256),
+    source="[arXiv:2404.16821; unverified]",
+    notes="Largest assigned dense model (~76B). vocab padded 128256 -> 129024.",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,40 @@
+"""llama4-maverick-400b-a17b — interleaved MoE, 128 experts top-1, shared expert.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+The brief's header (48L d_model=5120 40H kv=8 d_ff=8192 vocab=202048, MoE 128e
+top-1) with MoE in *every* layer yields ~775B parameters; the production
+Maverick interleaves MoE every other layer (dense FFN between), which lands at
+~400B total / ~17B active — matching the model name. We model ``moe_every=2``
+with an always-on shared expert, and note the [unverified] tier.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,  # dense (non-MoE) interleaved layers use 2*expert d_ff
+    vocab_size=202048,
+    rope_theta=500_000.0,
+    activation="swiglu",
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,
+        d_ff=8192,
+        moe_every=2,
+        shared_expert=True,
+        shared_expert_d_ff=8192,
+        capacity_factor=1.25,
+    ),
+    source="[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]",
+    notes="EP over the model axis: 128 experts / 16 ranks = 8 experts/rank. "
+          "40 heads not divisible by 16 -> attention projections replicated "
+          "over the model axis; vocab padded 202048 -> 202752.",
+)
+
+REDUCED = CONFIG.reduced()

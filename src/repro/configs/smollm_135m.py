@@ -1,0 +1,23 @@
+"""smollm-135m — llama-arch small dense GQA. [hf:HuggingFaceTB/SmolLM-135M; hf]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm-135m",
+    family="dense",
+    num_layers=30,
+    d_model=576,
+    num_heads=9,
+    num_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=49152,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    activation="swiglu",
+    source="[hf:HuggingFaceTB/SmolLM-135M; hf]",
+    notes="9 heads not divisible by TP=16 -> attention replicated over the "
+          "model axis (sharding rule falls back per-tensor); d_ff shards 16-way.",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,21 @@
+"""COMET methodology core: workload modeling, strategy sweeps, roofline +
+memory-traffic + collective cost models, and the ASTRA-lite simulator.
+
+This package is the paper's primary contribution, built as a reusable
+library. Analytical frontend: configs -> workload.decompose ->
+simulator.simulate_iteration. Measured frontend: launch.dryrun ->
+hlo.terms_from_compiled -> the same roofline arithmetic.
+"""
+
+from repro.core.cluster import ClusterConfig, NodeConfig, get_cluster  # noqa: F401
+from repro.core.gemm import CommEvent, ExplicitOp, Gemm, PhaseCost  # noqa: F401
+from repro.core.memory import (  # noqa: F401
+    effective_memory_bw,
+    hybrid_bandwidth,
+    model_state_bytes,
+    per_node_footprint,
+)
+from repro.core.roofline import attainable_perf, compute_delay  # noqa: F401
+from repro.core.simulator import IterationBreakdown, simulate_iteration  # noqa: F401
+from repro.core.strategy import best_strategy, sweep_strategies  # noqa: F401
+from repro.core.workload import Workload, decompose, decompose_dlrm  # noqa: F401

@@ -1,0 +1,233 @@
+"""COMET cluster descriptions: node resources + network topology.
+
+Faithful encodings of the paper's Table I (baseline DGX A100), Table III
+(clusters A0..C2, Dojo, TPU v4), plus this repo's deployment target
+(TPU v5e pods) used by the dry-run roofline analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+GB = 1e9
+TB = 1e12
+MB = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeConfig:
+    """One compute unit (GPU / TPU / tray) — paper's 'node'."""
+
+    name: str
+    peak_flops: float              # peak fp16/bf16 FLOP/s
+    local_cap: float               # local (HBM) capacity, bytes
+    local_bw: float                # local memory bandwidth, bytes/s
+    sram_bytes: float              # on-chip buffer S for the traffic model
+    exp_cap: float = 0.0           # expanded-memory capacity, bytes
+    exp_bw: float = 0.0            # expanded-memory bandwidth, bytes/s
+
+    @property
+    def total_cap(self) -> float:
+        return self.local_cap + self.exp_cap
+
+    def with_expansion(self, cap: float, bw: float) -> "NodeConfig":
+        return dataclasses.replace(self, exp_cap=cap, exp_bw=bw)
+
+    def scaled_compute(self, factor: float) -> "NodeConfig":
+        return dataclasses.replace(self, peak_flops=self.peak_flops * factor)
+
+
+# --------------------------------------------------------------------- #
+# Topologies
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalSwitch:
+    """Two-level switch: fast intra-pod + slower inter-pod (Fig. 7)."""
+
+    pod_size: int
+    intra_bw: float                # per-node per-direction, bytes/s
+    inter_bw: float
+    intra_latency: float = 1e-6
+    inter_latency: float = 5e-6
+
+    def scaled(self, intra: float = 1.0, inter: float = 1.0) -> "HierarchicalSwitch":
+        return dataclasses.replace(
+            self, intra_bw=self.intra_bw * intra, inter_bw=self.inter_bw * inter)
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus:
+    """k-dimensional torus (TPU): per-direction link bandwidth per dim."""
+
+    dims: Tuple[int, ...]
+    link_bw: float
+    latency: float = 1e-6
+    # Optional DCN uplink for multi-pod torus clusters (v5e pods over DCN).
+    dcn_bw: float = 0.0
+    dcn_latency: float = 10e-6
+
+    @property
+    def pod_size(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSwitch:
+    """One logical switch delivering ``bw`` per node (Dojo model)."""
+
+    bw: float
+    latency: float = 1e-6
+
+    @property
+    def pod_size(self) -> int:  # flat network: one "pod"
+        return 1 << 30
+
+
+Topology = object  # union of the three classes above
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    name: str
+    node: NodeConfig
+    num_nodes: int
+    topology: Topology
+    notes: str = ""
+
+    def with_node(self, node: NodeConfig) -> "ClusterConfig":
+        return dataclasses.replace(self, node=node)
+
+    def with_topology(self, topo) -> "ClusterConfig":
+        return dataclasses.replace(self, topology=topo)
+
+
+# --------------------------------------------------------------------- #
+# Paper Table I: baseline 1024-GPU DGX A100 cluster (8-GPU pods)
+# --------------------------------------------------------------------- #
+
+A100_NODE = NodeConfig(
+    name="A100",
+    peak_flops=624e12,            # fp16 TC peak, Table I
+    local_cap=80 * GB,
+    local_bw=2039 * GB,
+    sram_bytes=40 * MB,
+)
+
+BASELINE_DGX_A100 = ClusterConfig(
+    name="dgx-a100-1k",
+    node=A100_NODE,
+    num_nodes=1024,
+    topology=HierarchicalSwitch(pod_size=8, intra_bw=300 * GB, inter_bw=31.25 * GB),
+    notes="Paper Table I: 128 pods x 8 GPUs, NVLink3 intra / IB inter.",
+)
+
+
+# --------------------------------------------------------------------- #
+# Paper Table III: clusters A/B/C (x memory systems 0/1/2), Dojo, TPU v4
+# §V-D: GPU clusters organized in 16-GPU pods.
+# --------------------------------------------------------------------- #
+
+_V100 = NodeConfig("V100", 125e12, 80 * GB, 900 * GB, 36 * MB)
+_A100 = NodeConfig("A100", 625e12, 80 * GB, 2039 * GB, 40 * MB)
+_H100 = NodeConfig("H100", 1979e12, 80 * GB, 3350 * GB, 50 * MB)
+
+_MEMSYS = {
+    0: (0.0, 0.0),
+    1: (480 * GB, 500 * GB),
+    2: (201 * GB, 1000 * GB),
+}
+
+_NET = {
+    "A": HierarchicalSwitch(16, 150 * GB, 6.25 * GB),
+    "B": HierarchicalSwitch(16, 300 * GB, 31.25 * GB),
+    "C": HierarchicalSwitch(16, 450 * GB, 62.5 * GB),
+}
+
+_BASE = {"A": _V100, "B": _A100, "C": _H100}
+
+
+def _gpu_variant(letter: str, mem: int) -> ClusterConfig:
+    cap, bw = _MEMSYS[mem]
+    return ClusterConfig(
+        name=f"{letter}{mem}",
+        node=_BASE[letter].with_expansion(cap, bw),
+        num_nodes=1024,
+        topology=_NET[letter],
+        notes=f"Table III {letter}{mem}: {_BASE[letter].name} x1024, 16-GPU pods.",
+    )
+
+
+DOJO = ClusterConfig(
+    name="dojo",
+    node=NodeConfig("DojoTray", 54_300e12, 640 * GB, 16 * TB, 66 * GB),
+    num_nodes=64,
+    topology=SingleSwitch(bw=20 * 50 * GB),
+    notes="Table III: 64 trays, one-level switch, 20x50GB/s per direction.",
+)
+
+TPU_V4 = ClusterConfig(
+    name="tpu-v4",
+    node=NodeConfig("TPUv4", 275e12, 32 * GB, 1200 * GB, 32 * MB,
+                    exp_cap=39 * GB, exp_bw=1200 * GB),
+    num_nodes=4096,
+    topology=Torus(dims=(16, 16, 16), link_bw=48 * GB),
+    notes="Table III: 4096 chips, 3D torus, 6x48GB/s per direction.",
+)
+
+TABLE_III_CLUSTERS = {
+    **{f"{l}{m}": _gpu_variant(l, m) for l in "ABC" for m in (0, 1, 2)},
+    "dojo": DOJO,
+    "tpu-v4": TPU_V4,
+}
+
+
+# --------------------------------------------------------------------- #
+# Deployment target: TPU v5e (this repo's dry-run hardware constants)
+# --------------------------------------------------------------------- #
+
+V5E_PEAK_FLOPS = 197e12            # bf16 per chip
+V5E_HBM_BW = 819e9                 # bytes/s
+V5E_HBM_CAP = 16 * GB
+V5E_LINK_BW = 50e9                 # per ICI link per direction
+V5E_VMEM = 128 * MB
+
+V5E_NODE = NodeConfig(
+    name="TPUv5e",
+    peak_flops=V5E_PEAK_FLOPS,
+    local_cap=V5E_HBM_CAP,
+    local_bw=V5E_HBM_BW,
+    sram_bytes=V5E_VMEM,
+)
+
+TPU_V5E_POD = ClusterConfig(
+    name="tpu-v5e-pod",
+    node=V5E_NODE,
+    num_nodes=256,
+    topology=Torus(dims=(16, 16), link_bw=V5E_LINK_BW),
+    notes="Production single-pod mesh: 16x16 ICI torus.",
+)
+
+TPU_V5E_MULTIPOD = ClusterConfig(
+    name="tpu-v5e-2pod",
+    node=V5E_NODE,
+    num_nodes=512,
+    topology=Torus(dims=(16, 16), link_bw=V5E_LINK_BW, dcn_bw=25e9),
+    notes="Production multi-pod mesh: 2 pods x (16x16 ICI), DCN inter-pod.",
+)
+
+
+def get_cluster(name: str) -> ClusterConfig:
+    registry = {
+        "dgx-a100-1k": BASELINE_DGX_A100,
+        "tpu-v5e-pod": TPU_V5E_POD,
+        "tpu-v5e-2pod": TPU_V5E_MULTIPOD,
+        **TABLE_III_CLUSTERS,
+    }
+    if name not in registry:
+        raise KeyError(f"unknown cluster {name!r}; available: {sorted(registry)}")
+    return registry[name]

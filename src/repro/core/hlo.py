@@ -1,0 +1,163 @@
+"""Measured-frontend COMET: roofline terms from compiled XLA artifacts.
+
+The paper estimates FLOPs/bytes analytically; the dry-run path measures them
+from the compiled executable instead and feeds them into the *same* roofline
+arithmetic:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` provides HLO_FLOPs and HLO_bytes; collective bytes are
+parsed out of the (post-SPMD-partitioning) HLO text by summing operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.cluster import V5E_HBM_BW, V5E_LINK_BW, V5E_PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "bf16[256,4096,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# HLO instruction line: "  %name = TYPE[SHAPE] opcode(...)" or
+# "  name.123 = (tuple...) all-reduce(...)"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) HLO type."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective opcode over the HLO module.
+
+    ``-done`` halves of async pairs are skipped (the ``-start`` already
+    carries the transferred shape)."""
+    totals: Dict[str, int] = {op: 0 for op in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        totals[op] += shape_bytes(shape_str)
+    return totals
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Per-device roofline terms (seconds) for one compiled step."""
+
+    flops: float                   # total HLO FLOPs (all devices)
+    hbm_bytes: float               # total HLO bytes accessed
+    coll_bytes: float              # total collective bytes
+    chips: int
+    peak_flops: float = V5E_PEAK_FLOPS
+    hbm_bw: float = V5E_HBM_BW
+    link_bw: float = V5E_LINK_BW
+    coll_breakdown: Optional[Dict[str, int]] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.chips * self.link_bw)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound spent in useful compute: how close the
+        dominant term sits to the pure-compute roofline."""
+        if self.bound_s == 0:
+            return 0.0
+        return self.compute_s / self.bound_s
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction(),
+        }
+
+
+def terms_from_compiled(compiled, hlo_text: str, chips: int,
+                        **hw_overrides) -> RooflineTerms:
+    """Build RooflineTerms from a jax Compiled object + its HLO text.
+
+    ``cost_analysis()`` reports per-module totals; on SPMD-partitioned
+    modules these are per-device numbers, so multiply by chip count."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values())) * chips
+    return RooflineTerms(flops=flops, hbm_bytes=hbm, coll_bytes=coll_total,
+                         chips=chips, coll_breakdown=coll, **hw_overrides)
+
+
+def model_flops_util(model_flops: float, terms: RooflineTerms) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+    (catches remat/redundancy waste)."""
+    if terms.flops == 0:
+        return 0.0
+    return model_flops / terms.flops

@@ -1,0 +1,390 @@
+"""Trip-count-weighted HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+ONCE, so any scan-over-layers model under-reports FLOPs, HBM bytes, and —
+critically for the collective roofline term — per-layer collective bytes by
+a factor of num_layers. This module walks the compiled HLO text, multiplies
+computation costs by ``known_trip_count`` at each ``while`` site, and
+accounts fusion boundaries as the HBM traffic unit (fusion internals stay
+on-chip — a closer model of real memory traffic than XLA's per-op sum).
+
+Costs are per-device (post-SPMD shapes); callers multiply by chip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# "  %name = TYPE opcode(OPERANDS), attrs..."  /  "  ROOT %name = ..."
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\(")
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[int]]:
+    """(total bytes, dims of first array shape)."""
+    total = 0
+    first_dims: List[int] = []
+    for i, (dtype, dims) in enumerate(_SHAPE_RE.findall(type_str)):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        sizes = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in sizes:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        if i == 0:
+            first_dims = sizes
+    return total, first_dims
+
+
+def _elems(type_str: str) -> int:
+    n_total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+# Ops a TPU compiler fuses into their consumer (elementwise + layout +
+# windowed reads). XLA:CPU wraps each in its own kLoop "fusion", so counting
+# every boundary massively overstates TPU HBM traffic; instead an op in this
+# set with exactly one user is treated as unmaterialized.
+_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "log-plus-one", "exponential-minus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "select",
+    "compare", "and", "or", "not", "xor", "convert", "copy", "erf",
+    "broadcast", "iota", "reshape", "transpose", "bitcast", "slice",
+    "dynamic-slice", "pad", "reduce-precision", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "rem", "atan2",
+    "is-finite", "partition-id", "replica-id", "cosine", "sine",
+}
+
+
+def _fusion_kind_elementwise(comp: List["Instr"]) -> bool:
+    """A called fusion computation containing only fusible ops behaves like
+    a single elementwise op."""
+    for i in comp:
+        if i.opcode in ("parameter", "constant", "tuple",
+                        "get-tuple-element"):
+            continue
+        if i.opcode not in _FUSIBLE:
+            return False
+    return True
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+
+    # ------------------------------------------------------------------ #
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if current is None:
+                # computation header: "%name (args...) -> type {" (args may
+                # contain nested parens, so match tokens, not a regex group)
+                if stripped.endswith("{") and "->" in stripped:
+                    tok = stripped.split()[0]
+                    if tok == "ENTRY":
+                        tok = stripped.split()[1]
+                    current = tok.split("(")[0].lstrip("%")
+                    self.computations[current] = []
+                continue
+            if stripped == "}" or stripped.startswith("}"):
+                current = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+                after = line[m.end():]
+                depth = 1
+                end = 0
+                for i, ch in enumerate(after):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                operand_str = after[:end]
+                operands = re.findall(r"%([\w.\-]+)", operand_str)
+                self.computations[current].append(
+                    Instr(name, type_str, opcode, operands, line))
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        return next(iter(self.computations))
+
+    # ------------------------------------------------------------------ #
+    def _instr_cost(self, instr: Instr, defs: Dict[str, Instr],
+                    mat: Dict[str, bool]) -> Cost:
+        op = instr.opcode
+        line = instr.line
+        c = Cost()
+        out_full, out_dims = _shape_info(instr.type_str)
+        out_bytes = out_full if mat.get(instr.name, True) else 0.0
+
+        def operand_bytes() -> float:
+            # unmaterialized producers fuse into this op: no HBM read
+            total = 0.0
+            for o in instr.operands:
+                d = defs.get(o)
+                if d is not None and mat.get(o, True):
+                    total += _shape_info(d.type_str)[0]
+            return total
+
+        # --- called computations -------------------------------------- #
+        if op == "fusion":
+            called = re.search(r"calls=%?([\w.\-]+)", line)
+            comp_name = called.group(1) if called else None
+            if comp_name in self.computations:
+                inner = self.comp_cost(comp_name)
+                c.flops += inner.flops
+                for k, v in inner.coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+            # Fusion boundary bytes, slice-aware per operand: a parameter
+            # consumed only by slice/gather ops inside the fusion reads the
+            # window, not the whole array (stacked scan params!); a buffer
+            # updated in place by dynamic-update-slice moves only the
+            # updated window (scan ys / grad accumulators).
+            comp = self.computations.get(comp_name, [])
+            comp_defs = {i.name: i for i in comp}
+            params_by_idx: Dict[int, Instr] = {}
+            for i in comp:
+                if i.opcode == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", i.line)
+                    if m:
+                        params_by_idx[int(m.group(1))] = i
+            dus_update_bytes = 0.0
+            for u in comp:
+                if u.opcode == "dynamic-update-slice" and len(u.operands) > 1:
+                    upd = comp_defs.get(u.operands[1])
+                    if upd is not None:
+                        dus_update_bytes += _shape_info(upd.type_str)[0]
+                    else:
+                        dus_update_bytes += out_full
+            for idx, oname in enumerate(instr.operands):
+                d = defs.get(oname)
+                if d is not None and not mat.get(oname, True):
+                    continue  # fused producer, no HBM read
+                full = _shape_info(d.type_str)[0] if d is not None else 0
+                p = params_by_idx.get(idx)
+                if p is not None:
+                    users = [u for u in comp if p.name in u.operands]
+                    if users and all(u.opcode in ("slice", "dynamic-slice",
+                                                  "gather")
+                                     for u in users):
+                        c.bytes += sum(_shape_info(u.type_str)[0]
+                                       for u in users)
+                        continue
+                    if users and all(
+                            u.opcode in ("dynamic-update-slice", "bitcast",
+                                         "copy")
+                            for u in users) and any(
+                            u.opcode == "dynamic-update-slice"
+                            and u.operands and u.operands[0] == p.name
+                            for u in users):
+                        c.bytes += dus_update_bytes  # RMW window read
+                        continue
+                c.bytes += full
+            if dus_update_bytes > 0:
+                c.bytes += dus_update_bytes  # in-place write, not full buffer
+            else:
+                c.bytes += out_bytes
+            return c
+        if op == "while":
+            trip = 1
+            m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if m:
+                trip = int(m.group(1))
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            if body and body.group(1) in self.computations:
+                c.add(self.comp_cost(body.group(1)), trip)
+            if cond and cond.group(1) in self.computations:
+                c.add(self.comp_cost(cond.group(1)), trip)
+            return c
+        if op in ("call", "custom-call", "reduce", "reduce-window",
+                  "scatter", "sort", "map", "select-and-scatter"):
+            called = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if called and called.group(1) in self.computations:
+                # applied per output element (reduce/scatter/map)
+                inner = self.comp_cost(called.group(1))
+                c.add(inner, max(_elems(instr.type_str), 1))
+            c.bytes += operand_bytes() + out_bytes
+            if op == "reduce":
+                c.flops += max(operand_bytes() / 4.0, 0)  # ~1 flop/elem
+            return c
+        if op == "conditional":
+            branches = re.findall(
+                r"(?:true_computation|false_computation|branch_computations)"
+                r"=\{?%?([\w.\-,% ]+)\}?", line)
+            names: List[str] = []
+            for b in branches:
+                names += re.findall(r"([\w.\-]+)", b.replace("%", ""))
+            costs = [self.comp_cost(n) for n in names
+                     if n in self.computations]
+            if costs:
+                worst = max(costs, key=lambda cc: cc.flops + cc.bytes)
+                c.add(worst)
+            c.bytes += operand_bytes() + out_bytes
+            return c
+
+        # --- collectives ----------------------------------------------- #
+        for coll in COLLECTIVES:
+            if op == coll or op == coll + "-start":
+                c.coll[coll] = c.coll.get(coll, 0.0) + out_bytes
+                c.bytes += operand_bytes() + out_bytes
+                return c
+            if op == coll + "-done":
+                return c
+
+        # --- compute ops ------------------------------------------------ #
+        if op in ("dot", "dot-general"):
+            k = 1
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            lhs = defs.get(instr.operands[0]) if instr.operands else None
+            if m and lhs is not None:
+                _, lhs_dims = _shape_info(lhs.type_str)
+                for d in m.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        k *= lhs_dims[int(d)]
+            out_elems = _elems(instr.type_str)
+            c.flops += 2.0 * out_elems * k
+            c.bytes += operand_bytes() + out_bytes
+            return c
+        if op == "convolution":
+            m = re.search(r"window=\{size=([0-9x]+)", line)
+            kelems = 1
+            if m:
+                for d in m.group(1).split("x"):
+                    kelems *= int(d)
+            c.flops += 2.0 * _elems(instr.type_str) * kelems
+            c.bytes += operand_bytes() + out_bytes
+            return c
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all"):
+            return c
+        # Slicing/gather ops move only the selected window, not the full
+        # operand (a dynamic-slice of stacked scan params reads one layer).
+        if op in ("slice", "dynamic-slice", "gather"):
+            c.bytes += 2.0 * out_bytes
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = 0.0
+            if len(instr.operands) >= 2:
+                d = defs.get(instr.operands[1])
+                if d is not None:
+                    upd = _shape_info(d.type_str)[0]
+            c.bytes += 2.0 * max(upd, out_bytes * 0.0)
+            if upd == 0.0:
+                c.bytes += out_bytes  # fallback when update operand unknown
+            return c
+        if op in ("broadcast", "iota", "reshape", "transpose", "copy",
+                  "convert", "reverse", "pad", "concatenate"):
+            c.bytes += operand_bytes() + out_bytes
+            return c
+        # generic elementwise
+        c.flops += _elems(instr.type_str)
+        c.bytes += operand_bytes() + out_bytes
+        return c
+
+    # ------------------------------------------------------------------ #
+    def _is_fusible_node(self, instr: Instr) -> bool:
+        if instr.opcode in _FUSIBLE:
+            return True
+        if instr.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", instr.line)
+            if m and m.group(1) in self.computations:
+                return _fusion_kind_elementwise(self.computations[m.group(1)])
+        return False
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        instrs = self.computations.get(name, [])
+        defs = {i.name: i for i in instrs}
+        # Materialization: a fusible op with exactly one user fuses into its
+        # consumer (roots have zero users -> materialized).
+        user_count: Dict[str, int] = {}
+        for i in instrs:
+            for o in i.operands:
+                user_count[o] = user_count.get(o, 0) + 1
+        mat: Dict[str, bool] = {}
+        for i in instrs:
+            mat[i.name] = (not self._is_fusible_node(i)
+                           or user_count.get(i.name, 0) != 1)
+        total = Cost()
+        for instr in instrs:
+            total.add(self._instr_cost(instr, defs, mat))
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str) -> Cost:
+    """Per-device (flops, hbm bytes, collective bytes by opcode)."""
+    return HloModule(text).entry_cost()

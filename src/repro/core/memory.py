@@ -1,0 +1,89 @@
+"""COMET §III-B / §IV-B: per-node memory footprint + hybrid-memory model.
+
+Model-state footprint follows ZeRO's accounting (fp16 weights/grads, fp32
+Adam states): 16 bytes/param baseline, staged down by ZeRO-1/2/3 across the
+DP dimension.  Residual state is activation working memory (intermediates
+between two consecutive activation checkpoints) — checkpoints themselves are
+assumed host-offloaded, as in the paper.
+
+The hybrid local+expanded memory bandwidth is the paper's Eqn (3):
+
+    bw_hybrid = total / (data_LM / bw_LM + data_EM / bw_EM)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cluster import NodeConfig
+from repro.core.workload import Workload
+
+# bytes per parameter
+FP16 = 2
+GRAD = 2
+OPTIM = 12  # fp32 master + momentum + variance (ZeRO's K=12)
+
+
+def model_state_bytes(params: float, dp: int, zero_stage: int) -> float:
+    """Per-node model-state bytes for ``params`` parameters held on this
+    node's MP shard, under ZeRO stage 0..3 across ``dp`` replicas."""
+    dp = max(1, dp)
+    if zero_stage == 0:
+        return (FP16 + GRAD + OPTIM) * params
+    if zero_stage == 1:  # optimizer states sharded
+        return (FP16 + GRAD) * params + OPTIM * params / dp
+    if zero_stage == 2:  # + gradients sharded
+        return FP16 * params + (GRAD + OPTIM) * params / dp
+    if zero_stage == 3:  # + parameters sharded
+        return (FP16 + GRAD + OPTIM) * params / dp
+    raise ValueError(f"zero_stage must be 0..3, got {zero_stage}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FootprintReport:
+    model_states: float
+    activation_working: float
+    total: float
+    fits_local: bool
+    fits_total: bool
+
+
+def per_node_footprint(
+    workload: Workload,
+    node: Optional[NodeConfig] = None,
+    zero_stage: int = 2,
+) -> FootprintReport:
+    """Per-node footprint of a decomposed workload (paper defaults: ZeRO-2,
+    fp16 activations, checkpoint activations host-offloaded)."""
+    params = workload.total_weight_bytes() / FP16
+    states = model_state_bytes(params, workload.dp, zero_stage)
+    awm = workload.activation_working_bytes()
+    total = states + awm
+    fits_local = fits_total = True
+    if node is not None:
+        fits_local = total <= node.local_cap
+        fits_total = total <= node.total_cap
+    return FootprintReport(states, awm, total, fits_local, fits_total)
+
+
+def hybrid_bandwidth(total_bytes: float, data_lm: float,
+                     bw_lm: float, bw_em: float) -> float:
+    """Paper Eqn (3). ``data_lm`` = bytes served from local memory."""
+    data_em = max(0.0, total_bytes - data_lm)
+    if total_bytes <= 0:
+        return bw_lm
+    if data_em <= 0 or bw_em <= 0:
+        return bw_lm
+    return total_bytes / (data_lm / bw_lm + data_em / bw_em)
+
+
+def effective_memory_bw(node: NodeConfig, footprint_bytes: float) -> float:
+    """Roofline slope for a node given the working set it must hold:
+    if the footprint spills past local capacity, accesses split between
+    LM and EM proportionally to residency (paper §III-C2)."""
+    if footprint_bytes <= node.local_cap or node.exp_cap <= 0:
+        return node.local_bw
+    frac_lm = node.local_cap / footprint_bytes
+    # Accesses hit LM with probability = residency fraction.
+    return hybrid_bandwidth(1.0, frac_lm, node.local_bw, node.exp_bw)

@@ -1,0 +1,99 @@
+"""COMET §III-B: parallelization-strategy sweeps.
+
+For a cluster of N nodes, sweep all power-of-two (MP, DP) with MP*DP = N,
+decompose the workload per combination, and simulate (§III-C).  This is the
+paper's Fig. 8 experiment engine; higher-level studies build on it (dse.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.memory import per_node_footprint
+from repro.core.simulator import IterationBreakdown, simulate_iteration
+from repro.core.workload import Workload, decompose
+
+
+def power_of_two_strategies(num_nodes: int) -> List[tuple]:
+    """All (MP, DP) with MP*DP = N, both powers of two (paper sweep)."""
+    out = []
+    mp = num_nodes
+    while mp >= 1:
+        out.append((mp, num_nodes // mp))
+        mp //= 2
+    return out
+
+
+@dataclasses.dataclass
+class StrategyResult:
+    mp: int
+    dp: int
+    breakdown: IterationBreakdown
+    footprint_bytes: float
+
+    @property
+    def label(self) -> str:
+        return f"MP{self.mp}_DP{self.dp}"
+
+    @property
+    def total(self) -> float:
+        return self.breakdown.total
+
+
+def sweep_strategies(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    cluster: ClusterConfig,
+    zero_stage: int = 2,
+    mem_bw_override: Optional[float] = None,
+    min_mp: int = 1,
+    max_mp: Optional[int] = None,
+    workload_fn: Optional[Callable[..., Workload]] = None,
+) -> List[StrategyResult]:
+    """Fig. 8 engine: simulate every (MP, DP) combination on the cluster.
+
+    ``mem_bw_override`` reproduces §V-B1's 'infinite capacity at baseline
+    bandwidth' assumption when set to the node's local bandwidth."""
+    decomp = workload_fn or decompose
+    results = []
+    for mp, dp in power_of_two_strategies(cluster.num_nodes):
+        if mp < min_mp or (max_mp is not None and mp > max_mp):
+            continue
+        wl = decomp(cfg, shape, mp=mp, dp=dp)
+        br = simulate_iteration(wl, cluster, zero_stage=zero_stage,
+                                mem_bw_override=mem_bw_override)
+        fp = per_node_footprint(wl, cluster.node, zero_stage)
+        results.append(StrategyResult(mp, dp, br, fp.total))
+    return results
+
+
+def best_strategy(results: List[StrategyResult],
+                  require_fit_bytes: Optional[float] = None) -> StrategyResult:
+    """Fastest strategy; optionally restricted to those fitting a capacity."""
+    pool = results
+    if require_fit_bytes is not None:
+        pool = [r for r in results if r.footprint_bytes <= require_fit_bytes]
+        if not pool:
+            raise ValueError("no strategy fits the given capacity")
+    return min(pool, key=lambda r: r.total)
+
+
+def footprint_table(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    num_nodes: int,
+    zero_stages=(0, 1, 2, 3),
+) -> Dict[str, Dict[int, float]]:
+    """Fig. 6 engine: per-node model-state footprint vs MP degree x ZeRO."""
+    from repro.core.memory import model_state_bytes
+
+    table: Dict[str, Dict[int, float]] = {}
+    for mp, dp in power_of_two_strategies(num_nodes):
+        wl = decompose(cfg, shape, mp=mp, dp=dp)
+        params = wl.total_weight_bytes() / 2
+        table[f"MP{mp}_DP{dp}"] = {
+            z: model_state_bytes(params, dp, z) for z in zero_stages}
+    return table

@@ -1,0 +1,498 @@
+"""COMET §III-A / §IV-A: model -> per-layer GEMM decomposition.
+
+``decompose(cfg, shape, mp, dp)`` turns a :class:`repro.configs.ModelConfig`
+into a :class:`Workload`: an ordered list of :class:`LayerSpec`, each holding
+
+  * the per-node forward GEMMs / explicit ops (already sharded for the given
+    MP degree, with the per-replica batch ``global_batch / dp``),
+  * the derived input-gradient (IG) and weight-gradient (WG) ops,
+  * the communication events per phase (blocking MP collectives in FP/IG,
+    non-blocking DP collectives in WG — paper §III-C3),
+  * per-node weight bytes and output-activation bytes (footprint model input).
+
+The transformer decomposition follows the paper's Table II (Megatron-style
+MP: column-parallel QKV/FFN-in, row-parallel proj/FFN-out, vocab-parallel
+embeddings); the additional families (MoE/EP, SSD, hybrid, enc-dec, VLM)
+extend the same scheme — each is documented inline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Union
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.gemm import CommEvent, ExplicitOp, Gemm, PhaseCost, phase_cost
+
+Op = Union[Gemm, ExplicitOp]
+
+BYTES = 2  # bf16/fp16 operands throughout (paper assumes fp16 activations)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One model layer on one node, for one (MP, DP) strategy."""
+
+    name: str
+    fwd: List[Op] = dataclasses.field(default_factory=list)
+    ig: List[Op] = dataclasses.field(default_factory=list)
+    wg: List[Op] = dataclasses.field(default_factory=list)
+    comm_fwd: List[CommEvent] = dataclasses.field(default_factory=list)
+    comm_ig: List[CommEvent] = dataclasses.field(default_factory=list)
+    comm_wg: List[CommEvent] = dataclasses.field(default_factory=list)
+    weight_bytes: int = 0          # per-node fp16 weight bytes
+    act_out_bytes: int = 0         # per-node output activation bytes
+    repeat: int = 1                # layer-stack multiplier
+    # Optimizer-update traffic override (bytes). None -> dense Adam accounting
+    # (28 B/param on the ZeRO-sharded slice). Sparse layers (embedding bags)
+    # set this to the touched-rows traffic instead.
+    optim_bytes: Optional[int] = None
+
+    def add_gemm(self, g: Gemm, has_weight: bool = True) -> None:
+        self.fwd.append(g)
+        if has_weight:
+            self.ig.append(g.transposed_for_ig())
+            self.wg.append(g.transposed_for_wg())
+            self.weight_bytes += g.k * g.n * g.bytes_per_element
+        else:
+            # No weights: both gradient GEMMs belong to the IG phase.
+            self.ig.append(g.transposed_for_ig())
+            self.ig.append(g.transposed_for_wg())
+
+    def phase_cost(self, phase: str, sram_bytes: int) -> PhaseCost:
+        ops = {"fp": self.fwd, "ig": self.ig, "wg": self.wg}[phase]
+        total = PhaseCost()
+        for op in ops:
+            total = total + phase_cost(op, sram_bytes)
+        return total
+
+    def comm(self, phase: str) -> List[CommEvent]:
+        return {"fp": self.comm_fwd, "ig": self.comm_ig, "wg": self.comm_wg}[phase]
+
+
+@dataclasses.dataclass
+class Workload:
+    """Ordered per-node layer list + aggregate footprint inputs."""
+
+    name: str
+    layers: List[LayerSpec]
+    mp: int
+    dp: int
+    per_replica_batch: int
+    seq_len: int
+
+    # ------------------------------------------------------------------ #
+    def total_weight_bytes(self) -> int:
+        return sum(l.weight_bytes * l.repeat for l in self.layers)
+
+    def total_activation_bytes(self) -> int:
+        return sum(l.act_out_bytes * l.repeat for l in self.layers)
+
+    def activation_working_bytes(self) -> int:
+        """Activation Working Memory (§IV-B): intermediates between two
+        consecutive checkpoints ~= the largest single layer's activations."""
+        return max((l.act_out_bytes for l in self.layers), default=0)
+
+    def phase_cost(self, phase: str, sram_bytes: int) -> PhaseCost:
+        total = PhaseCost()
+        for l in self.layers:
+            c = l.phase_cost(phase, sram_bytes)
+            total = total + PhaseCost(c.flops * l.repeat, c.traffic * l.repeat)
+        return total
+
+    def total_flops(self, sram_bytes: int = 1 << 62) -> int:
+        return sum(self.phase_cost(p, sram_bytes).flops for p in ("fp", "ig", "wg"))
+
+
+# ====================================================================== #
+# Transformer-family building blocks (paper Table II, + GQA extension)
+# ====================================================================== #
+
+def _shard(n: int, ways: int) -> int:
+    """Per-node column count when a dimension is sharded ``ways``-way.
+
+    The analytical model shards fractionally (ceil) even when not evenly
+    divisible, as the paper's sub_ff / sub_vocab / per-node-heads terms do.
+    (The runtime falls back to replication instead — parallel/sharding.py —
+    which only matters for the measured dry-run path, not here.)"""
+    if ways <= 1:
+        return n
+    return _ceil_div(n, ways)
+
+
+def _attention_layer(
+    name: str,
+    cfg: ModelConfig,
+    batch: int,
+    seq_q: int,
+    seq_kv: int,
+    mp: int,
+    d_in: Optional[int] = None,
+    d_out: Optional[int] = None,
+) -> LayerSpec:
+    """Self/cross attention block: QKV proj, scores, context, out proj.
+
+    MP sharding: heads split across MP (column-parallel QKV, row-parallel
+    out-proj) -> one blocking all-reduce of the block output in FP and IG.
+    Score/context GEMMs are per-sample per-head (Table II's M=b*seq,
+    N=b*seq entry is read as the per-sample seq x seq GEMM batched over b).
+    """
+    d_model = cfg.d_model
+    d_in = d_in or d_model
+    d_out = d_out or d_model
+    hd = cfg.resolved_head_dim
+    h_local = _shard(cfg.num_heads, mp)
+    kv_local = _shard(cfg.num_kv_heads, mp)
+    tokens = batch * seq_q
+    kv_tokens = batch * seq_kv
+    spec = LayerSpec(name)
+    # Projections
+    spec.add_gemm(Gemm(tokens, d_in, h_local * hd))                 # Q
+    spec.add_gemm(Gemm(kv_tokens, d_in, kv_local * hd))             # K
+    spec.add_gemm(Gemm(kv_tokens, d_in, kv_local * hd))             # V
+    # Scores + context, batched per (sample, local head) (no weights)
+    bh = batch * h_local
+    spec.add_gemm(Gemm(seq_q, hd, seq_kv, batch=bh), has_weight=False)
+    spec.add_gemm(Gemm(seq_q, seq_kv, hd, batch=bh), has_weight=False)
+    # Softmax (element-wise over scores)
+    score_elems = bh * seq_q * seq_kv
+    spec.fwd.append(ExplicitOp(flops=4 * score_elems,
+                               bytes_moved=2 * score_elems * BYTES))
+    spec.ig.append(ExplicitOp(flops=4 * score_elems,
+                              bytes_moved=2 * score_elems * BYTES))
+    # Out projection (row-parallel)
+    spec.add_gemm(Gemm(tokens, h_local * hd, d_out))
+    # Block output all-reduce across MP (Megatron "g"): blocking
+    out_bytes = tokens * d_out * BYTES
+    if mp > 1:
+        spec.comm_fwd.append(CommEvent("all-reduce", out_bytes, "mp", blocking=True))
+        spec.comm_ig.append(CommEvent("all-reduce", tokens * d_in * BYTES, "mp", blocking=True))
+    spec.act_out_bytes = out_bytes + tokens * (h_local + 2 * kv_local) * hd * BYTES
+    return spec
+
+
+def _ffn_layer(name: str, cfg: ModelConfig, tokens: int, mp: int,
+               d_ff: Optional[int] = None) -> LayerSpec:
+    d_ff = d_ff or cfg.d_ff
+    ff_local = _shard(d_ff, mp)
+    spec = LayerSpec(name)
+    spec.add_gemm(Gemm(tokens, cfg.d_model, ff_local))              # up
+    if cfg.activation == "swiglu":
+        spec.add_gemm(Gemm(tokens, cfg.d_model, ff_local))          # gate
+        spec.fwd.append(ExplicitOp(flops=4 * tokens * ff_local,
+                                   bytes_moved=3 * tokens * ff_local * BYTES))
+    else:
+        spec.fwd.append(ExplicitOp(flops=2 * tokens * ff_local,
+                                   bytes_moved=2 * tokens * ff_local * BYTES))
+    spec.add_gemm(Gemm(tokens, ff_local, cfg.d_model))              # down (row-par)
+    out_bytes = tokens * cfg.d_model * BYTES
+    if mp > 1:
+        spec.comm_fwd.append(CommEvent("all-reduce", out_bytes, "mp", blocking=True))
+        spec.comm_ig.append(CommEvent("all-reduce", out_bytes, "mp", blocking=True))
+    spec.act_out_bytes = out_bytes + tokens * ff_local * BYTES
+    return spec
+
+
+def _norm_layer(name: str, cfg: ModelConfig, tokens: int) -> LayerSpec:
+    spec = LayerSpec(name)
+    nbytes = tokens * cfg.d_model * BYTES
+    spec.fwd.append(ExplicitOp(flops=5 * tokens * cfg.d_model, bytes_moved=2 * nbytes))
+    spec.ig.append(ExplicitOp(flops=8 * tokens * cfg.d_model, bytes_moved=3 * nbytes))
+    spec.wg.append(ExplicitOp(flops=2 * tokens * cfg.d_model, bytes_moved=nbytes))
+    spec.weight_bytes = cfg.d_model * BYTES
+    spec.act_out_bytes = nbytes
+    return spec
+
+
+def _moe_layer(name: str, cfg: ModelConfig, tokens: int, mp: int) -> LayerSpec:
+    """MoE FFN.
+
+    EP when num_experts % mp == 0 (experts spread over the MP group; two
+    blocking all-to-alls in FP — dispatch + combine — and two in IG);
+    expert-TP otherwise (each expert's d_ff sharded over MP; all-reduce like
+    a dense FFN).  Matches parallel/sharding.py's runtime rule.
+    """
+    moe = cfg.moe
+    assert moe is not None
+    spec = LayerSpec(name)
+    e = moe.num_experts
+    # Router (replicated)
+    spec.add_gemm(Gemm(tokens, cfg.d_model, e))
+    spec.fwd.append(ExplicitOp(flops=6 * tokens * e,
+                               bytes_moved=2 * tokens * e * BYTES))
+    routed = tokens * moe.top_k
+    use_ep = (e % mp == 0) and mp > 1
+    if use_ep:
+        # Per-node expert compute: capacity-factor share of routed tokens.
+        local_tokens = int(routed / mp * moe.capacity_factor)
+        local_experts = e // mp
+        per_expert = _ceil_div(local_tokens, max(local_experts, 1))
+        mult = 3 if cfg.activation == "swiglu" else 2
+        for _ in range(1):  # aggregate expert GEMMs as one batched GEMM
+            spec.add_gemm(Gemm(per_expert, cfg.d_model, moe.d_ff,
+                               batch=local_experts * (mult - 1)))
+            spec.add_gemm(Gemm(per_expert, moe.d_ff, cfg.d_model,
+                               batch=local_experts))
+        a2a = routed * cfg.d_model * BYTES / mp  # per-node send volume
+        for comm in (spec.comm_fwd, spec.comm_ig):
+            comm.append(CommEvent("all-to-all", int(a2a), "mp", blocking=True))
+            comm.append(CommEvent("all-to-all", int(a2a), "mp", blocking=True))
+    else:
+        # Expert-TP: every expert's hidden dim sharded over MP.
+        ff_local = _shard(moe.d_ff, mp)
+        per_expert = _ceil_div(routed, e)
+        mult = 3 if cfg.activation == "swiglu" else 2
+        spec.add_gemm(Gemm(per_expert, cfg.d_model, ff_local,
+                           batch=e * (mult - 1)))
+        spec.add_gemm(Gemm(per_expert, ff_local, cfg.d_model, batch=e))
+        out_bytes = tokens * cfg.d_model * BYTES
+        if mp > 1:
+            spec.comm_fwd.append(CommEvent("all-reduce", out_bytes, "mp", True))
+            spec.comm_ig.append(CommEvent("all-reduce", out_bytes, "mp", True))
+    if moe.shared_expert:
+        ff_local = _shard(moe.shared_d_ff, mp)
+        mult = 3 if cfg.activation == "swiglu" else 2
+        spec.add_gemm(Gemm(tokens, cfg.d_model, ff_local, batch=mult - 1))
+        spec.add_gemm(Gemm(tokens, ff_local, cfg.d_model))
+    spec.act_out_bytes = (routed + tokens) * cfg.d_model * BYTES
+    return spec
+
+
+def _ssm_layer(name: str, cfg: ModelConfig, tokens: int, mp: int) -> LayerSpec:
+    """Mamba2 SSD block as chunked GEMMs (state-space duality).
+
+    Heads shard over MP (in_proj column-parallel, out_proj row-parallel ->
+    one blocking all-reduce per phase, like attention)."""
+    ssm = cfg.ssm
+    assert ssm is not None
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = ssm.state_dim
+    p = ssm.head_dim
+    heads = cfg.ssm_heads
+    h_local = _shard(heads, mp)
+    di_local = h_local * p
+    lc = min(ssm.chunk_size, tokens)
+    nchunks = _ceil_div(tokens, lc)
+    spec = LayerSpec(name)
+    # in_proj: z, x, B, C, dt  (column-parallel)
+    n_in = 2 * di_local + 2 * ssm.ngroups * n + h_local
+    spec.add_gemm(Gemm(tokens, d, n_in))
+    # depthwise conv on (x, B, C)
+    conv_ch = di_local + 2 * ssm.ngroups * n
+    spec.fwd.append(ExplicitOp(flops=2 * tokens * conv_ch * ssm.conv_width,
+                               bytes_moved=2 * tokens * conv_ch * BYTES))
+    spec.ig.append(ExplicitOp(flops=4 * tokens * conv_ch * ssm.conv_width,
+                              bytes_moved=3 * tokens * conv_ch * BYTES))
+    # SSD chunked scan, per local head x chunk:
+    #   G = C @ B^T            (lc x n) @ (n x lc)
+    #   Y_intra = (G * L) @ X  (lc x lc) @ (lc x p)
+    #   S = B^T @ X            (n x lc) @ (lc x p)     [state build]
+    #   Y_inter = C @ S_prev   (lc x n) @ (n x p)      [state apply]
+    bhc = h_local * nchunks
+    spec.add_gemm(Gemm(lc, n, lc, batch=bhc), has_weight=False)
+    spec.add_gemm(Gemm(lc, lc, p, batch=bhc), has_weight=False)
+    spec.add_gemm(Gemm(n, lc, p, batch=bhc), has_weight=False)
+    spec.add_gemm(Gemm(lc, n, p, batch=bhc), has_weight=False)
+    # gated norm + out_proj (row-parallel)
+    spec.fwd.append(ExplicitOp(flops=7 * tokens * di_local,
+                               bytes_moved=3 * tokens * di_local * BYTES))
+    spec.add_gemm(Gemm(tokens, di_local, d))
+    out_bytes = tokens * d * BYTES
+    if mp > 1:
+        spec.comm_fwd.append(CommEvent("all-reduce", out_bytes, "mp", True))
+        spec.comm_ig.append(CommEvent("all-reduce", out_bytes, "mp", True))
+    spec.act_out_bytes = out_bytes + tokens * (n_in + di_local) * BYTES
+    return spec
+
+
+def _embedding_layers(cfg: ModelConfig, tokens: int, mp: int):
+    """Vocab-parallel input lookup + output projection (Table II rows 1/14)."""
+    sub_vocab = _shard(cfg.padded_vocab, mp)
+    d = cfg.d_model
+    inp = LayerSpec("input_embedding")
+    inp.fwd.append(ExplicitOp(flops=0, bytes_moved=2 * tokens * d * BYTES))
+    inp.wg.append(ExplicitOp(flops=tokens * d, bytes_moved=2 * tokens * d * BYTES))
+    inp.weight_bytes = sub_vocab * d * BYTES
+    inp.act_out_bytes = tokens * d * BYTES
+    if mp > 1:
+        # partial lookup (masked vocab shard) -> all-reduce of embeddings
+        inp.comm_fwd.append(CommEvent("all-reduce", tokens * d * BYTES, "mp", True))
+    out = LayerSpec("output_embedding")
+    out.add_gemm(Gemm(tokens, d, sub_vocab))
+    if cfg.tie_embeddings:
+        out.weight_bytes = 0  # shared with input table
+    # vocab-parallel softmax/CE: all-reduce of per-token scalars (fp32)
+    if mp > 1:
+        out.comm_fwd.append(CommEvent("all-reduce", tokens * 4, "mp", True))
+        out.comm_ig.append(CommEvent("all-reduce", tokens * d * BYTES, "mp", True))
+    out.act_out_bytes = tokens * sub_vocab * BYTES
+    return inp, out
+
+
+def _dp_grad_events(layers: Sequence[LayerSpec], dp: int) -> None:
+    """Attach the WG-phase non-blocking DP gradient collectives (§III-C3).
+
+    ZeRO-2 (os+g) distributes optimizer states and gradients across DP with
+    no extra communication volume vs. a plain all-reduce (paper §IV-B), so
+    the event stays an all-reduce of the per-node fp16 gradient bytes."""
+    if dp <= 1:
+        return
+    for l in layers:
+        if l.weight_bytes:
+            l.comm_wg.append(
+                CommEvent("all-reduce", l.weight_bytes, "dp", blocking=False))
+
+
+# ====================================================================== #
+# Public decompositions
+# ====================================================================== #
+
+def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
+              override_batch: Optional[int] = None,
+              override_seq: Optional[int] = None) -> Workload:
+    """ModelConfig + shape + (MP, DP) -> per-node Workload."""
+    batch = override_batch if override_batch is not None else shape.global_batch
+    seq = override_seq if override_seq is not None else shape.seq_len
+    b_local = max(1, batch // max(dp, 1))
+    decode = shape.kind == "decode"
+    # Decode: one new query token per sample attending to a seq-long cache.
+    seq_q = 1 if decode else seq
+    layers: List[LayerSpec] = []
+
+    if cfg.family == "encdec":
+        assert cfg.encdec is not None
+        src = int(seq * cfg.encdec.source_frac)
+        tgt = seq - src
+        tgt_q = 1 if decode else tgt
+        t_src, t_tgt = b_local * src, b_local * tgt_q
+        inp, out = _embedding_layers(cfg, t_tgt, mp)
+        layers.append(inp)
+        if not decode:  # decode reuses the precomputed encoder output
+            enc = [
+                _norm_layer("enc_norm", cfg, t_src),
+                _attention_layer("enc_self_attn", cfg, b_local, src, src, mp),
+                _ffn_layer("enc_ffn", cfg, t_src, mp),
+            ]
+            for l in enc:
+                l.repeat = cfg.encdec.encoder_layers
+            layers += enc
+        dec = [
+            _norm_layer("dec_norm", cfg, t_tgt),
+            _attention_layer("dec_self_attn", cfg, b_local, tgt_q, tgt, mp),
+            _attention_layer("dec_cross_attn", cfg, b_local, tgt_q, src, mp),
+            _ffn_layer("dec_ffn", cfg, t_tgt, mp),
+        ]
+        for l in dec:
+            l.repeat = cfg.encdec.decoder_layers
+        layers += dec
+        layers.append(out)
+    else:
+        eff_seq, eff_q = seq, seq_q
+        if cfg.family == "vlm":
+            assert cfg.vision is not None
+            eff_seq = seq + cfg.vision.num_patches
+            eff_q = 1 if decode else eff_seq
+        tokens = b_local * eff_q
+        inp, out = _embedding_layers(cfg, tokens, mp)
+        layers.append(inp)
+        for i in range(cfg.num_layers):
+            if cfg.family in ("ssm", "hybrid"):
+                layers.append(_norm_layer(f"norm_{i}", cfg, tokens))
+                layers.append(_ssm_layer(f"ssm_{i}", cfg, tokens, mp))
+                if (cfg.family == "hybrid" and cfg.hybrid is not None
+                        and (i + 1) % cfg.hybrid.attn_every == 0):
+                    d_in = (2 * cfg.d_model
+                            if cfg.hybrid.attn_concat_embedding else cfg.d_model)
+                    layers.append(_attention_layer(
+                        f"shared_attn_{i}", cfg, b_local, eff_q, eff_seq, mp,
+                        d_in=d_in, d_out=cfg.d_model))
+            elif cfg.family == "moe":
+                assert cfg.moe is not None
+                layers.append(_norm_layer(f"norm_attn_{i}", cfg, tokens))
+                layers.append(_attention_layer(
+                    f"attn_{i}", cfg, b_local, eff_q, eff_seq, mp))
+                layers.append(_norm_layer(f"norm_ffn_{i}", cfg, tokens))
+                is_moe = (i % cfg.moe.moe_every) == (cfg.moe.moe_every - 1)
+                if is_moe:
+                    layers.append(_moe_layer(f"moe_{i}", cfg, tokens, mp))
+                else:
+                    layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
+            else:  # dense / vlm
+                layers.append(_norm_layer(f"norm_attn_{i}", cfg, tokens))
+                layers.append(_attention_layer(
+                    f"attn_{i}", cfg, b_local, eff_q, eff_seq, mp))
+                layers.append(_norm_layer(f"norm_ffn_{i}", cfg, tokens))
+                layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
+        layers.append(out)
+
+    _dp_grad_events(layers, dp)
+    return Workload(
+        name=f"{cfg.arch_id}@{shape.name}[mp{mp}_dp{dp}]",
+        layers=layers, mp=mp, dp=dp,
+        per_replica_batch=b_local, seq_len=seq,
+    )
+
+
+def decompose_dlrm(dlrm_cfg, global_batch: int, nodes: int) -> Workload:
+    """DLRM hybrid strategy (§V-C, Rashidi et al.): embedding tables sharded
+    across all nodes (table-wise MP, all-to-all FP/IG), MLPs data-parallel
+    (all-reduce WG)."""
+    b_local = max(1, global_batch // nodes)
+    e = dlrm_cfg.emb_dim
+    layers: List[LayerSpec] = []
+
+    # Embedding lookup: each node owns tables/nodes tables, does lookups for
+    # the *global* batch on its shard, then all-to-alls pooled vectors.
+    local_tables = max(1, dlrm_cfg.num_tables // nodes) \
+        if dlrm_cfg.num_tables >= nodes else dlrm_cfg.num_tables / nodes
+    emb = LayerSpec("embedding_lookup")
+    lookup_rows = int(global_batch * local_tables * dlrm_cfg.lookups_per_table)
+    emb.fwd.append(ExplicitOp(flops=lookup_rows * e,  # pooled sum
+                              bytes_moved=2 * lookup_rows * e * 4))
+    emb.wg.append(ExplicitOp(flops=lookup_rows * e,
+                             bytes_moved=2 * lookup_rows * e * 4))
+    emb.weight_bytes = int(local_tables * dlrm_cfg.rows_per_table * e * 4)
+    # Sparse row-wise Adagrad: only touched rows are updated.
+    emb.optim_bytes = int(lookup_rows * e * 12)
+    a2a = int(global_batch * local_tables * e * 4)
+    # DLRM's node group is consecutive ranks (fills pods first) -> "mp" scope.
+    emb.comm_fwd.append(CommEvent("all-to-all", a2a, "mp", blocking=True))
+    emb.comm_ig.append(CommEvent("all-to-all", a2a, "mp", blocking=True))
+    emb.act_out_bytes = a2a
+    layers.append(emb)
+
+    def _mlp(name: str, dims: Sequence[int]) -> None:
+        for j, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            spec = LayerSpec(f"{name}_{j}")
+            spec.add_gemm(Gemm(b_local, a, b, bytes_per_element=4))
+            spec.act_out_bytes = b_local * b * 4
+            layers.append(spec)
+
+    _mlp("bottom_mlp", (dlrm_cfg.num_dense_features,) + dlrm_cfg.bottom_mlp)
+    n_feat = dlrm_cfg.num_tables + 1
+    interact = LayerSpec("feature_interaction")
+    interact.fwd.append(ExplicitOp(
+        flops=2 * b_local * n_feat * n_feat * e,
+        bytes_moved=2 * b_local * n_feat * e * 4))
+    interact.ig.append(ExplicitOp(
+        flops=4 * b_local * n_feat * n_feat * e,
+        bytes_moved=3 * b_local * n_feat * e * 4))
+    interact.act_out_bytes = b_local * (n_feat * (n_feat - 1) // 2) * 4
+    layers.append(interact)
+    top_in = n_feat * (n_feat - 1) // 2 + dlrm_cfg.bottom_mlp[-1]
+    _mlp("top_mlp", (top_in,) + dlrm_cfg.top_mlp)
+
+    # DP all-reduce for MLP grads only (tables update locally).
+    for l in layers:
+        if l.weight_bytes and not l.name.startswith("embedding"):
+            l.comm_wg.append(CommEvent("all-reduce", l.weight_bytes, "mp", False))
+
+    return Workload(name=f"{dlrm_cfg.arch_id}[n{nodes}]", layers=layers,
+                    mp=nodes, dp=nodes, per_replica_batch=b_local,
+                    seq_len=1)

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (resumable, shardable)."""
+from repro.data.pipeline import DataConfig, DataIterator, dlrm_batch, lm_batch  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash_attention — causal GQA flash attention (VMEM tiles, MXU-aligned)
+ssd_scan        — Mamba2 SSD chunked scan (state carried in VMEM scratch)
+rmsnorm         — fused norm
+embedding_bag   — pooled DLRM lookups (explicit-DMA gather)
+
+ops.py: jit'd wrappers (native on TPU, interpret-mode/ref elsewhere).
+ref.py: pure-jnp oracles for the allclose tests.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

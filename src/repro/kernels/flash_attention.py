@@ -1,0 +1,126 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+TPU-native adaptation: the GPU flash-attention algorithm is re-tiled for
+VMEM + MXU. Query/key blocks are MXU-aligned (multiples of 128 on the
+contraction dims); the softmax running statistics (m, l) and the fp32
+accumulator live in VMEM scratch that persists across the sequential
+kv-block grid dimension (TPU grids execute in order, unlike CUDA thread
+blocks — this replaces the GPU kernel's shared-memory reduction).
+
+GQA is handled in the index map: the kv-head block index is derived from
+the query-head grid index (``h // group``), so KV is never materialized
+per-query-head in HBM.
+
+Layout: q (b, h, sq, d), k/v (b, hkv, skv, d) -> out (b, h, sq, d).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  sq_valid: int, skv_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # Skip fully-masked blocks (strictly above the causal diagonal).
+    run = (k_start <= q_start + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0]                       # (bq, d)
+        k = k_ref[0, 0]                       # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv_valid                # kv padding
+        if causal:
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 512,
+                        block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """q: (b, h, sq, d); k/v: (b, hkv, skv, d). Returns (b, h, sq, d)."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    group = h // hkv
+    bq = min(block_q, max(1, sq))
+    bk = min(block_k, max(1, skv))
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = qp.shape[2] // bq
+    nk = kp.shape[2] // bk
+    grid = (b, h, nq, nk)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        sq_valid=sq, skv_valid=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, group=group:
+                         (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, group=group:
+                         (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),     # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq, :]

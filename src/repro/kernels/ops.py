@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels lower natively; everywhere else (this CPU container, the
+dry-run) they run in ``interpret=True`` mode or fall back to the jnp oracle.
+``use_pallas()`` picks the default; every op takes an explicit override.
+
+The model code calls these through ``repro.models`` only where the fusion
+matters (attention inner loop, SSD scan); see DESIGN.md §Kernels for the
+integration policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def use_pallas() -> bool:
+    """Native Pallas on TPU; interpret-mode Pallas elsewhere is opt-in
+    (slow on CPU — tests enable it explicitly)."""
+    return on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    impl: Optional[str] = None) -> jax.Array:
+    """q: (b, h, sq, d), k/v: (b, hkv, skv, d)."""
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "pallas":
+        return flash_attention_fwd(q, k, v, causal=causal,
+                                   interpret=not on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+        cmat: jax.Array, impl: Optional[str] = None):
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "pallas":
+        return _ssd_kernel(x, dt, a, bmat, cmat, interpret=not on_tpu())
+    return ref.ssd_ref(x, dt, a, bmat, cmat)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,
+            impl: Optional[str] = None) -> jax.Array:
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "pallas":
+        return _rmsnorm_kernel(x, gamma, eps=eps, interpret=not on_tpu())
+    return ref.rmsnorm_ref(x, gamma, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def embedding_bag(tables: jax.Array, indices: jax.Array,
+                  impl: Optional[str] = None) -> jax.Array:
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "pallas":
+        return _bag_kernel(tables, indices, interpret=not on_tpu())
+    return ref.embedding_bag_ref(tables, indices)

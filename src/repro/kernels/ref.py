@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the *simplest correct* implementations — the SSD
+oracle is the literal per-step recurrence, not the chunked algorithm — so
+kernel tests catch algorithmic errors, not shared bugs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (b, h, sq, d); k/v: (b, hkv, skv, d)."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+            bmat: jax.Array, cmat: jax.Array):
+    """Literal SSM recurrence, one step at a time.
+
+    x: (b, h, s, p); dt: (b, h, s); a: (h,); bmat/cmat: (b, h, s, n).
+    Returns (y: (b, h, s, p), final_state: (b, h, p, n))."""
+    b, h, s, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                      # (b,h,p),(b,h),(b,h,n),(b,h,n)
+        da = jnp.exp(dtt * a)                      # (b, h)
+        upd = jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        state = state * da[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    xs = (x.transpose(2, 0, 1, 3).astype(jnp.float32),
+          dt.transpose(2, 0, 1).astype(jnp.float32),
+          bmat.transpose(2, 0, 1, 3).astype(jnp.float32),
+          cmat.transpose(2, 0, 1, 3).astype(jnp.float32))
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), final
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps))
+            * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_bag_ref(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """tables: (T, R, E); indices: (B, T, L) -> (B, T, E)."""
+    gathered = jax.vmap(
+        lambda tbl, idx: tbl[idx], in_axes=(0, 1), out_axes=1
+    )(tables, indices)                             # (B, T, L, E)
+    return gathered.sum(axis=2)

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: importing repro.launch.dryrun sets XLA_FLAGS (512 host devices) as its
+first statement — import it only in dedicated processes, never from tests.
+"""

@@ -1,0 +1,30 @@
+"""Elastic restart utilities.
+
+On a real cluster, a restart after node failure may come up with a
+different healthy-slice size. The pieces that make this work live in:
+
+  * checkpoint/checkpointer.py — leaves stored unsharded; ``restore`` takes
+    the NEW mesh's shardings and device_puts each leaf under them,
+  * data/pipeline.py — ``DataIterator.reshard`` re-splits the same
+    deterministic stream across the new DP degree,
+  * train/trainer.py — straggler watchdog + preemption flush.
+
+``remesh_state`` is the one-call wrapper the launcher uses.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.parallel.policy import MemoryPlan
+from repro.train.train_step import state_shardings
+
+
+def remesh_state(cfg: ModelConfig, plan: MemoryPlan, manager: CheckpointManager,
+                 state_template, new_mesh):
+    """Restore the latest checkpoint onto a different mesh."""
+    sh = state_shardings(cfg, plan, state_template, new_mesh)
+    state, extra = manager.restore_latest(target=state_template, shardings=sh)
+    return state, extra, sh

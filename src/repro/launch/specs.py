@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere: batches, params, optimizer states, and
+decode caches are all abstract (jax.eval_shape / ShapeDtypeStruct), so the
+dry-run can lower+compile full-size models on a 512-device host mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models import get_model
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Model inputs for one cell (modality frontends stubbed as embeddings)."""
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _sds((gb, s), I32), "targets": _sds((gb, s), I32)}
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((gb, cfg.vision.num_patches, cfg.d_model),
+                                    BF16)
+        if cfg.family == "encdec":
+            src = int(s * cfg.encdec.source_frac)
+            batch["tokens"] = _sds((gb, s - src), I32)
+            batch["targets"] = _sds((gb, s - src), I32)
+            batch["frames"] = _sds((gb, src, cfg.d_model), BF16)
+        return batch
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((gb, s), I32)}
+        if cfg.family == "vlm":
+            out["patches"] = _sds((gb, cfg.vision.num_patches, cfg.d_model),
+                                  BF16)
+        if cfg.family == "encdec":
+            src = int(s * cfg.encdec.source_frac)
+            out["tokens"] = _sds((gb, s - src), I32)
+            out["frames"] = _sds((gb, src, cfg.d_model), BF16)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _sds((gb, 1), I32)}
+
+
+def abstract_params(cfg: ModelConfig, dtype=BF16):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, dtype=BF16):
+    model = get_model(cfg)
+    gb, s = shape.global_batch, shape.seq_len
+    extra = s if cfg.family == "vlm" and cfg.vision else 0
+    max_seq = s + (cfg.vision.num_patches if cfg.family == "vlm" else 0)
+    if shape.kind == "decode":
+        max_seq += 1
+    kw = {}
+    if cfg.family == "encdec":
+        kw["src_len"] = int(s * cfg.encdec.source_frac)
+        max_seq = s - kw["src_len"] + 1
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, gb, max_seq, dtype=dtype, **kw))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference forward passes
+    (N = active params, D = tokens processed this step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: 1 token per sequence

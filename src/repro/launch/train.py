@@ -1,0 +1,68 @@
+"""End-to-end training driver.
+
+    python -m repro.launch.train --arch smollm-135m --steps 300 \
+        --reduced --ckpt-dir /tmp/ckpt --resume auto
+
+On this CPU container use ``--reduced`` (the same code path lowers the full
+configs on the production mesh via dryrun.py). Auto-resume restores the
+latest checkpoint — including the data-iterator cursor — and an elastic
+restart onto a different device count re-shards state transparently.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, DataIterator
+from repro.parallel import plan_memory
+from repro.train import (
+    AdamWConfig,
+    Trainer,
+    TrainerConfig,
+    init_train_state,
+    make_train_step,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    plan = plan_memory(cfg, tp=1, dp=1)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 1),
+                          state_dtype=plan.opt_dtype,
+                          use_master=plan.use_master)
+    rng = jax.random.PRNGKey(args.seed)
+    state = init_train_state(cfg, plan, rng, opt_cfg, dtype=jnp.float32)
+    step_fn = jax.jit(make_train_step(cfg, plan, opt_cfg))
+    data = DataIterator(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed))
+    trainer = Trainer(step_fn, state, data, TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_interval=args.ckpt_interval, log_interval=10, seed=args.seed))
+    if args.resume == "auto":
+        resumed = trainer.try_resume()
+        print(f"resume: {'restored step ' + str(trainer.step) if resumed else 'fresh start'}")
+    summary = trainer.run(rng)
+    print("summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

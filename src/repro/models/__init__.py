@@ -1,0 +1,23 @@
+"""Model registry: family -> implementation module.
+
+Every module implements the same functional API:
+  init_params(key, cfg, dtype) -> params
+  forward(params, cfg, tokens, **modality_kwargs) -> (logits, aux, cache)
+  loss(params, cfg, batch) -> (scalar, metrics)
+  init_cache(cfg, batch, max_seq, dtype) -> cache      (decoder archs)
+  prefill(params, cfg, tokens, cache, **kw) -> (logits, cache)
+  decode_step(params, cfg, cache, tokens) -> (logits, cache)
+"""
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, mamba, transformer
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family in ("ssm", "hybrid"):
+        return mamba
+    if cfg.family == "encdec":
+        return encdec
+    raise ValueError(f"unknown family {cfg.family!r}")

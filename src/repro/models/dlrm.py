@@ -1,0 +1,80 @@
+"""DLRM — the paper's §V-C case-study model, runnable at reduced scale.
+
+Bottom MLP over dense features, embedding-bag lookups over sparse features,
+pairwise feature interaction, top MLP -> CTR logit. The full 1.2T config is
+exercised analytically (core.workload.decompose_dlrm); this module provides
+the real JAX model for smoke tests / examples and the embedding-bag kernel's
+integration point.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dlrm_1p2t import DLRMConfig
+from repro.models.common import dense_init, embed_init
+
+
+def init_params(key, cfg: DLRMConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 4)
+
+    def mlp(k, dims):
+        ks = jax.random.split(k, len(dims) - 1)
+        return [{"w": dense_init(ki, (a, b), dtype),
+                 "b": jnp.zeros((b,), dtype)}
+                for ki, a, b in zip(ks, dims[:-1], dims[1:])]
+
+    n_feat = cfg.num_tables + 1
+    top_in = n_feat * (n_feat - 1) // 2 + cfg.bottom_mlp[-1]
+    return {
+        "tables": embed_init(
+            keys[0], (cfg.num_tables, cfg.rows_per_table, cfg.emb_dim), dtype),
+        "bottom": mlp(keys[1], (cfg.num_dense_features,) + cfg.bottom_mlp),
+        "top": mlp(keys[2], (top_in,) + cfg.top_mlp),
+    }
+
+
+def _run_mlp(layers, x, final_linear=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if not (final_linear and i == len(layers) - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def embedding_bag(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """Pooled (sum) lookups. tables: (T, R, E); indices: (b, T, L) int32.
+
+    Returns (b, T, E). This is the jnp oracle mirrored by the Pallas
+    ``embedding_bag`` kernel."""
+    gathered = jax.vmap(
+        lambda tbl, idx: tbl[idx], in_axes=(0, 1), out_axes=1
+    )(tables, indices)                     # (b, T, L, E)
+    return gathered.sum(axis=2)
+
+
+def forward(params: dict, cfg: DLRMConfig, dense: jax.Array,
+            sparse: jax.Array) -> jax.Array:
+    """dense: (b, num_dense); sparse: (b, T, L) int32 -> logits (b,)."""
+    bot = _run_mlp(params["bottom"], dense)            # (b, E)
+    emb = embedding_bag(params["tables"], sparse)      # (b, T, E)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (b, T+1, E)
+    inter = jnp.einsum("bie,bje->bij", feats, feats)
+    iu = jnp.triu_indices(feats.shape[1], k=1)
+    inter_flat = inter[:, iu[0], iu[1]]                # (b, nC2)
+    top_in = jnp.concatenate([inter_flat, bot], axis=-1)
+    return _run_mlp(params["top"], top_in, final_linear=True)[:, 0]
+
+
+def loss(params: dict, cfg: DLRMConfig, batch: dict) -> Tuple[jax.Array, dict]:
+    """batch: {dense, sparse, labels (b,) in {0,1}} -> BCE loss."""
+    logits = forward(params, cfg, batch["dense"], batch["sparse"])
+    labels = batch["labels"].astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    bce = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return bce, {"bce": bce}

@@ -1,0 +1,257 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings ``frames: (b, src_len, d_model)`` (what the
+w2v-BERT conv feature extractor would produce). The transformer backbone —
+24-layer encoder, 24-layer decoder with self+cross attention — is real.
+
+Serving: ``prefill`` encodes the source and precomputes per-layer cross-
+attention K/V once; ``decode_step`` then runs the decoder with a growing
+self-attention cache against the frozen cross K/V (standard enc-dec serving).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    DEFAULT_DTYPE,
+    attention_block,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    ffn_block,
+    init_attention_params,
+    init_ffn_params,
+    rms_norm,
+)
+from repro.models.transformer import apply_remat
+
+
+def _enc_layers(cfg: ModelConfig) -> int:
+    assert cfg.encdec is not None
+    return cfg.encdec.encoder_layers
+
+
+def _dec_layers(cfg: ModelConfig) -> int:
+    assert cfg.encdec is not None
+    return cfg.encdec.decoder_layers
+
+
+# --------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------- #
+
+def init_params(key, cfg: ModelConfig, dtype=DEFAULT_DTYPE) -> dict:
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention_params(k1, cfg.d_model, cfg.d_model,
+                                          cfg.num_heads, cfg.num_kv_heads,
+                                          hd, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "ffn": init_ffn_params(k2, cfg.d_model, cfg.d_ff,
+                                   cfg.activation, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "self_attn": init_attention_params(k1, cfg.d_model, cfg.d_model,
+                                               cfg.num_heads, cfg.num_kv_heads,
+                                               hd, dtype),
+            "lnx": jnp.ones((cfg.d_model,), dtype),
+            "cross_attn": init_attention_params(k2, cfg.d_model, cfg.d_model,
+                                                cfg.num_heads, cfg.num_kv_heads,
+                                                hd, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "ffn": init_ffn_params(k3, cfg.d_model, cfg.d_ff,
+                                   cfg.activation, dtype),
+        }
+
+    return {
+        "embed": embed_init(keys[0], (cfg.padded_vocab, cfg.d_model), dtype),
+        "encoder": jax.vmap(enc_layer)(
+            jax.random.split(keys[1], _enc_layers(cfg))),
+        "decoder": jax.vmap(dec_layer)(
+            jax.random.split(keys[2], _dec_layers(cfg))),
+        "ln_enc": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "head": dense_init(keys[3], (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Encoder / decoder stacks
+# --------------------------------------------------------------------- #
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           remat: Optional[str] = "dots") -> jax.Array:
+    hd = cfg.resolved_head_dim
+    frames = frames.astype(params["embed"].dtype)
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn, _ = attention_block(
+            lp["attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+            rope_fraction=cfg.rope_fraction, rope_theta=cfg.rope_theta,
+            causal=False)
+        x = x + attn
+        x = x + ffn_block(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                          cfg.activation)
+        return x
+
+    layer = apply_remat(layer, remat)
+
+    def body(x, lp):
+        return layer(x, lp), None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_stack(params: dict, cfg: ModelConfig, x: jax.Array,
+                 enc_out: Optional[jax.Array],
+                 cache: Optional[dict] = None,
+                 remat: Optional[str] = "dots"
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """Decoder trunk. Either ``enc_out`` (training: cross-KV computed on the
+    fly) or ``cache`` (serving: self cache + frozen cross-KV) is given."""
+    hd = cfg.resolved_head_dim
+
+    def layer(x, scanned):
+        lp = scanned["layer"]
+        self_kv = None
+        cross_kv = None
+        if scanned.get("self_k") is not None:
+            self_kv = {"k": scanned["self_k"], "v": scanned["self_v"],
+                       "pos": scanned["pos"]}
+            cross_kv = {"k": scanned["cross_k"], "v": scanned["cross_v"],
+                        "pos": jnp.zeros((), jnp.int32)}
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn, new_self = attention_block(
+            lp["self_attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+            rope_fraction=cfg.rope_fraction, rope_theta=cfg.rope_theta,
+            causal=True, kv_cache=self_kv)
+        x = x + attn
+        h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        attn, _ = attention_block(
+            lp["cross_attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+            rope_fraction=0.0, causal=False,
+            kv_cache=cross_kv, xkv=enc_out,
+            precomputed_kv=cross_kv is not None)
+        x = x + attn
+        x = x + ffn_block(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                          cfg.activation)
+        return x, new_self
+
+    scanned = {"layer": params["decoder"]}
+    if cache is not None:
+        scanned["self_k"] = cache["self_k"]
+        scanned["self_v"] = cache["self_v"]
+        scanned["cross_k"] = cache["cross_k"]
+        scanned["cross_v"] = cache["cross_v"]
+        L = cache["self_k"].shape[0]
+        scanned["pos"] = jnp.broadcast_to(cache["pos"],
+                                          (L,) + cache["pos"].shape)
+        layer_fn = layer
+    else:
+        layer_fn = apply_remat(lambda x, sc: layer(x, sc)[0], remat)
+
+    if cache is None:
+        def body(x, sc):
+            return layer_fn(x, sc), None
+        x, _ = jax.lax.scan(body, x, scanned)
+        new_cache = None
+    else:
+        def body(x, sc):
+            x, new_self = layer(x, sc)
+            return x, new_self
+        x, selfs = jax.lax.scan(body, x, scanned)
+        new_cache = dict(cache)
+        new_cache["self_k"] = selfs["k"]
+        new_cache["self_v"] = selfs["v"]
+        new_cache["pos"] = cache["pos"] + x.shape[1]
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+# --------------------------------------------------------------------- #
+# Public API
+# --------------------------------------------------------------------- #
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            frames: jax.Array, remat: Optional[str] = "dots"
+            ) -> Tuple[jax.Array, jax.Array, None]:
+    enc_out = encode(params, cfg, frames, remat)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, _ = decode_stack(params, cfg, x, enc_out, remat=remat)
+    return x @ params["head"], jnp.zeros((), jnp.float32), None
+
+
+def loss(params: dict, cfg: ModelConfig, batch: dict,
+         remat: Optional[str] = "dots") -> Tuple[jax.Array, dict]:
+    logits, aux, _ = forward(params, cfg, batch["tokens"],
+                             frames=batch["frames"], remat=remat)
+    ce = cross_entropy_loss(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=DEFAULT_DTYPE, src_len: int = 0) -> dict:
+    hd = cfg.resolved_head_dim
+    L = _dec_layers(cfg)
+    return {
+        "self_k": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "self_v": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, src_len, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, src_len, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def precompute_cross_kv(params: dict, cfg: ModelConfig,
+                        enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-decoder-layer cross K/V of the encoder output: (L, b, src, hkv, d)."""
+    hd = cfg.resolved_head_dim
+    b, src, _ = enc_out.shape
+
+    def one(lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+            b, src, cfg.num_kv_heads, hd)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+            b, src, cfg.num_kv_heads, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["decoder"])
+    return ks, vs
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+            frames: jax.Array) -> Tuple[jax.Array, dict]:
+    enc_out = encode(params, cfg, frames, remat=None)
+    ck, cv = precompute_cross_kv(params, cfg, enc_out)
+    cache = dict(cache)
+    cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, cache = decode_stack(params, cfg, x, None, cache=cache, remat=None)
+    return (x @ params["head"])[:, -1:, :], cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, cache = decode_stack(params, cfg, x, None, cache=cache, remat=None)
+    return x @ params["head"], cache

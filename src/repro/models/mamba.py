@@ -1,0 +1,489 @@
+"""Mamba2 (SSD, state-space duality) and Zamba2-style hybrid models.
+
+SSD chunked algorithm (Dao & Gu, arXiv:2405.21060): the sequence is split
+into chunks of length Q; within a chunk the recurrence is computed as a
+masked "attention" (C B^T * L) @ X GEMM; across chunks a small state
+recurrence (H, P, N) is carried by lax.scan. This maps the SSM onto MXU
+GEMMs — the TPU-native adaptation of the paper's compute model — and is the
+jnp oracle for the Pallas ``ssd_scan`` kernel.
+
+Zamba2 hybrid: a Mamba2 trunk where ONE shared attention block (one set of
+weights) is applied every ``attn_every`` layers on concat(h, initial_emb).
+
+Decode carries (conv_state, ssm_state) per layer — O(1) in context length,
+which is why the SSM/hybrid archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    DEFAULT_DTYPE,
+    attention_block,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    ffn_block,
+    init_attention_params,
+    init_ffn_params,
+    rms_norm,
+)
+from repro.models.transformer import apply_remat
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    di = cfg.d_inner
+    heads = cfg.ssm_heads
+    n_in = 2 * di + 2 * ssm.ngroups * ssm.state_dim + heads
+    conv_ch = di + 2 * ssm.ngroups * ssm.state_dim
+    return ssm, di, heads, n_in, conv_ch
+
+
+# --------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------- #
+
+def _init_ssm_layer(key, cfg: ModelConfig, dtype):
+    """Projections are stored per component (z, x, B, C, dt) rather than as
+    one fused in_proj so each can carry its own PartitionSpec: z/x shard
+    over heads (model axis); B/C/dt are small and replicated."""
+    ssm, di, heads, n_in, conv_ch = _dims(cfg)
+    gn = ssm.ngroups * ssm.state_dim
+    ks = jax.random.split(key, 8)
+    conv_scale = 1.0 / math.sqrt(ssm.conv_width)
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "wz": dense_init(ks[0], (cfg.d_model, di), dtype),
+        "wx": dense_init(ks[1], (cfg.d_model, di), dtype),
+        "wB": dense_init(ks[2], (cfg.d_model, gn), dtype),
+        "wC": dense_init(ks[3], (cfg.d_model, gn), dtype),
+        "wdt": dense_init(ks[4], (cfg.d_model, heads), dtype),
+        "conv_wx": dense_init(ks[5], (ssm.conv_width, di), dtype,
+                              scale=conv_scale),
+        "conv_wB": dense_init(ks[6], (ssm.conv_width, gn), dtype,
+                              scale=conv_scale),
+        "conv_wC": dense_init(ks[7], (ssm.conv_width, gn), dtype,
+                              scale=conv_scale),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, cfg.d_model), dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=DEFAULT_DTYPE) -> dict:
+    keys = jax.random.split(key, 6)
+    layer_keys = jax.random.split(keys[1], cfg.num_layers)
+    params = {
+        "embed": embed_init(keys[0], (cfg.padded_vocab, cfg.d_model), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "layers": jax.vmap(lambda k: _init_ssm_layer(k, cfg, dtype))(layer_keys),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[2],
+                                    (cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.family == "hybrid":
+        assert cfg.hybrid is not None
+        d_in = (2 * cfg.d_model if cfg.hybrid.attn_concat_embedding
+                else cfg.d_model)
+        params["shared_attn"] = {
+            "ln": jnp.ones((d_in,), dtype),
+            "attn": init_attention_params(
+                keys[3], d_in, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dtype),
+            "ln_ffn": jnp.ones((cfg.d_model,), dtype),
+            "ffn": init_ffn_params(keys[4], cfg.d_model, cfg.d_ff,
+                                   cfg.activation, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------- #
+# SSD chunked scan (train / prefill)
+# --------------------------------------------------------------------- #
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> L: (..., Q, Q), L[i,j] = sum_{k=j+1..i} dA_k (i>=j),
+    -inf above the diagonal."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over a full sequence.
+
+    x:  (b, s, h, p)    inputs per head
+    dt: (b, s, h)       softplus-ed step sizes (fp32)
+    A:  (h,)            negative decay rates (fp32)
+    B:  (b, s, g, n)    input projections (g groups broadcast over heads)
+    C:  (b, s, g, n)    output projections
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    # reshape to chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    dA = dtc * A  # (b, nc, Q, h)
+    dA_hlast = dA.transpose(0, 1, 3, 2)              # (b, nc, h, Q)
+    cs = jnp.cumsum(dA_hlast, axis=-1)               # within-chunk cumsum
+    L = jnp.exp(_segsum(dA_hlast))                   # (b, nc, h, Q, Q)
+
+    reps = h // g
+    Bh = jnp.repeat(Bc, reps, axis=3) if g != h else Bc  # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cc, reps, axis=3) if g != h else Cc
+
+    dtx = xc * dtc[..., None].astype(xc.dtype)        # (b, nc, Q, h, p)
+
+    # Diagonal (within-chunk) term: masked attention GEMMs.
+    Gm = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh).astype(jnp.float32)
+    M = Gm * L
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(xc.dtype), dtx)
+
+    # Per-chunk end states.
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)         # (b, nc, h, Q)
+    states = jnp.einsum("bcqhn,bchq,bcqhp->bchpn",
+                        Bh, decay_to_end.astype(xc.dtype), dtx)
+
+    # Inter-chunk recurrence over nc chunks.
+    total_decay = jnp.exp(cs[..., -1])                # (b, nc, h)
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def chunk_step(state, inputs):
+        st_c, dec_c = inputs                          # (b,h,p,n), (b,h)
+        prev = state
+        new = prev * dec_c[..., None, None] + st_c.astype(jnp.float32)
+        return new, prev
+
+    (final_state, prevs) = jax.lax.scan(
+        chunk_step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), total_decay.transpose(1, 0, 2)))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)      # (b, nc, h, p, n)
+
+    # Off-diagonal term: contribution of carried state into each position.
+    decay_from_start = jnp.exp(cs).astype(xc.dtype)   # (b, nc, h, Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                       Ch, prev_states.astype(xc.dtype), decay_from_start)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)
+    return y[:, :s], final_state
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 layer (full-sequence and single-step decode)
+# --------------------------------------------------------------------- #
+
+def _project(cfg: ModelConfig, lp: dict, x: jax.Array):
+    """x: (..., d) -> (z, xbc_raw, dt) with xbc_raw = concat(x', B, C)."""
+    z = x @ lp["wz"]
+    xbc = jnp.concatenate([x @ lp["wx"], x @ lp["wB"], x @ lp["wC"]], axis=-1)
+    dt = x @ lp["wdt"]
+    return z, xbc, dt
+
+
+def _conv_weight(lp: dict) -> jax.Array:
+    return jnp.concatenate([lp["conv_wx"], lp["conv_wB"], lp["conv_wC"]],
+                           axis=-1)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (batch, s, ch), w: (width, ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def mamba_layer(lp: dict, cfg: ModelConfig, x: jax.Array,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block. x: (b, s, d).
+
+    Returns (out, final_ssm_state, conv_tail) where conv_tail is the last
+    (width-1) raw xbc columns — the decode conv state."""
+    ssm, di, heads, n_in, conv_ch = _dims(cfg)
+    gn = ssm.ngroups * ssm.state_dim
+    z, xbc_raw, dt = _project(cfg, lp, x)
+    width = ssm.conv_width
+    pad_needed = max(0, width - 1 - xbc_raw.shape[1])
+    tail = xbc_raw[:, -(width - 1):, :]
+    if pad_needed:
+        tail = jnp.pad(tail, ((0, 0), (pad_needed, 0), (0, 0)))
+    xbc = _causal_conv(xbc_raw, _conv_weight(lp), lp["conv_b"])
+    xi, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    b_, s = x.shape[0], x.shape[1]
+    xi = xi.reshape(b_, s, heads, ssm.head_dim)
+    B = B.reshape(b_, s, ssm.ngroups, ssm.state_dim)
+    C = C.reshape(b_, s, ssm.ngroups, ssm.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, state = ssd_chunked(xi, dt, A, B, C, ssm.chunk_size, init_state)
+    y = y + xi * lp["D"][:, None].astype(xi.dtype)
+    y = y.reshape(b_, s, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm_g"], cfg.norm_eps)
+    out = checkpoint_name(y @ lp["out_proj"], "block_out")
+    return out, state, tail
+
+
+def mamba_decode_step(lp: dict, cfg: ModelConfig, x: jax.Array,
+                      conv_state: jax.Array, ssm_state: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step. x: (b, 1, d).
+
+    conv_state: (b, width-1, conv_ch); ssm_state: (b, h, p, n)."""
+    ssm, di, heads, n_in, conv_ch = _dims(cfg)
+    gn = ssm.ngroups * ssm.state_dim
+    z, xbc, dt = _project(cfg, lp, x[:, 0, :])
+    # conv: append new column, take causal window
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)
+    w = _conv_weight(lp)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    xbc = jax.nn.silu(out + lp["conv_b"])
+    new_conv_state = window[:, 1:, :]
+    xi, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    b_ = x.shape[0]
+    xi = xi.reshape(b_, heads, ssm.head_dim)
+    B = B.reshape(b_, ssm.ngroups, ssm.state_dim)
+    C = C.reshape(b_, ssm.ngroups, ssm.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (b, h)
+    A = -jnp.exp(lp["A_log"])
+    dA = jnp.exp(dt * A)                                           # (b, h)
+    reps = heads // ssm.ngroups
+    Bh = jnp.repeat(B, reps, axis=1) if ssm.ngroups != heads else B
+    Ch = jnp.repeat(C, reps, axis=1) if ssm.ngroups != heads else C
+    dtx = xi * dt[..., None].astype(xi.dtype)                      # (b, h, p)
+    new_state = (ssm_state * dA[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32),
+                              dtx.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), new_state)
+    y = y.astype(xi.dtype) + xi * lp["D"][:, None].astype(xi.dtype)
+    y = y.reshape(b_, di)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm_g"], cfg.norm_eps)
+    out = (y @ lp["out_proj"])[:, None, :]
+    return out, new_conv_state, new_state
+
+
+# --------------------------------------------------------------------- #
+# Shared attention block (zamba2)
+# --------------------------------------------------------------------- #
+
+def _shared_attn(params: dict, cfg: ModelConfig, h: jax.Array,
+                 emb0: jax.Array, kv_cache: Optional[dict]
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    assert cfg.hybrid is not None
+    if cfg.hybrid.attn_concat_embedding:
+        a_in = jnp.concatenate([h, emb0], axis=-1)
+    else:
+        a_in = h
+    a_in = rms_norm(a_in, params["ln"], cfg.norm_eps)
+    attn_out, new_cache = attention_block(
+        params["attn"], a_in,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_fraction=cfg.rope_fraction,
+        rope_theta=cfg.rope_theta, causal=True, kv_cache=kv_cache)
+    h = h + attn_out
+    h = h + ffn_block(params["ffn"],
+                      rms_norm(h, params["ln_ffn"], cfg.norm_eps),
+                      cfg.activation)
+    return h, new_cache
+
+
+# --------------------------------------------------------------------- #
+# Trunk + public API
+# --------------------------------------------------------------------- #
+
+def _stack_slice(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            cache: Optional[dict] = None,
+            remat: Optional[str] = "dots"
+            ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Full-sequence forward (train / prefill).
+
+    cache (prefill only): dict with conv/ssm/attn state buffers to fill."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    emb0 = x
+    # Pure SSM scans one layer per step; hybrid scans one attn_every-group
+    # per step (the shared attention block closes over the group boundary).
+    every = cfg.hybrid.attn_every if cfg.family == "hybrid" else 1
+    n_groups = cfg.num_layers // every
+    lp_stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"])
+
+    collect_state = cache is not None
+
+    def group(x, scanned):
+        lp = scanned["layers"]
+        conv_sts, ssm_sts = [], []
+        for j in range(every):
+            sub = _stack_slice(lp, j)
+            y, st, tail = mamba_layer(
+                sub, cfg, rms_norm(x, sub["ln"], cfg.norm_eps))
+            x = x + y
+            if collect_state:
+                ssm_sts.append(st)
+                conv_sts.append(tail)
+        new_attn_cache = None
+        if cfg.family == "hybrid":
+            kv = scanned.get("attn_cache")
+            x, new_attn_cache = _shared_attn(params["shared_attn"], cfg, x,
+                                             emb0, kv)
+        return x, conv_sts, ssm_sts, new_attn_cache
+
+    group_fn = apply_remat(lambda x, sc: group(x, sc)[0],
+                           remat if not collect_state else None)
+
+    if not collect_state:
+        def scan_body(x, scanned):
+            return group_fn(x, scanned), None
+        x, _ = jax.lax.scan(scan_body, x, {"layers": lp_stacked})
+        new_cache = None
+    else:
+        # Prefill: scan over groups, collecting per-layer states as ys.
+        def scan_body(x, scanned):
+            x, csts, sts, ac = group(x, scanned)
+            ys = {"conv": jnp.stack(csts), "ssm": jnp.stack(sts)}
+            if ac is not None:
+                ys["attn_k"] = ac["k"]
+                ys["attn_v"] = ac["v"]
+            return x, ys
+
+        scanned = {"layers": lp_stacked}
+        if cfg.family == "hybrid" and cache.get("attn_k") is not None:
+            scanned["attn_cache"] = {
+                "k": cache["attn_k"], "v": cache["attn_v"],
+                "pos": jnp.broadcast_to(cache["pos"],
+                                        (n_groups,) + cache["pos"].shape)}
+        x, ys = jax.lax.scan(scan_body, x, scanned)
+        new_cache = {
+            "conv": ys["conv"].reshape(cache["conv"].shape).astype(
+                cache["conv"].dtype),
+            "ssm": ys["ssm"].reshape(cache["ssm"].shape),
+            "pos": cache["pos"] + tokens.shape[1],
+        }
+        if "attn_k" in ys:
+            new_cache["attn_k"] = ys["attn_k"]
+            new_cache["attn_v"] = ys["attn_v"]
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head, jnp.zeros((), jnp.float32), new_cache
+
+
+def loss(params: dict, cfg: ModelConfig, batch: dict,
+         remat: Optional[str] = "dots") -> Tuple[jax.Array, dict]:
+    logits, aux, _ = forward(params, cfg, batch["tokens"], remat=remat)
+    ce = cross_entropy_loss(logits, batch["targets"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=DEFAULT_DTYPE) -> dict:
+    ssm, di, heads, n_in, conv_ch = _dims(cfg)
+    cache = {
+        "conv": jnp.zeros((cfg.num_layers, batch, ssm.conv_width - 1,
+                           conv_ch), dtype),
+        "ssm": jnp.zeros((cfg.num_layers, batch, heads, ssm.head_dim,
+                          ssm.state_dim), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.hybrid.attn_every
+        hd = cfg.resolved_head_dim
+        cache["attn_k"] = jnp.zeros(
+            (n_groups, batch, max_seq, cfg.num_kv_heads, hd), dtype)
+        cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+    return cache
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            cache: dict) -> Tuple[jax.Array, dict]:
+    logits, _, cache = forward(params, cfg, tokens, cache=cache, remat=None)
+    return logits[:, -1:, :], cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    """tokens: (b, 1). Recurrent single-step through all layers."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    emb0 = x
+    every = cfg.hybrid.attn_every if cfg.family == "hybrid" else 1
+    n_groups = cfg.num_layers // every
+    lp_stacked = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["layers"])
+    conv_c = cache["conv"].reshape((n_groups, every) + cache["conv"].shape[1:])
+    ssm_c = cache["ssm"].reshape((n_groups, every) + cache["ssm"].shape[1:])
+
+    def scan_body(x, scanned):
+        lp = scanned["layers"]
+        csts, ssts = [], []
+        for j in range(every):
+            sub = _stack_slice(lp, j)
+            y, cst, sst = mamba_decode_step(
+                sub, cfg, rms_norm(x, sub["ln"], cfg.norm_eps),
+                scanned["conv"][j], scanned["ssm"][j])
+            x = x + y
+            csts.append(cst)
+            ssts.append(sst)
+        ys = {"conv": jnp.stack(csts), "ssm": jnp.stack(ssts)}
+        if cfg.family == "hybrid":
+            kv = {"k": scanned["attn_k"], "v": scanned["attn_v"],
+                  "pos": scanned["pos"]}
+            x, nc = _shared_attn(params["shared_attn"], cfg, x, emb0, kv)
+            ys["attn_k"] = nc["k"]
+            ys["attn_v"] = nc["v"]
+        return x, ys
+
+    scanned = {"layers": lp_stacked, "conv": conv_c, "ssm": ssm_c}
+    if cfg.family == "hybrid":
+        scanned["attn_k"] = cache["attn_k"]
+        scanned["attn_v"] = cache["attn_v"]
+        scanned["pos"] = jnp.broadcast_to(
+            cache["pos"], (n_groups,) + cache["pos"].shape)
+    x, ys = jax.lax.scan(scan_body, x, scanned)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    new_cache = {
+        "conv": ys["conv"].reshape(cache["conv"].shape),
+        "ssm": ys["ssm"].reshape(cache["ssm"].shape),
+        "pos": cache["pos"] + 1,
+    }
+    if cfg.family == "hybrid":
+        new_cache["attn_k"] = ys["attn_k"]
+        new_cache["attn_v"] = ys["attn_v"]
+    return logits, new_cache

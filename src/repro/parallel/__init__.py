@@ -1,0 +1,18 @@
+"""Distribution layer: mesh axes, sharding rules, ZeRO, pipeline, compression."""
+
+from repro.parallel.mesh import (  # noqa: F401
+    MODEL_AXIS,
+    build_mesh,
+    dp_axes,
+    dp_size,
+    fsdp_axes,
+    mp_size,
+)
+from repro.parallel.policy import MemoryPlan, plan_memory  # noqa: F401
+from repro.parallel.sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    param_spec,
+)
+from repro.parallel.zero import opt_state_shardings  # noqa: F401

@@ -1,0 +1,52 @@
+"""Gradient compression: int8 error-feedback reduction.
+
+Intended for the slowest link in the hierarchy — the cross-pod DCN gradient
+reduction (the COMET network model shows DP collectives over inter-pod links
+dominate exposed WG time at low MP; compressing them 2-4x moves exactly that
+term). Error feedback keeps the quantization bias out of the converged
+model (Seide et al. / EF-SGD).
+
+``compressed_psum`` is used inside shard_map over a DP axis; the train step
+keeps an ``error`` buffer per parameter in the training state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    error: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Sum ``x`` across ``axis_name`` exchanging int8 + one fp32 scale.
+
+    Returns (sum, new_error). Wire bytes: 1/4 of fp32, 1/2 of bf16."""
+    val = x.astype(jnp.float32)
+    if error is not None:
+        val = val + error
+    q, scale = quantize_int8(val)
+    new_error = val - dequantize_int8(q, scale)
+    qs = jax.lax.all_gather(q, axis_name)            # (n, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)        # (n,)
+    ss = ss.reshape((ss.shape[0],) + (1,) * (qs.ndim - 1))
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    return total.astype(x.dtype), new_error
+
+
+def compression_ratio(dtype=jnp.bfloat16) -> float:
+    return jnp.dtype(dtype).itemsize / 1.0

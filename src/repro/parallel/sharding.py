@@ -1,0 +1,185 @@
+"""Per-family parameter/activation/cache PartitionSpec rules.
+
+Megatron-style tensor parallelism over the "model" axis:
+  column-parallel: wq/wk/wv, FFN up/gate, SSM z/x projections, vocab embed
+  row-parallel:    wo, FFN down, SSM out_proj, LM head (vocab dim)
+MoE: experts axis over "model" (EP) when divisible, else each expert's d_ff
+     over "model" (expert-TP) — granite's 40 experts on 16 ranks.
+GQA: KV projections shard by kv-head only when kv_heads % tp == 0, else
+     replicate (standard GQA-TP practice; chatglm kv=2, llama4 40 q-heads).
+
+The universal fallback is REPLICATE-IF-NOT-DIVISIBLE, applied per tensor —
+smollm's 9 heads simply replicate attention while its FFN still shards.
+
+FSDP (ZeRO-3) additionally shards each parameter's largest replicated dim
+over the intra-pod "data" axis — chosen by the memory planner
+(parallel/policy.py) for archs whose states exceed HBM (llama4, internvl2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.mesh import MODEL_AXIS, dp_axes, fsdp_axes, mp_size
+
+# Leaf-name classification -----------------------------------------------
+# (matched on the final dict key of the parameter path)
+_COLUMN_LAST = {"wq", "wk", "wv", "wg", "wu", "wz", "wx", "conv_wx",
+                "norm_g"}       # shard LAST dim over model
+_ROW_PENULT = {"wo", "wd", "out_proj"}  # shard dim -2 over model
+_REPLICATED = {"ln", "ln1", "ln2", "lnx", "ln_f", "ln_enc", "ln_ffn",
+               "wB", "wC", "wdt", "conv_wB", "conv_wC", "conv_b",
+               "router", "b", "dt_bias"}
+_HEAD_VEC = {"A_log", "D"}      # (..., H) vectors: shard last over model
+_EXPERT = {"we_up", "we_gate", "we_down"}
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _model_dim_ok(cfg: ModelConfig, name: str, shape: Tuple[int, ...],
+                  tp: int) -> bool:
+    """Column shards must also respect head boundaries for attention."""
+    if name in ("wq", "wo"):
+        return _divisible(cfg.num_heads, tp)
+    if name in ("wk", "wv"):
+        return _divisible(cfg.num_kv_heads, tp)
+    return True
+
+
+def param_spec(cfg: ModelConfig, path: Tuple[str, ...],
+               shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    tp = mp_size(mesh)
+    name = path[-1]
+    spec = [None] * len(shape)
+
+    def try_model(dim: int) -> bool:
+        if _divisible(shape[dim], tp):
+            spec[dim] = MODEL_AXIS
+            return True
+        return False
+
+    if name == "embed":
+        try_model(0)                       # vocab-parallel (padded)
+    elif name == "head":
+        try_model(len(shape) - 1)
+    elif name in _EXPERT:
+        # (L', E, D, F): EP over experts if divisible, else expert-TP.
+        e_dim = len(shape) - 3
+        if not try_model(e_dim):
+            ff_dim = (len(shape) - 1 if name in ("we_up", "we_gate")
+                      else len(shape) - 2)
+            try_model(ff_dim)
+    elif name in _COLUMN_LAST:
+        if _model_dim_ok(cfg, name, shape, tp):
+            try_model(len(shape) - 1)
+    elif name in _ROW_PENULT and len(shape) >= 2:
+        if _model_dim_ok(cfg, name, shape, tp):
+            try_model(len(shape) - 2)
+    elif name in _HEAD_VEC:
+        try_model(len(shape) - 1)
+    elif name in _REPLICATED:
+        pass
+    # (unknown names stay replicated — safe default)
+
+    if fsdp:
+        fax = fsdp_axes(mesh)
+        if fax:
+            fsize = int(np.prod([mesh.shape[a] for a in fax]))
+            # largest still-unsharded divisible dim
+            cands = [(shape[d], d) for d in range(len(shape))
+                     if spec[d] is None and _divisible(shape[d], fsize)]
+            if cands:
+                _, d = max(cands)
+                spec[d] = fax if len(fax) > 1 else fax[0]
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, params_shape_tree, mesh: Mesh,
+                    fsdp: bool = False):
+    """Tree of NamedShardings matching a params tree (of arrays or
+    ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape_tree)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        specs.append(NamedSharding(
+            mesh, param_spec(cfg, keys, tuple(leaf.shape), mesh, fsdp)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ----------------------------------------------------------------------- #
+# Batch / activation / cache shardings
+# ----------------------------------------------------------------------- #
+
+def batch_spec(mesh: Mesh, shape: Tuple[int, ...],
+               seq_shard: bool = False) -> P:
+    """(B, S, ...) batches: B over the DP axes when divisible; tiny batches
+    (long_500k's B=1) shard S over data instead when S divides."""
+    axes = dp_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    spec = [None] * len(shape)
+    if axes and shape[0] % dp == 0 and shape[0] >= dp:
+        spec[0] = axes if len(axes) > 1 else axes[0]
+    elif (seq_shard and "data" in mesh.axis_names and len(shape) > 1
+          and shape[1] % mesh.shape["data"] == 0):
+        spec[1] = "data"
+    return P(*spec)
+
+
+def batch_shardings(mesh: Mesh, batch: dict, cfg: ModelConfig) -> dict:
+    out = {}
+    for k, v in batch.items():
+        out[k] = NamedSharding(mesh, batch_spec(mesh, tuple(v.shape),
+                                                seq_shard=(k == "tokens")))
+    return out
+
+
+def kv_cache_spec(cfg: ModelConfig, mesh: Mesh, name: str,
+                  shape: Tuple[int, ...]) -> P:
+    """Decode caches. KV: (L, B, S, Hkv, hd) — B over DP when divisible,
+    heads over model when divisible; B=1 long-context caches shard S over
+    the data axis instead. SSM states: (L, B, H, p, n) — H over model."""
+    tp = mp_size(mesh)
+    axes = dp_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    spec = [None] * len(shape)
+    if name in ("k", "v", "attn_k", "attn_v", "self_k", "self_v",
+                "cross_k", "cross_v"):
+        if axes and shape[1] % dp == 0 and shape[1] >= dp:
+            spec[1] = axes if len(axes) > 1 else axes[0]
+        elif "data" in mesh.axis_names and shape[2] % mesh.shape["data"] == 0:
+            spec[2] = "data"
+        if _divisible(shape[3], tp):
+            spec[3] = MODEL_AXIS
+    elif name == "ssm":
+        if axes and shape[1] % dp == 0 and shape[1] >= dp:
+            spec[1] = axes if len(axes) > 1 else axes[0]
+        if _divisible(shape[2], tp):
+            spec[2] = MODEL_AXIS
+    elif name == "conv":
+        if axes and shape[1] % dp == 0 and shape[1] >= dp:
+            spec[1] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        if keys[-1] == "pos" or leaf.ndim == 0:
+            out.append(NamedSharding(mesh, P()))
+        else:
+            out.append(NamedSharding(
+                mesh, kv_cache_spec(cfg, mesh, keys[-1], tuple(leaf.shape))))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,52 @@
+"""ZeRO optimizer-state sharding (paper §IV-B: ZeRO-DP os+g default).
+
+Optimizer states (Adam m/v + optional fp32 master) follow the parameter's
+PartitionSpec and are *additionally* sharded over the intra-pod "data" axis
+(ZeRO-1). Under ZeRO-3 the parameter spec already carries the data axis, so
+states simply inherit it. The SPMD partitioner materializes the implied
+reduce-scatter(grads) + all-gather(params) — the paper's "no extra
+communication volume vs. plain all-reduce" property.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.mesh import fsdp_axes
+from repro.parallel.policy import MemoryPlan
+from repro.parallel.sharding import param_spec
+
+
+def opt_state_spec(cfg: ModelConfig, path: Tuple[str, ...],
+                   shape: Tuple[int, ...], mesh: Mesh,
+                   plan: MemoryPlan) -> P:
+    base = param_spec(cfg, path, shape, mesh, fsdp=plan.fsdp)
+    if plan.fsdp:
+        return base  # already data-sharded
+    fax = fsdp_axes(mesh)
+    if not fax:
+        return base
+    fsize = int(np.prod([mesh.shape[a] for a in fax]))
+    spec = list(base) + [None] * (len(shape) - len(base))
+    cands = [(shape[d], d) for d in range(len(shape))
+             if spec[d] is None and fsize > 1 and shape[d] % fsize == 0]
+    if cands:
+        _, d = max(cands)
+        spec[d] = fax if len(fax) > 1 else fax[0]
+    return P(*spec)
+
+
+def opt_state_shardings(cfg: ModelConfig, params_shape_tree, mesh: Mesh,
+                        plan: MemoryPlan):
+    import jax
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape_tree)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        out.append(NamedSharding(
+            mesh, opt_state_spec(cfg, keys, tuple(leaf.shape), mesh, plan)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,2 @@
+"""Serving: batched continuous-batching engine + decode steps."""
+from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401

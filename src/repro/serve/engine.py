@@ -1,0 +1,131 @@
+"""Batched serving engine: continuous-batching prefill/decode loop.
+
+Requests enter a queue; the engine packs up to ``max_batch`` active
+sequences into one static decode batch (slots). Each engine tick runs one
+``decode_step`` for every active slot; finished sequences (EOS or length
+cap) free their slot, and queued requests are prefilled into free slots.
+Per-slot KV/SSM caches live in the batched cache tree; slot refill uses
+single-sequence prefill + cache splice — the standard static-slot
+continuous batching design (vLLM-style, without paged attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0           # 0 -> greedy
+    out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 512
+    eos_id: int = -1                   # -1: never stops early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.ecfg = ecfg
+        self.dtype = dtype
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}       # slot -> request
+        self.remaining: Dict[int, int] = {}
+        self.cache = self.model.init_cache(
+            cfg, ecfg.max_batch, ecfg.max_seq, dtype=dtype)
+        self.last_tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
+        self._rng = jax.random.PRNGKey(ecfg.seed)
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, cfg, c, t))
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.out_tokens = []
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.ecfg.max_batch) if i not in self.active]
+
+    def _splice_cache(self, slot: int, seq_cache) -> None:
+        """Copy a single-sequence cache into batch position ``slot``."""
+        def splice(batched, single, key):
+            if key == "pos":
+                return batched.at[slot].set(single[0])
+            # batch axis: KV (L, B, S, H, d) -> axis 1; conv/ssm also axis 1
+            return batched.at[:, slot:slot + 1].set(single)
+        self.cache = {
+            k: splice(self.cache[k], seq_cache[k], k) for k in self.cache}
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            seq_cache = self.model.init_cache(
+                self.cfg, 1, self.ecfg.max_seq, dtype=self.dtype)
+            logits, seq_cache = self.model.prefill(
+                self.params, self.cfg, prompt, seq_cache)
+            self._splice_cache(slot, seq_cache)
+            tok = self._sample(logits[:, -1, :], req.temperature)
+            self.last_tokens = self.last_tokens.at[slot, 0].set(tok[0])
+            req.out_tokens.append(int(tok[0]))
+            self.active[slot] = req
+            self.remaining[slot] = req.max_new_tokens - 1
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._rng, key = jax.random.split(self._rng)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> List[Request]:
+        """One engine step. Returns requests completed this tick."""
+        self._admit()
+        done: List[Request] = []
+        if not self.active:
+            return done
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tokens)
+        next_tokens = self._sample(logits[:, 0, :], 0.0)
+        self.last_tokens = next_tokens[:, None]
+        for slot in list(self.active):
+            req = self.active[slot]
+            tok = int(next_tokens[slot])
+            req.out_tokens.append(tok)
+            self.remaining[slot] -= 1
+            if tok == self.ecfg.eos_id or self.remaining[slot] <= 0:
+                done.append(req)
+                del self.active[slot]
+                del self.remaining[slot]
+        return done
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        out: List[Request] = []
+        for _ in range(max_ticks):
+            out.extend(self.tick())
+            if not self.active and not self.queue:
+                break
+        return out

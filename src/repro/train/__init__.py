@@ -1,0 +1,9 @@
+"""Training: optimizer, jit'd step factory, fault-tolerant trainer."""
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state  # noqa: F401
+from repro.train.train_step import (  # noqa: F401
+    init_train_state,
+    jit_train_step,
+    make_train_step,
+    state_shardings,
+)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,137 @@
+"""AdamW with ZeRO-aware state dtypes.
+
+Modes (picked by the memory planner, parallel/policy.py):
+  * fp32 Adam: bf16 params + fp32 master + fp32 m/v  (16 B/param — the
+    paper's ZeRO accounting),
+  * bf16 moments, no master, stochastic rounding on the bf16 param update
+    (4 B/param) — for models whose fp32 states exceed the pod (llama4-400B).
+
+Functional: ``init_state`` / ``apply_updates`` over pytrees; state sharding
+is applied by the caller via parallel/zero.py specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"       # "float32" | "bfloat16"
+    use_master: bool = True
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_state(params, cfg: AdamWConfig) -> dict:
+    sdt = jnp.dtype(cfg.state_dtype)
+    state = {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _stochastic_round(x: jax.Array, key: jax.Array,
+                      dtype=jnp.bfloat16) -> jax.Array:
+    """Unbiased fp32 -> bf16 rounding (replaces the master copy).
+
+    The one-ulp neighbor is taken by integer-incrementing the bf16 bit
+    pattern toward x (fp32 nextafter would round back to the same bf16)."""
+    y = x.astype(dtype)                      # round-to-nearest baseline
+    yf = y.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(y, jnp.uint16)
+    toward_up = x > yf
+    delta = jnp.where(toward_up == (yf >= 0),
+                      jnp.uint16(1), jnp.uint16(0) - jnp.uint16(1))
+    neighbor = jax.lax.bitcast_convert_type(bits + delta, dtype)
+    nf = neighbor.astype(jnp.float32)
+    span = jnp.abs(nf - yf)
+    frac = jnp.where(span > 0, jnp.abs(x - yf) / span, 0.0)
+    r = jax.random.uniform(key, x.shape)
+    return jnp.where(r < frac, neighbor, y)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state: dict, cfg: AdamWConfig,
+                  rng: Optional[jax.Array] = None
+                  ) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+    use_master = cfg.use_master and "master" in state
+
+    flat_params, treedef = jax.tree_util.tree_flatten(params)
+    flat_grads = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"])[0]
+    flat_master = (jax.tree_util.tree_flatten(state["master"])[0]
+                   if use_master else [None] * len(flat_params))
+    keys = (list(jax.random.split(rng, len(flat_params)))
+            if rng is not None else [None] * len(flat_params))
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for p, g, m, v, mst, k in zip(flat_params, flat_grads, flat_m,
+                                  flat_v, flat_master, keys):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        upd = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        base = mst if use_master else p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * base
+        newf = base - lr * upd
+        if use_master:
+            new_master.append(newf)
+            new_p.append(newf.astype(p.dtype))
+        elif p.dtype == jnp.bfloat16 and k is not None:
+            new_p.append(_stochastic_round(newf, k))
+        else:
+            new_p.append(newf.astype(p.dtype))
+        new_m.append(m2.astype(sdt))
+        new_v.append(v2.astype(sdt))
+
+    unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    new_state = {"m": unf(new_m), "v": unf(new_v), "step": step}
+    if use_master:
+        new_state["master"] = unf(new_master)
+    return unf(new_p), new_state, {"lr": lr, "grad_norm": gnorm}

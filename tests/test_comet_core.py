@@ -1,0 +1,216 @@
+"""Unit tests for the COMET core: traffic model, roofline, memory model,
+collective cost models, ASTRA-lite simulator."""
+
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import (
+    BASELINE_DGX_A100,
+    DOJO,
+    TPU_V4,
+    HierarchicalSwitch,
+    NodeConfig,
+    SingleSwitch,
+    Torus,
+    get_cluster,
+)
+from repro.core.collectives import CollectiveModel, placement
+from repro.core.gemm import CommEvent, Gemm, gemm_traffic_bytes
+from repro.core.memory import (
+    effective_memory_bw,
+    hybrid_bandwidth,
+    model_state_bytes,
+    per_node_footprint,
+)
+from repro.core.roofline import attainable_perf, compute_delay, ridge_point
+from repro.core.simulator import simulate_iteration
+from repro.core.workload import decompose, decompose_dlrm
+
+GB = 1e9
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+
+
+class TestTrafficModel:
+    def test_infinite_buffer_reaches_compulsory_traffic(self):
+        u, v, w = 10_000, 20_000, 5_000
+        assert gemm_traffic_bytes(u, v, w, 10**12) == u + v + w
+
+    def test_small_buffer_inflates_traffic(self):
+        u, v, w = 10_000, 20_000, 5_000
+        t_small = gemm_traffic_bytes(u, v, w, 100)
+        t_big = gemm_traffic_bytes(u, v, w, 10**9)
+        assert t_small > t_big
+
+    def test_tiling_smaller_operand_wins(self):
+        # paper: for U < V, Psi_1 (tile U) gives ~V-U less movement
+        u, v, w, s = 1_000, 100_000, 500, 100
+        psi1 = math.ceil(u / s) * v + u
+        psi2 = math.ceil(v / s) * u + v
+        assert psi1 < psi2
+        assert gemm_traffic_bytes(u, v, w, s) == psi1 + w
+
+    def test_gemm_flops_and_transposes(self):
+        g = Gemm(64, 128, 256)
+        assert g.flops() == 2 * 64 * 128 * 256
+        assert g.transposed_for_ig().flops() == g.flops()
+        assert g.transposed_for_wg().flops() == g.flops()
+
+
+class TestRoofline:
+    NODE = NodeConfig("test", 100e12, 80 * GB, 2000 * GB, 40e6)
+
+    def test_ridge_point(self):
+        assert ridge_point(self.NODE) == pytest.approx(50.0)
+
+    def test_compute_bound_above_ridge(self):
+        from repro.core.gemm import PhaseCost
+        cost = PhaseCost(flops=int(1e15), traffic=int(1e12))  # OI = 1000
+        pt = compute_delay(cost, self.NODE)
+        assert pt.bound == "compute"
+        assert pt.delay == pytest.approx(1e15 / 100e12)
+
+    def test_memory_bound_below_ridge(self):
+        from repro.core.gemm import PhaseCost
+        cost = PhaseCost(flops=int(1e12), traffic=int(1e12))  # OI = 1
+        pt = compute_delay(cost, self.NODE)
+        assert pt.bound == "memory"
+        assert pt.delay == pytest.approx(1e12 / (1 * 2000 * GB))
+
+    def test_bandwidth_shifts_attainable(self):
+        assert attainable_perf(10, 100e12, 2000 * GB) == 10 * 2000 * GB
+        assert attainable_perf(10, 100e12, 4000 * GB) == 10 * 4000 * GB
+
+
+class TestHybridMemory:
+    def test_paper_eqn3_example(self):
+        # 240GB accessed, 80GB LM @2TB/s, EM @1TB/s -> 1.2TB/s
+        bw = hybrid_bandwidth(240 * GB, 80 * GB, 2000 * GB, 1000 * GB)
+        assert bw == pytest.approx(1200 * GB, rel=0.01)
+
+    def test_fits_local_uses_local_bw(self):
+        node = NodeConfig("n", 1e12, 80 * GB, 2000 * GB, 40e6,
+                          exp_cap=400 * GB, exp_bw=500 * GB)
+        assert effective_memory_bw(node, 50 * GB) == 2000 * GB
+        assert effective_memory_bw(node, 200 * GB) < 2000 * GB
+
+
+class TestZeroFootprint:
+    def test_stages_ordering(self):
+        p, dp = 1e9, 64
+        vals = [model_state_bytes(p, dp, z) for z in (0, 1, 2, 3)]
+        assert vals[0] > vals[1] > vals[2] > vals[3]
+
+    def test_baseline_is_16_bytes_per_param(self):
+        assert model_state_bytes(1e9, 64, 0) == 16e9
+
+    def test_zero3_scales_with_dp(self):
+        assert model_state_bytes(1e9, 64, 3) == pytest.approx(16e9 / 64)
+
+    def test_fig6_trends(self):
+        """ZeRO-3 flat in MP; baseline grows as MP shrinks (Fig. 6)."""
+        cfg = get_config("transformer-1t")
+        n = 1024
+        base, z3 = [], []
+        for mp in (1024, 64, 8, 1):
+            wl = decompose(cfg, SHAPE, mp=mp, dp=n // mp)
+            params = wl.total_weight_bytes() / 2
+            base.append(model_state_bytes(params, n // mp, 0))
+            z3.append(model_state_bytes(params, n // mp, 3))
+        assert base[0] < base[1] < base[2] < base[3]   # exponential growth
+        assert max(z3[1:]) / min(z3[1:]) < 1.2         # ~flat
+
+    def test_mp8_dp128_footprint_matches_paper(self):
+        """Paper: MP8_DP128 needs ~250GB (3x+ the 80GB A100)."""
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, SHAPE, mp=8, dp=128)
+        rep = per_node_footprint(wl, BASELINE_DGX_A100.node, zero_stage=2)
+        assert 200 * GB < rep.total < 350 * GB
+        assert not rep.fits_local
+
+    def test_mp64_fits_80gb(self):
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, SHAPE, mp=64, dp=16)
+        rep = per_node_footprint(wl, BASELINE_DGX_A100.node, zero_stage=2)
+        assert rep.fits_local
+
+
+class TestCollectives:
+    def test_placement_mp_fills_pods(self):
+        pl = placement("mp", mp=4, dp=2, pod_size=8)
+        assert (pl.intra, pl.inter) == (4, 1)
+        pl = placement("mp", mp=16, dp=2, pod_size=8)
+        assert (pl.intra, pl.inter) == (8, 2)
+
+    def test_placement_dp_strides(self):
+        pl = placement("dp", mp=8, dp=128, pod_size=8)
+        assert (pl.intra, pl.inter) == (1, 128)
+        pl = placement("dp", mp=2, dp=8, pod_size=8)
+        assert (pl.intra, pl.inter) == (4, 2)
+
+    def test_allreduce_linear_in_size(self):
+        cm = CollectiveModel(BASELINE_DGX_A100, mp=8, dp=128)
+        t1 = cm.time("all-reduce", 1e9, "mp")
+        t2 = cm.time("all-reduce", 2e9, "mp")
+        assert t2 == pytest.approx(2 * t1, rel=0.01)
+
+    def test_intra_pod_faster_than_cross_pod(self):
+        cm_small = CollectiveModel(BASELINE_DGX_A100, mp=8, dp=1)
+        cm_big = CollectiveModel(BASELINE_DGX_A100, mp=64, dp=1)
+        assert cm_small.time("all-reduce", 1e9, "mp") < \
+            cm_big.time("all-reduce", 1e9, "mp")
+
+    def test_torus_and_switch_models(self):
+        cm = CollectiveModel(TPU_V4, mp=4096, dp=1)
+        assert cm.time("all-reduce", 1e9, "mp") > 0
+        cm = CollectiveModel(DOJO, mp=64, dp=1)
+        assert cm.time("all-reduce", 1e9, "mp") > 0
+
+    def test_ag_rs_half_of_ar(self):
+        cm = CollectiveModel(DOJO, mp=64, dp=1)
+        ar = cm.time("all-reduce", 1e9, "mp")
+        ag = cm.time("all-gather", 1e9, "mp")
+        assert ag == pytest.approx(ar / 2, rel=0.05)
+
+
+class TestSimulator:
+    def test_breakdown_sums_to_total(self):
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, SHAPE, mp=8, dp=128)
+        br = simulate_iteration(wl, BASELINE_DGX_A100)
+        d = br.as_dict()
+        parts = sum(v for k, v in d.items() if k != "total")
+        assert d["total"] == pytest.approx(parts, rel=1e-6)
+
+    def test_wg_comm_overlaps(self):
+        """Paper Fig 8a: WG DP collectives largely hidden at MP64_DP16."""
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, SHAPE, mp=64, dp=16)
+        br = simulate_iteration(wl, BASELINE_DGX_A100,
+                                mem_bw_override=BASELINE_DGX_A100.node.local_bw)
+        assert br.wg.exposed_comm < 0.05 * br.total
+
+    def test_more_bandwidth_never_slower(self):
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, SHAPE, mp=64, dp=16)
+        slow = simulate_iteration(wl, BASELINE_DGX_A100)
+        fast_topo = BASELINE_DGX_A100.topology.scaled(intra=2, inter=2)
+        fast = simulate_iteration(wl, BASELINE_DGX_A100.with_topology(fast_topo))
+        assert fast.total <= slow.total
+
+    def test_dlrm_decomposition_runs(self):
+        from repro.configs import get_dlrm_config
+        wl = decompose_dlrm(get_dlrm_config(), 4096, 64)
+        br = simulate_iteration(wl, BASELINE_DGX_A100)
+        assert br.total > 0
+
+
+def test_cluster_registry():
+    for name in ("dgx-a100-1k", "A0", "B1", "C2", "dojo", "tpu-v4",
+                 "tpu-v5e-pod", "tpu-v5e-2pod"):
+        cl = get_cluster(name)
+        assert cl.num_nodes > 0
+    with pytest.raises(KeyError):
+        get_cluster("nope")

@@ -1,0 +1,84 @@
+"""Trip-count-weighted HLO analysis: the measured-COMET frontend."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo import RooflineTerms, collective_bytes, shape_bytes
+from repro.core.hlo_analyzer import analyze_hlo
+
+N = 256
+W = jnp.zeros((N, N), jnp.float32)
+X = jnp.zeros((N, N), jnp.float32)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+class TestFlopCounting:
+    def test_flat_matmul(self):
+        c = analyze_hlo(_compile(lambda x: x @ W, X))
+        assert c.flops == pytest.approx(2 * N ** 3, rel=0.02)
+
+    def test_scan_multiplies_trip_count(self):
+        def body(c, _):
+            return c @ W, None
+        c = analyze_hlo(_compile(
+            lambda x: jax.lax.scan(body, x, None, length=10)[0], X))
+        assert c.flops == pytest.approx(20 * N ** 3, rel=0.02)
+
+    def test_nested_scans(self):
+        def body(c, _):
+            return c @ W, None
+        def outer(c, _):
+            c, _ = jax.lax.scan(body, c, None, length=4)
+            return c, None
+        c = analyze_hlo(_compile(
+            lambda x: jax.lax.scan(outer, x, None, length=4)[0], X))
+        assert c.flops == pytest.approx(32 * N ** 3, rel=0.02)
+
+    def test_remat_increases_flops(self):
+        """Remat recompute persists inside scans (outside, XLA CSEs it)."""
+        def layer(x):
+            return jnp.tanh(x @ W) @ W
+
+        def make(f):
+            def body(c, _):
+                return f(c), None
+            return lambda x: jax.grad(
+                lambda x: jax.lax.scan(body, x, None, length=8)[0].sum())(x)
+
+        base = analyze_hlo(_compile(make(layer), X))
+        re = analyze_hlo(_compile(make(jax.checkpoint(layer)), X))
+        assert re.flops > base.flops * 1.1
+
+    def test_slice_of_stacked_params_not_full_reads(self):
+        """dynamic-slice inside a scan reads one layer, not the stack."""
+        ws = jnp.zeros((100, N, N), jnp.float32)
+        def body(c, w):
+            return c @ w, None
+        c = analyze_hlo(_compile(
+            lambda x, ws: jax.lax.scan(body, x, ws)[0], X, ws))
+        # if the full stack were charged per step: 100 * 100 * N*N*4 = 2.6e10
+        assert c.bytes < 100 * (3 * N * N * 4) * 4
+
+
+class TestOldParser:
+    def test_shape_bytes(self):
+        assert shape_bytes("bf16[4,128]{1,0}") == 4 * 128 * 2
+        assert shape_bytes("(f32[8], s32[2,2])") == 8 * 4 + 4 * 4
+        assert shape_bytes("f32[]") == 4
+
+    def test_roofline_terms_math(self):
+        t = RooflineTerms(flops=197e12 * 256, hbm_bytes=819e9 * 256,
+                          coll_bytes=50e9 * 256, chips=256)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.collective_s == pytest.approx(1.0)
+        assert t.roofline_fraction() == pytest.approx(1.0)
+
+    def test_dominant_term(self):
+        t = RooflineTerms(flops=1, hbm_bytes=1e15, coll_bytes=1, chips=1)
+        assert t.dominant == "memory"

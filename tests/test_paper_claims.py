@@ -1,0 +1,175 @@
+"""End-to-end reproduction of the paper's §V case-study claims.
+
+Each test states the paper's claim and asserts our analytical pipeline
+reproduces it (quantitative deviations documented in EXPERIMENTS.md)."""
+
+import pytest
+
+from repro.configs import get_config, get_dlrm_config
+from repro.configs.base import ShapeConfig
+from repro.core import dse
+from repro.core.cluster import BASELINE_DGX_A100
+from repro.core.simulator import simulate_iteration
+from repro.core.workload import decompose
+
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return get_config("transformer-1t")
+
+
+@pytest.fixture(scope="module")
+def sweep(tcfg):
+    return dse.mpdp_sweep(tcfg, SHAPE, BASELINE_DGX_A100)
+
+
+class TestFig8:
+    def test_mp8_dp128_is_optimal(self, sweep):
+        """Paper §V-B1: 'the best-performing configuration is MP8_DP128'."""
+        best = min(sweep, key=lambda r: r.total)
+        assert best.label == "MP8_DP128"
+
+    def test_high_mp_is_communication_bound(self, sweep):
+        """Configs left of MP8_DP128 are bound by exposed FP/IG comm."""
+        by = {r.label: r.breakdown for r in sweep}
+        hi = by["MP64_DP16"]
+        assert hi.fp.exposed_comm > hi.fp.compute
+        lo = by["MP8_DP128"]
+        assert lo.fp.exposed_comm < lo.fp.compute
+
+    def test_low_mp_exposes_dp_gradients(self, sweep):
+        by = {r.label: r.breakdown for r in sweep}
+        assert by["MP1_DP1024"].wg.exposed_comm > \
+            by["MP8_DP128"].wg.exposed_comm
+
+
+class TestFig9:
+    def test_high_mp_insensitive_to_em_bandwidth(self, tcfg):
+        """MP64_DP16 fits local memory -> flat across EM bandwidths."""
+        hm = dse.memory_expansion_heatmap(
+            tcfg, SHAPE, BASELINE_DGX_A100,
+            em_bandwidths_gbs=(100, 1000, 2000), strategies=[(64, 16)])
+        row = list(hm["MP64_DP16"].values())
+        assert max(row) / min(row) < 1.01
+
+    def test_break_even_bandwidth_exists(self, tcfg):
+        """MP8_DP128 beats the MP64_DP16 baseline above some EM bandwidth
+        and loses below it (paper Ex.1: threshold; ours is lower, see
+        EXPERIMENTS.md)."""
+        wl = decompose(tcfg, SHAPE, mp=64, dp=16)
+        base = simulate_iteration(wl, BASELINE_DGX_A100).total
+        hm = dse.memory_expansion_heatmap(
+            tcfg, SHAPE, BASELINE_DGX_A100,
+            em_bandwidths_gbs=(50, 2000), strategies=[(8, 128)])
+        assert hm["MP8_DP128"][2000] < base      # fast EM: expansion wins
+        assert hm["MP8_DP128"][50] > base        # slow EM: strictly worse
+
+
+class TestFig10:
+    def test_compute_scaling_diminishing_returns(self, tcfg):
+        """Paper §V-B3: doubling compute helps less than halving hurts."""
+        cs = dse.compute_scaling(tcfg, SHAPE, BASELINE_DGX_A100, 8, 128,
+                                 compute_factors=(0.5, 1.0, 2.0, 4.0),
+                                 em_bandwidths_gbs=(2000,))
+        t = {f: cs[f][2000] for f in (0.5, 1.0, 2.0, 4.0)}
+        slow_penalty = t[0.5] / t[1.0]
+        fast_gain = t[1.0] / t[2.0]
+        assert slow_penalty > fast_gain
+        assert t[2.0] / t[4.0] < fast_gain + 0.05  # diminishing
+
+
+class TestFig11:
+    def test_both_dims_amplify(self, tcfg):
+        """Scaling both network dims beats scaling either alone (MP64)."""
+        ns = dse.network_scaling(tcfg, SHAPE, BASELINE_DGX_A100, 64, 16,
+                                 intra_factors=(1.0, 2.0),
+                                 inter_factors=(1.0, 2.0))
+        base = ns[(1.0, 1.0)]
+        gain_intra = base - ns[(2.0, 1.0)]
+        gain_inter = base - ns[(1.0, 2.0)]
+        gain_both = base - ns[(2.0, 2.0)]
+        assert gain_both > max(gain_intra, gain_inter)
+
+    def test_mp8_less_network_sensitive_than_mp64(self, tcfg):
+        """Paper: extra network bandwidth helps the comm-bound MP64 far
+        more than the compute-bound MP8 (our downscaling side deviates:
+        ASTRA-lite exposes MP8's DP gradients at half inter-pod bandwidth
+        harder than ASTRA-SIM — see EXPERIMENTS.md §Benchmarks note 2)."""
+        n64 = dse.network_scaling(tcfg, SHAPE, BASELINE_DGX_A100, 64, 16,
+                                  intra_factors=(1.0, 2.0),
+                                  inter_factors=(1.0, 2.0))
+        n8 = dse.network_scaling(tcfg, SHAPE, BASELINE_DGX_A100, 8, 128,
+                                 intra_factors=(1.0, 2.0),
+                                 inter_factors=(1.0, 2.0))
+        gain64 = 1 - n64[(2.0, 2.0)] / n64[(1.0, 1.0)]
+        gain8 = 1 - n8[(2.0, 2.0)] / n8[(1.0, 1.0)]
+        assert gain64 > gain8
+
+
+class TestFig12:
+    def test_rebalance_optimum_is_interior(self, tcfg):
+        """Paper: optimal inter:intra ratio ~1:6 beats the default 1:9.6;
+        extremes lose."""
+        rb = dse.bandwidth_rebalance(tcfg, SHAPE, BASELINE_DGX_A100, 64, 16)
+        best_r = min(rb, key=rb.get)
+        assert 1 < best_r < 9.6
+        assert rb[best_r] < rb[9.6]
+        assert rb[16] > rb[best_r]
+
+
+class TestFig13:
+    def test_dlrm_memory_bandwidth_sensitivity(self):
+        """Paper §V-C: DLRM performance is more sensitive to memory
+        bandwidth than Transformer."""
+        dlrm = get_dlrm_config()
+        me = dse.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100,
+                                       global_batch=65536,
+                                       em_bandwidths_gbs=(500, 2000),
+                                       nodes_per_instance_opts=(8,))
+        assert me[8][500] / me[8][2000] > 2.0  # strong bw sensitivity
+
+    def test_multi_instance_speedup_with_fast_em(self):
+        dlrm = get_dlrm_config()
+        me = dse.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100,
+                                       global_batch=65536,
+                                       em_bandwidths_gbs=(2000,),
+                                       nodes_per_instance_opts=(64, 8))
+        assert me[8][2000] < me[64][2000]  # 8-node instances win at high bw
+
+
+class TestFig15:
+    @pytest.fixture(scope="class")
+    def cmp(self):
+        tcfg = get_config("transformer-1t")
+        return dse.cluster_comparison(tcfg, SHAPE, get_dlrm_config(),
+                                      dlrm_batch=65536)
+
+    def test_b1_transformer_speedup_near_paper(self, cmp):
+        """Paper: B1 delivers 7.2x for Transformer-1T (ours: ~7.7x)."""
+        s = cmp["A0"]["transformer-1t"] / cmp["B1"]["transformer-1t"]
+        assert 5.0 < s < 10.0
+
+    def test_memory_expansion_helps_dlrm_only_on_low_end(self, cmp):
+        """Paper: expansion effective for DLRM only on cluster A."""
+        def dlrm_speedup(c):
+            return cmp["A0"]["dlrm"] / cmp[c]["dlrm"]
+        assert dlrm_speedup("A2") > dlrm_speedup("A0")       # helps on A
+        assert dlrm_speedup("C1") < dlrm_speedup("C0")       # hurts on C
+        assert dlrm_speedup("B1") < dlrm_speedup("B0")       # hurts on B
+
+    def test_transformer_gains_from_expansion_everywhere(self, cmp):
+        for a, b in (("A0", "A1"), ("B0", "B1"), ("C0", "C1")):
+            assert cmp[b]["transformer-1t"] < cmp[a]["transformer-1t"]
+
+    def test_tpu_story(self, cmp):
+        """Paper: TPU strong for Transformer, weak for DLRM."""
+        tf = cmp["A0"]["transformer-1t"] / cmp["tpu-v4"]["transformer-1t"]
+        dl = cmp["A0"]["dlrm"] / cmp["tpu-v4"]["dlrm"]
+        assert tf > 2 * dl
+
+    def test_dojo_strong_on_both(self, cmp):
+        tf = cmp["A0"]["transformer-1t"] / cmp["dojo"]["transformer-1t"]
+        dl = cmp["A0"]["dlrm"] / cmp["dojo"]["dlrm"]
+        assert tf > 5 and dl > 5

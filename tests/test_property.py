@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import BASELINE_DGX_A100, NodeConfig
+from repro.core.collectives import CollectiveModel
+from repro.core.gemm import Gemm, PhaseCost, gemm_traffic_bytes
+from repro.core.memory import hybrid_bandwidth, model_state_bytes
+from repro.core.roofline import compute_delay
+from repro.parallel.compression import dequantize_int8, quantize_int8
+from repro.train.optimizer import AdamWConfig, lr_schedule
+
+sizes = st.integers(min_value=1, max_value=10**8)
+bufs = st.integers(min_value=64, max_value=10**9)
+
+
+class TestTrafficModelProperties:
+    @given(u=sizes, v=sizes, w=sizes, s=bufs)
+    @settings(max_examples=200, deadline=None)
+    def test_lower_bound_compulsory(self, u, v, w, s):
+        """Traffic can never beat reading each operand once."""
+        assert gemm_traffic_bytes(u, v, w, s) >= min(u, v) + w
+
+    @given(u=sizes, v=sizes, w=sizes, s1=bufs, s2=bufs)
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_in_buffer(self, u, v, w, s1, s2):
+        """Bigger on-chip buffer never increases traffic."""
+        lo, hi = sorted((s1, s2))
+        assert gemm_traffic_bytes(u, v, w, hi) <= \
+            gemm_traffic_bytes(u, v, w, lo)
+
+    @given(m=st.integers(1, 512), k=st.integers(1, 512),
+           n=st.integers(1, 512), s=bufs)
+    @settings(max_examples=100, deadline=None)
+    def test_gemm_oi_positive(self, m, k, n, s):
+        g = Gemm(m, k, n)
+        assert g.flops() > 0
+        assert g.traffic(s) > 0
+
+
+class TestRooflineProperties:
+    NODE = NodeConfig("n", 100e12, 80e9, 2000e9, 40e6)
+
+    @given(flops=st.integers(1, 10**16), traffic=st.integers(1, 10**13))
+    @settings(max_examples=200, deadline=None)
+    def test_delay_at_least_both_bounds(self, flops, traffic):
+        pt = compute_delay(PhaseCost(flops, traffic), self.NODE)
+        assert pt.delay >= flops / self.NODE.peak_flops - 1e-12
+        assert pt.delay >= traffic / self.NODE.local_bw - 1e-12
+
+    @given(total=st.floats(1e6, 1e12), frac=st.floats(0.0, 1.0),
+           bw1=st.floats(1e9, 1e13), bw2=st.floats(1e9, 1e13))
+    @settings(max_examples=200, deadline=None)
+    def test_hybrid_bw_between_endpoints(self, total, frac, bw1, bw2):
+        bw = hybrid_bandwidth(total, total * frac, bw1, bw2)
+        lo, hi = min(bw1, bw2), max(bw1, bw2)
+        assert lo * (1 - 1e-9) <= bw <= hi * (1 + 1e-9)
+
+
+class TestZeroProperties:
+    @given(p=st.floats(1e6, 1e13), dp=st.integers(1, 4096))
+    @settings(max_examples=100, deadline=None)
+    def test_stage_monotone(self, p, dp):
+        vals = [model_state_bytes(p, dp, z) for z in (0, 1, 2, 3)]
+        assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+    @given(p=st.floats(1e6, 1e13), dp1=st.integers(1, 64),
+           dp2=st.integers(65, 4096))
+    @settings(max_examples=100, deadline=None)
+    def test_more_dp_never_more_memory(self, p, dp1, dp2):
+        for z in (1, 2, 3):
+            assert model_state_bytes(p, dp2, z) <= \
+                model_state_bytes(p, dp1, z) + 1e-6
+
+
+class TestCollectiveProperties:
+    @given(size=st.floats(1e3, 1e12),
+           mp=st.sampled_from([1, 2, 4, 8, 16, 64, 256]),
+           coll=st.sampled_from(["all-reduce", "all-gather",
+                                 "reduce-scatter", "all-to-all"]))
+    @settings(max_examples=200, deadline=None)
+    def test_nonnegative_and_linear(self, size, mp, coll):
+        cm = CollectiveModel(BASELINE_DGX_A100, mp=mp, dp=1024 // mp)
+        t = cm.time(coll, size, "mp")
+        assert t >= 0
+        assert cm.time(coll, 2 * size, "mp") >= t
+
+
+class TestNumericsProperties:
+    @given(data=st.lists(st.floats(-100, 100, allow_nan=False),
+                         min_size=1, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_int8_quantization_error_bound(self, data):
+        x = jnp.asarray(data, jnp.float32)
+        q, s = quantize_int8(x)
+        err = np.max(np.abs(np.asarray(dequantize_int8(q, s) - x)))
+        assert err <= float(s) * 0.5 + 1e-6
+
+    @given(step=st.integers(0, 20000))
+    @settings(max_examples=100, deadline=None)
+    def test_lr_schedule_bounds(self, step):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000)
+        lr = float(lr_schedule(cfg, jnp.asarray(step)))
+        assert 0.0 <= lr <= cfg.lr + 1e-9
+
+    @given(b=st.integers(1, 3), s=st.integers(1, 64), h=st.integers(1, 4),
+           d=st.sampled_from([8, 16]))
+    @settings(max_examples=20, deadline=None)
+    def test_blockwise_attention_equivalence(self, b, s, h, d):
+        from repro.models.common import blockwise_attention, naive_attention
+        key = jax.random.PRNGKey(b * 1000 + s)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+        out = blockwise_attention(q, k, v, q_block=16, kv_block=16)
+        want = naive_attention(q, k, v)
+        np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_data_pipeline_deterministic_and_resharding(self, seed):
+        from repro.data import DataConfig, lm_batch
+        cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8,
+                         seed=seed)
+        a = lm_batch(cfg, step=3)
+        b = lm_batch(cfg, step=3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        # resharding: 2 shards concatenated == full batch? shards are
+        # independent streams keyed by shard id; assert disjoint determinism
+        s0 = lm_batch(cfg, step=3, shard=0, num_shards=2)
+        s0b = lm_batch(cfg, step=3, shard=0, num_shards=2)
+        np.testing.assert_array_equal(s0["tokens"], s0b["tokens"])
