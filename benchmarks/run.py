@@ -20,6 +20,7 @@ from repro.core import dse
 from repro.core.cluster import BASELINE_DGX_A100, TPU_V5E_POD, get_cluster
 from repro.core.simulator import simulate_iteration
 from repro.core.strategy import footprint_table
+from repro.core.study import ParallelSpec, StudySpec, run_study
 from repro.core.workload import decompose
 
 SHAPE_1T = ShapeConfig("paper", 2048, 1024, "train")
@@ -44,30 +45,33 @@ def _rows_fig6() -> List[Row]:
 def _rows_fig8() -> List[Row]:
     """Fig 8: MP/DP sweep on the 1024-GPU DGX-A100 baseline."""
     cfg = get_config("transformer-1t")
-    res = dse.mpdp_sweep(cfg, SHAPE_1T, BASELINE_DGX_A100)
-    best = min(res, key=lambda r: r.total)
-    rows = [("fig8", "best_strategy", "label", best.label,
+    res = run_study(dse.mpdp_study(cfg, SHAPE_1T, BASELINE_DGX_A100))
+    rows = [("fig8", "best_strategy", "label", res.best().record["strategy"],
              "paper: MP8_DP128")]
-    for r in res:
-        d = r.breakdown.as_dict()
-        rows.append(("fig8", r.label, "total_s", round(d["total"], 2), ""))
-        rows.append(("fig8", r.label, "exposed_comm_s",
-                     round(d["fp_exposed_comm"] + d["ig_exposed_comm"]
-                           + d["wg_exposed_comm"], 2), ""))
-        rows.append(("fig8", r.label, "footprint_gb",
-                     round(r.footprint_bytes / GB, 1), ""))
+    for c in res:
+        r = c.record
+        rows.append(("fig8", r["strategy"], "total_s",
+                     round(r["total"], 2), ""))
+        rows.append(("fig8", r["strategy"], "exposed_comm_s",
+                     round(r["fp_exposed_comm"] + r["ig_exposed_comm"]
+                           + r["wg_exposed_comm"], 2), ""))
+        rows.append(("fig8", r["strategy"], "footprint_gb",
+                     round(r["footprint_bytes"] / GB, 1), ""))
     return rows
 
 
 def _rows_fig9() -> List[Row]:
     """Fig 9: expanded-memory bandwidth heatmap (normalized to MP64_DP16)."""
     cfg = get_config("transformer-1t")
-    wl = decompose(cfg, SHAPE_1T, mp=64, dp=16)
-    base = simulate_iteration(wl, BASELINE_DGX_A100).total
-    hm = dse.memory_expansion_heatmap(
+    base = run_study(StudySpec(
+        name="fig9-baseline", model=cfg, shape=SHAPE_1T,
+        cluster=BASELINE_DGX_A100,
+        strategies=ParallelSpec(mp=64, dp=16))).cells[0].record["total"]
+    hm = run_study(dse.memory_expansion_study(
         cfg, SHAPE_1T, BASELINE_DGX_A100,
         em_bandwidths_gbs=(100, 250, 500, 1000, 2000),
-        strategies=[(32, 32), (16, 64), (8, 128)])
+        strategies=[(32, 32), (16, 64), (8, 128)],
+    )).pivot(index="strategy", columns="bw_em_gbs")
     rows = [("fig9", "baseline_MP64_DP16", "total_s", round(base, 2),
              "rows beat 1.0 above their break-even bw")]
     breakeven = None
@@ -86,9 +90,11 @@ def _rows_fig9() -> List[Row]:
 def _rows_fig10() -> List[Row]:
     """Fig 10: per-node compute-capability scaling (MP8_DP128)."""
     cfg = get_config("transformer-1t")
-    cs = dse.compute_scaling(cfg, SHAPE_1T, BASELINE_DGX_A100, 8, 128,
-                             compute_factors=(0.5, 1.0, 2.0, 4.0, 8.0),
-                             em_bandwidths_gbs=(500, 1000, 2000))
+    cs = run_study(dse.compute_scaling_study(
+        cfg, SHAPE_1T, BASELINE_DGX_A100, 8, 128,
+        compute_factors=(0.5, 1.0, 2.0, 4.0, 8.0),
+        em_bandwidths_gbs=(500, 1000, 2000),
+    )).pivot(index="compute_x", columns="bw_em_gbs")
     base = cs[1.0][2000]
     rows = []
     for f, row in cs.items():
@@ -105,7 +111,9 @@ def _rows_fig11() -> List[Row]:
     cfg = get_config("transformer-1t")
     rows = []
     for (mp, dp) in ((64, 16), (8, 128)):
-        ns = dse.network_scaling(cfg, SHAPE_1T, BASELINE_DGX_A100, mp, dp)
+        ns = {(c.point["intra_x"], c.point["inter_x"]): c.record["total"]
+              for c in run_study(dse.network_scaling_study(
+                  cfg, SHAPE_1T, BASELINE_DGX_A100, mp, dp))}
         base = ns[(1.0, 1.0)]
         for (fi, fo), t in sorted(ns.items()):
             claim = ("paper: 2x both => ~27% gain at MP64"
@@ -121,8 +129,9 @@ def _rows_fig12() -> List[Row]:
     cfg = get_config("transformer-1t")
     rows = []
     for (mp, dp) in ((64, 16), (8, 128)):
-        rb = dse.bandwidth_rebalance(cfg, SHAPE_1T, BASELINE_DGX_A100,
-                                     mp, dp)
+        rb = {c.point["ratio"]: c.record["total"]
+              for c in run_study(dse.bandwidth_rebalance_study(
+                  cfg, SHAPE_1T, BASELINE_DGX_A100, mp, dp))}
         base = rb[9.6]
         best = min(rb, key=rb.get)
         rows.append(("fig12", f"MP{mp}_DP{dp}", "best_ratio_1:r", best,
@@ -137,8 +146,9 @@ def _rows_fig13() -> List[Row]:
     """Fig 13: DLRM cluster-size sweep + memory-expansion turnaround."""
     dlrm = get_dlrm_config()
     rows = []
-    sw = dse.dlrm_cluster_size_sweep(dlrm, BASELINE_DGX_A100,
-                                     global_batch=65536)
+    sw = {c.point["nodes"]: c.record
+          for c in run_study(dse.dlrm_cluster_size_study(
+              dlrm, BASELINE_DGX_A100, global_batch=65536))}
     for n, d in sw.items():
         rows.append(("fig13a", f"nodes{n}", "total_ms",
                      round(d["total"] * 1e3, 2), ""))
@@ -147,8 +157,10 @@ def _rows_fig13() -> List[Row]:
                             + d["wg_exposed_comm"]) * 1e3, 2),
                      "comm shrinks once an instance fits one pod"
                      if n == 8 else ""))
-    me = dse.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100,
-                                   global_batch=65536)
+    me = run_study(dse.dlrm_memory_expansion_study(
+        dlrm, BASELINE_DGX_A100, global_batch=65536,
+    )).pivot(index="nodes_per_inst", columns="bw_em_gbs",
+             values="turnaround")
     base = me[64][2000]
     for n, row in me.items():
         for bw, t in sorted(row.items()):

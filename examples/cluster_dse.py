@@ -1,44 +1,57 @@
 """Design-space exploration example: evaluate a NEW cluster you are
-considering building — the core COMET use case.
+considering building — the core COMET use case, on the declarative
+Study API (repro.core.study).
 
 Here: would a hypothetical v5e-like pod with double HBM bandwidth, or one
 with CXL-style 1TB/s expanded memory, train the assigned archs faster?
+Each upgrade is one value of a single "variant" Axis; dotted-path
+overrides ("node.local_bw", "topology.link_bw") replace hand-rolled
+``dataclasses.replace`` loops.
 
 Run: PYTHONPATH=src python examples/cluster_dse.py
 """
 
-import dataclasses
-
-from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs import get_config
 from repro.configs.base import SHAPES
 from repro.core.cluster import TPU_V5E_POD
-from repro.core.simulator import simulate_iteration
-from repro.core.workload import decompose
+from repro.core.study import (
+    Axis,
+    ParallelSpec,
+    StudySpec,
+    run_study,
+    set_by_path,
+)
 
 GB = 1e9
 shape = SHAPES["train_4k"]
 
-variants = {
-    "v5e-pod (baseline)": TPU_V5E_POD,
-    "2x HBM bandwidth": TPU_V5E_POD.with_node(
-        dataclasses.replace(TPU_V5E_POD.node, local_bw=2 * 819e9)),
-    "+CXL 1TB/s x 64GB": TPU_V5E_POD.with_node(
-        TPU_V5E_POD.node.with_expansion(cap=64 * GB, bw=1000 * GB)),
-    "2x ICI bandwidth": TPU_V5E_POD.with_topology(
-        dataclasses.replace(TPU_V5E_POD.topology, link_bw=100e9)),
+VARIANTS = {
+    "v5e-pod (baseline)": lambda cl: cl,
+    "2x HBM bandwidth": lambda cl: set_by_path(cl, "node.local_bw", 2 * 819e9),
+    "+CXL 1TB/s x 64GB": lambda cl: cl.with_node(
+        cl.node.with_expansion(cap=64 * GB, bw=1000 * GB)),
+    "2x ICI bandwidth": lambda cl: set_by_path(cl, "topology.link_bw", 100e9),
 }
+
+
+def upgrade_study(arch: str) -> StudySpec:
+    return StudySpec(
+        name=f"v5e-upgrade:{arch}",
+        model=get_config(arch), shape=shape, cluster=TPU_V5E_POD,
+        strategies=ParallelSpec(mp=16, dp=16),
+        axes=[Axis("variant", tuple(VARIANTS),
+                   apply=lambda cl, v: VARIANTS[v](cl))])
+
 
 archs = ["internlm2-20b", "llama4-maverick-400b-a17b", "mamba2-780m",
          "internvl2-76b"]
-print(f"{'arch':<28}" + "".join(f"{v:>22}" for v in variants))
+print(f"{'arch':<28}" + "".join(f"{v:>22}" for v in VARIANTS))
 for arch in archs:
-    cfg = get_config(arch)
-    wl = decompose(cfg, shape, mp=16, dp=16)
+    res = run_study(upgrade_study(arch))
+    base = res.cells[0].record["total"]
     row = f"{arch:<28}"
-    base = None
-    for name, cl in variants.items():
-        t = simulate_iteration(wl, cl).total
-        base = base or t
+    for c in res:
+        t = c.record["total"]
         row += f"{t:>14.2f}s ({base/t:4.2f}x)"
     print(row)
 

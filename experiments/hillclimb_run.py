@@ -1,16 +1,22 @@
 """§Perf hillclimb driver: named variants per cell, before/after roofline.
 
-Each variant = (name, hypothesis, cfg_transform, plan_transform).
+Each variant = (name, hypothesis, cfg_transform, plan_transform). The sweep
+is a repro.core.study StudySpec with a "variant" Axis and a custom
+``evaluate`` that runs the measured dry-run frontend (lower_cell) instead of
+the analytical simulator — same engine, different evaluator.
+
+Usage: python experiments/hillclimb_run.py <arch:shape> <variant>[,<variant>...]
 Results saved to experiments/hillclimb/<cell>_<variant>.json.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import dataclasses, json, sys, time
 
+from repro.core.study import Axis, StudySpec, run_study
 from repro.launch.dryrun import lower_cell
 
 CELL = sys.argv[1]          # e.g. internlm2-20b:train_4k
-VARIANT = sys.argv[2]       # variant name
+NAMES = sys.argv[2].split(",")  # one or more variant names
 
 arch, shape = CELL.split(":")
 
@@ -64,15 +70,34 @@ VARIANTS = {
     "dots": (None, remat_dots),
 }
 
-cfg_t, plan_t = VARIANTS[VARIANT]
-t0 = time.monotonic()
-_, info = lower_cell(arch, shape, multi_pod=False,
-                     cfg_transform=cfg_t, plan_transform=plan_t)
-info["variant"] = VARIANT
-tag = f"{arch}_{shape}_{VARIANT}"
-with open(f"experiments/hillclimb/{tag}.json", "w") as f:
-    json.dump(info, f, indent=1, default=str)
-print(f"{tag}: compute={info['compute_s']:.3f}s memory={info['memory_s']:.3f}s "
-      f"collective={info['collective_s']:.3f}s dom={info['dominant']} "
-      f"frac={info['roofline_fraction']:.3f} util={info['model_flops_util']:.3f} "
-      f"[{time.monotonic()-t0:.0f}s]")
+
+unknown = [n for n in NAMES if n not in VARIANTS]
+if unknown:
+    sys.exit(f"unknown variant(s) {unknown}; available: {sorted(VARIANTS)}")
+
+os.makedirs("experiments/hillclimb", exist_ok=True)
+
+
+def _evaluate(ctx):
+    # Persist + report per variant as soon as it finishes: a crash in a
+    # later variant must not discard earlier multi-minute dry-run results.
+    variant = ctx.point["variant"]
+    cfg_t, plan_t = VARIANTS[variant]
+    t0 = time.monotonic()
+    _, info = lower_cell(arch, shape, multi_pod=False,
+                         cfg_transform=cfg_t, plan_transform=plan_t)
+    info["variant"] = variant
+    info["wall_s"] = time.monotonic() - t0
+    tag = f"{arch}_{shape}_{variant}"
+    with open(f"experiments/hillclimb/{tag}.json", "w") as f:
+        json.dump(info, f, indent=1, default=str)
+    print(f"{tag}: compute={info['compute_s']:.3f}s memory={info['memory_s']:.3f}s "
+          f"collective={info['collective_s']:.3f}s dom={info['dominant']} "
+          f"frac={info['roofline_fraction']:.3f} util={info['model_flops_util']:.3f} "
+          f"[{info['wall_s']:.0f}s]", flush=True)
+    return info
+
+
+spec = StudySpec(name=f"hillclimb:{CELL}",
+                 axes=[Axis("variant", tuple(NAMES))], evaluate=_evaluate)
+run_study(spec)

@@ -18,4 +18,18 @@ from repro.core.memory import (  # noqa: F401
 from repro.core.roofline import attainable_perf, compute_delay  # noqa: F401
 from repro.core.simulator import IterationBreakdown, simulate_iteration  # noqa: F401
 from repro.core.strategy import best_strategy, sweep_strategies  # noqa: F401
+from repro.core.study import (  # noqa: F401
+    Axis,
+    ExplicitSpace,
+    FactorizationSpace,
+    GridSpace,
+    ParallelSpec,
+    PowerOfTwoSpace,
+    StrategySpace,
+    StudyResult,
+    StudySpec,
+    get_by_path,
+    run_study,
+    set_by_path,
+)
 from repro.core.workload import Workload, decompose, decompose_dlrm  # noqa: F401

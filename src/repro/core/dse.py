@@ -1,9 +1,10 @@
-"""COMET §V: design-space-exploration studies (one function per case study).
+"""COMET §V case studies as declarative :mod:`repro.core.study` specs.
 
-Each function returns plain dicts/lists so benchmarks can print CSV and tests
-can assert the paper's qualitative claims. All studies are embarrassingly
-parallel in principle; here they run serially in well under the paper's
-"few hours" turnaround (§V-E) because ASTRA-lite is analytical end-to-end.
+Each paper figure is now a ``<fig>_study(...) -> StudySpec`` builder (a few
+lines of axes x strategies over one engine) plus a thin wrapper keeping the
+seed function signature and return shape for existing callers/tests. New
+scenario axes are added by composing :class:`Axis`/:class:`StrategySpace` —
+not by writing another bespoke sweep loop.
 """
 
 from __future__ import annotations
@@ -17,34 +18,66 @@ from repro.core.cluster import (
     HierarchicalSwitch,
     TABLE_III_CLUSTERS,
 )
-from repro.core.simulator import simulate_iteration
-from repro.core.strategy import (
-    StrategyResult,
-    best_strategy,
-    sweep_strategies,
+from repro.core.strategy import StrategyResult
+from repro.core.study import (
+    Axis,
+    ParallelSpec,
+    PowerOfTwoSpace,
+    StudySpec,
+    as_strategy_space,
+    run_study,
 )
-from repro.core.workload import decompose, decompose_dlrm
+from repro.core.workload import decompose_dlrm
 
 GB = 1e9
+
+
+def _expand_axis(values_gbs: Sequence[float]) -> Axis:
+    """EM-bandwidth axis: infinite expanded capacity at the swept bandwidth
+    (capacity is sized to whatever the strategy needs — paper Fig. 9)."""
+    return Axis("bw_em_gbs", tuple(values_gbs),
+                apply=lambda cl, bw: cl.with_node(
+                    cl.node.with_expansion(cap=1e15, bw=bw * GB)))
 
 
 # --------------------------------------------------------------------- #
 # §V-B1 / Fig. 8: MP-DP sweep at fixed memory bandwidth
 # --------------------------------------------------------------------- #
 
+def mpdp_study(cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+               assume_infinite_capacity: bool = True,
+               min_mp: int = 1) -> StudySpec:
+    return StudySpec(
+        name="fig8-mpdp-sweep", model=cfg, shape=shape, cluster=cluster,
+        strategies=PowerOfTwoSpace(min_mp=min_mp),
+        mem_bw_override="local" if assume_infinite_capacity else None)
+
+
 def mpdp_sweep(cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
                assume_infinite_capacity: bool = True,
                min_mp: int = 1) -> List[StrategyResult]:
     """Training-time breakdown for each (MP, DP); §V-B1 assumes infinite
     per-node capacity at baseline bandwidth."""
-    override = cluster.node.local_bw if assume_infinite_capacity else None
-    return sweep_strategies(cfg, shape, cluster, mem_bw_override=override,
-                            min_mp=min_mp)
+    res = run_study(mpdp_study(cfg, shape, cluster,
+                               assume_infinite_capacity, min_mp))
+    return [StrategyResult(c.strategy.mp, c.strategy.dp, c.breakdown,
+                           c.footprint.total) for c in res]
 
 
 # --------------------------------------------------------------------- #
 # §V-B2 / Fig. 9: expanded-memory bandwidth heatmap
 # --------------------------------------------------------------------- #
+
+def memory_expansion_study(
+    cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+    em_bandwidths_gbs: Sequence[float] = (100, 250, 500, 750, 1000, 1500, 2000),
+    strategies: Optional[Sequence] = None,
+) -> StudySpec:
+    return StudySpec(
+        name="fig9-memory-expansion", model=cfg, shape=shape, cluster=cluster,
+        strategies=as_strategy_space(strategies) or PowerOfTwoSpace(),
+        axes=[_expand_axis(em_bandwidths_gbs)])
+
 
 def memory_expansion_heatmap(
     cfg: ModelConfig,
@@ -53,28 +86,29 @@ def memory_expansion_heatmap(
     em_bandwidths_gbs: Sequence[float] = (100, 250, 500, 750, 1000, 1500, 2000),
     strategies: Optional[Sequence[tuple]] = None,
 ) -> Dict[str, Dict[float, float]]:
-    """runtime[strategy_label][bw_EM_GBs], normalized by the caller.
-
-    Expanded capacity is sized to whatever the strategy needs (the y-axis is
-    a proxy for required capacity — paper Fig. 9)."""
-    from repro.core.strategy import power_of_two_strategies
-
-    strategies = strategies or power_of_two_strategies(cluster.num_nodes)
-    out: Dict[str, Dict[float, float]] = {}
-    for mp, dp in strategies:
-        label = f"MP{mp}_DP{dp}"
-        out[label] = {}
-        wl = decompose(cfg, shape, mp=mp, dp=dp)
-        for bw in em_bandwidths_gbs:
-            node = cluster.node.with_expansion(cap=1e15, bw=bw * GB)
-            br = simulate_iteration(wl, cluster.with_node(node))
-            out[label][bw] = br.total
-    return out
+    """runtime[strategy_label][bw_EM_GBs], normalized by the caller."""
+    res = run_study(memory_expansion_study(cfg, shape, cluster,
+                                           em_bandwidths_gbs, strategies))
+    return res.pivot(index="strategy", columns="bw_em_gbs")
 
 
 # --------------------------------------------------------------------- #
 # §V-B3 / Fig. 10: per-node compute-capability scaling
 # --------------------------------------------------------------------- #
+
+def compute_scaling_study(
+    cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+    mp: int, dp: int,
+    compute_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0, 8.0),
+    em_bandwidths_gbs: Sequence[float] = (500, 1000, 2000),
+) -> StudySpec:
+    return StudySpec(
+        name="fig10-compute-scaling", model=cfg, shape=shape, cluster=cluster,
+        strategies=ParallelSpec(mp=mp, dp=dp),
+        axes=[Axis("compute_x", tuple(compute_factors),
+                   path="node.peak_flops", mode="scale"),
+              _expand_axis(em_bandwidths_gbs)])
+
 
 def compute_scaling(
     cfg: ModelConfig,
@@ -86,20 +120,30 @@ def compute_scaling(
     em_bandwidths_gbs: Sequence[float] = (500, 1000, 2000),
 ) -> Dict[float, Dict[float, float]]:
     """runtime[compute_factor][bw_EM_GBs] for a fixed strategy."""
-    wl = decompose(cfg, shape, mp=mp, dp=dp)
-    out: Dict[float, Dict[float, float]] = {}
-    for f in compute_factors:
-        out[f] = {}
-        for bw in em_bandwidths_gbs:
-            node = cluster.node.scaled_compute(f).with_expansion(1e15, bw * GB)
-            br = simulate_iteration(wl, cluster.with_node(node))
-            out[f][bw] = br.total
-    return out
+    res = run_study(compute_scaling_study(cfg, shape, cluster, mp, dp,
+                                          compute_factors, em_bandwidths_gbs))
+    return res.pivot(index="compute_x", columns="bw_em_gbs")
 
 
 # --------------------------------------------------------------------- #
 # §V-B4 / Fig. 11: intra-/inter-pod bandwidth scaling
 # --------------------------------------------------------------------- #
+
+def network_scaling_study(
+    cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+    mp: int, dp: int,
+    intra_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
+    inter_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
+) -> StudySpec:
+    assert isinstance(cluster.topology, HierarchicalSwitch)
+    return StudySpec(
+        name="fig11-network-scaling", model=cfg, shape=shape, cluster=cluster,
+        strategies=ParallelSpec(mp=mp, dp=dp), mem_bw_override="local",
+        axes=[Axis("intra_x", tuple(intra_factors),
+                   path="topology.intra_bw", mode="scale"),
+              Axis("inter_x", tuple(inter_factors),
+                   path="topology.inter_bw", mode="scale")])
+
 
 def network_scaling(
     cfg: ModelConfig,
@@ -111,22 +155,35 @@ def network_scaling(
     inter_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
 ) -> Dict[tuple, float]:
     """runtime[(intra_factor, inter_factor)] at baseline compute/memory."""
-    assert isinstance(cluster.topology, HierarchicalSwitch)
-    wl = decompose(cfg, shape, mp=mp, dp=dp)
-    out: Dict[tuple, float] = {}
-    for fi in intra_factors:
-        for fo in inter_factors:
-            topo = cluster.topology.scaled(intra=fi, inter=fo)
-            br = simulate_iteration(
-                wl, cluster.with_topology(topo),
-                mem_bw_override=cluster.node.local_bw)
-            out[(fi, fo)] = br.total
-    return out
+    res = run_study(network_scaling_study(cfg, shape, cluster, mp, dp,
+                                          intra_factors, inter_factors))
+    return {(c.point["intra_x"], c.point["inter_x"]): c.breakdown.total
+            for c in res}
 
 
 # --------------------------------------------------------------------- #
 # §V-B4 / Fig. 12: fixed-aggregate bandwidth re-balancing
 # --------------------------------------------------------------------- #
+
+def bandwidth_rebalance_study(
+    cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+    mp: int, dp: int,
+    ratios: Sequence[float] = (1, 2, 3, 4, 5, 6, 7, 8, 9.6, 12, 16),
+) -> StudySpec:
+    assert isinstance(cluster.topology, HierarchicalSwitch)
+    agg = cluster.topology.intra_bw + cluster.topology.inter_bw
+
+    def rebalance(cl: ClusterConfig, r: float) -> ClusterConfig:
+        inter = agg / (1 + r)
+        return cl.with_topology(dataclasses.replace(
+            cl.topology, intra_bw=agg - inter, inter_bw=inter))
+
+    return StudySpec(
+        name="fig12-bandwidth-rebalance", model=cfg, shape=shape,
+        cluster=cluster, strategies=ParallelSpec(mp=mp, dp=dp),
+        mem_bw_override="local",
+        axes=[Axis("ratio", tuple(ratios), apply=rebalance)])
+
 
 def bandwidth_rebalance(
     cfg: ModelConfig,
@@ -139,25 +196,34 @@ def bandwidth_rebalance(
     """runtime[inter:intra ratio 1:r] with intra+inter = aggregate constant.
 
     Baseline DGX: 300 + 31.25 = 331.25 GB/s aggregate; ratio 1:9.6."""
-    assert isinstance(cluster.topology, HierarchicalSwitch)
-    agg = cluster.topology.intra_bw + cluster.topology.inter_bw
-    wl = decompose(cfg, shape, mp=mp, dp=dp)
-    out: Dict[float, float] = {}
-    for r in ratios:
-        inter = agg / (1 + r)
-        intra = agg - inter
-        topo = dataclasses.replace(cluster.topology, intra_bw=intra,
-                                   inter_bw=inter)
-        br = simulate_iteration(
-            wl, cluster.with_topology(topo),
-            mem_bw_override=cluster.node.local_bw)
-        out[r] = br.total
-    return out
+    res = run_study(bandwidth_rebalance_study(cfg, shape, cluster, mp, dp,
+                                              ratios))
+    return {c.point["ratio"]: c.breakdown.total for c in res}
 
 
 # --------------------------------------------------------------------- #
 # §V-C / Fig. 13: DLRM cluster-size sweep + memory-expansion study
 # --------------------------------------------------------------------- #
+
+def dlrm_cluster_size_study(dlrm_cfg, cluster: ClusterConfig,
+                            global_batch: int = 4096,
+                            node_counts: Sequence[int] = (64, 32, 16, 8),
+                            ) -> StudySpec:
+    from repro.core.memory import per_node_footprint
+    base = cluster
+    return StudySpec(
+        name="fig13a-dlrm-cluster-size", cluster=cluster,
+        axes=[Axis("nodes", tuple(node_counts),
+                   apply=lambda cl, n: dataclasses.replace(cl, num_nodes=n)
+                   .with_node(base.node.with_expansion(
+                       cap=1e15, bw=base.node.local_bw)))],
+        workload=lambda ctx: decompose_dlrm(dlrm_cfg, global_batch,
+                                            ctx.point["nodes"]),
+        workload_deps=("nodes",),
+        metrics={"footprint_gb":
+                 lambda ctx: per_node_footprint(ctx.workload,
+                                                base.node).total / GB})
+
 
 def dlrm_cluster_size_sweep(
     dlrm_cfg,
@@ -166,16 +232,32 @@ def dlrm_cluster_size_sweep(
     node_counts: Sequence[int] = (64, 32, 16, 8),
 ) -> Dict[int, dict]:
     """Single-instance DLRM training breakdown vs cluster size (Fig. 13a)."""
-    out: Dict[int, dict] = {}
-    for n in node_counts:
-        wl = decompose_dlrm(dlrm_cfg, global_batch, n)
-        sub = dataclasses.replace(cluster, num_nodes=n)
-        node = cluster.node.with_expansion(cap=1e15, bw=cluster.node.local_bw)
-        br = simulate_iteration(wl, sub.with_node(node))
-        from repro.core.memory import per_node_footprint
-        rep = per_node_footprint(wl, cluster.node)
-        out[n] = {**br.as_dict(), "footprint_gb": rep.total / GB}
-    return out
+    res = run_study(dlrm_cluster_size_study(dlrm_cfg, cluster, global_batch,
+                                            node_counts))
+    return {c.point["nodes"]: {**c.breakdown.as_dict(),
+                               "footprint_gb": c.record["footprint_gb"]}
+            for c in res}
+
+
+def dlrm_memory_expansion_study(
+    dlrm_cfg, cluster: ClusterConfig, global_batch: int = 4096,
+    total_nodes: int = 64, num_instances: int = 8,
+    em_bandwidths_gbs: Sequence[float] = (250, 500, 800, 1000, 1500, 2000),
+    nodes_per_instance_opts: Sequence[int] = (64, 32, 16, 8),
+) -> StudySpec:
+    def waves(n: int) -> int:
+        return -(-num_instances // max(1, total_nodes // n))
+
+    return StudySpec(
+        name="fig13b-dlrm-memory-expansion", cluster=cluster,
+        axes=[Axis("nodes_per_inst", tuple(nodes_per_instance_opts),
+                   path="num_nodes"),
+              _expand_axis(em_bandwidths_gbs)],
+        workload=lambda ctx: decompose_dlrm(dlrm_cfg, global_batch,
+                                            ctx.point["nodes_per_inst"]),
+        workload_deps=("nodes_per_inst",),
+        metrics={"turnaround": lambda ctx: ctx.breakdown.total
+                 * waves(ctx.point["nodes_per_inst"])})
 
 
 def dlrm_memory_expansion(
@@ -191,23 +273,59 @@ def dlrm_memory_expansion(
 
     Using fewer nodes per instance needs expanded memory but runs
     ceil(64/n) instances concurrently: turnaround = iter_time * n_waves."""
-    out: Dict[int, Dict[float, float]] = {}
-    for n in nodes_per_instance_opts:
-        out[n] = {}
-        concurrent = max(1, total_nodes // n)
-        waves = -(-num_instances // concurrent)
-        wl = decompose_dlrm(dlrm_cfg, global_batch, n)
-        sub = dataclasses.replace(cluster, num_nodes=n)
-        for bw in em_bandwidths_gbs:
-            node = cluster.node.with_expansion(cap=1e15, bw=bw * GB)
-            br = simulate_iteration(wl, sub.with_node(node))
-            out[n][bw] = br.total * waves
-    return out
+    res = run_study(dlrm_memory_expansion_study(
+        dlrm_cfg, cluster, global_batch, total_nodes, num_instances,
+        em_bandwidths_gbs, nodes_per_instance_opts))
+    return res.pivot(index="nodes_per_inst", columns="bw_em_gbs",
+                     values="turnaround")
 
 
 # --------------------------------------------------------------------- #
 # §V-D / Fig. 15: comparative training across 11 clusters
 # --------------------------------------------------------------------- #
+
+def _dlrm_nodes_per_instance(cl: ClusterConfig) -> int:
+    """Paper §V-D placement rule: mem0 -> 64, mem1 -> 16, mem2 -> 8."""
+    if cl.node.exp_cap > 0.75 * cl.node.local_cap:
+        return 16 if cl.node.exp_bw <= 500 * GB else 8
+    return min(64, cl.num_nodes)
+
+
+def cluster_comparison_studies(
+    transformer_cfg: ModelConfig, transformer_shape: ShapeConfig,
+    dlrm_cfg, dlrm_batch: int = 4096,
+    clusters: Optional[Dict[str, ClusterConfig]] = None,
+):
+    """(transformer study, dlrm study) over a cluster-valued axis."""
+    clusters = clusters or TABLE_III_CLUSTERS
+    # Workload depends only on the strategy, so decompositions are shared
+    # across same-size clusters (workload_deps stays empty).
+    transformer = StudySpec(
+        name="fig15-transformer", model=transformer_cfg,
+        shape=transformer_shape,
+        axes=[Axis("cluster", tuple(clusters),
+                   apply=lambda _, name: clusters[name])],
+        strategies=PowerOfTwoSpace())
+
+    def waves(cl: ClusterConfig) -> int:
+        concurrent = max(1, min(cl.num_nodes, 64)
+                         // _dlrm_nodes_per_instance(cl))
+        return -(-8 // concurrent)
+
+    dlrm = StudySpec(
+        name="fig15-dlrm",
+        axes=[Axis("cluster", tuple(clusters),
+                   apply=lambda _, name: dataclasses.replace(
+                       clusters[name],
+                       num_nodes=_dlrm_nodes_per_instance(clusters[name])))],
+        workload=lambda ctx: decompose_dlrm(
+            dlrm_cfg, dlrm_batch,
+            _dlrm_nodes_per_instance(clusters[ctx.point["cluster"]])),
+        workload_deps=("cluster",),
+        metrics={"turnaround": lambda ctx: ctx.breakdown.total
+                 * waves(clusters[ctx.point["cluster"]])})
+    return transformer, dlrm
+
 
 def cluster_comparison(
     transformer_cfg: ModelConfig,
@@ -221,26 +339,18 @@ def cluster_comparison(
     Transformer: best feasible (MP, DP) per cluster (capacity-constrained).
     DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8)."""
     clusters = clusters or TABLE_III_CLUSTERS
+    t_study, d_study = cluster_comparison_studies(
+        transformer_cfg, transformer_shape, dlrm_cfg, dlrm_batch, clusters)
+    t_res, d_res = run_study(t_study), run_study(d_study)
     out: Dict[str, Dict[str, float]] = {}
     for name, cl in clusters.items():
-        res: Dict[str, float] = {}
-        # ---- Transformer-1T on the whole cluster
-        sweep = sweep_strategies(transformer_cfg, transformer_shape, cl)
-        fit = [r for r in sweep
-               if r.footprint_bytes <= cl.node.total_cap and
-               r.breakdown.feasible]
-        res["transformer-1t"] = (min(r.total for r in fit) if fit
-                                 else float("inf"))
-        # ---- 8 DLRM instances
-        if cl.node.exp_cap > 0.75 * cl.node.local_cap:
-            nodes_per = 16 if cl.node.exp_bw <= 500 * GB else 8
-        else:
-            nodes_per = min(64, cl.num_nodes)
-        concurrent = max(1, min(cl.num_nodes, 64) // nodes_per)
-        waves = -(-8 // concurrent)
-        wl = decompose_dlrm(dlrm_cfg, dlrm_batch, nodes_per)
-        sub = dataclasses.replace(cl, num_nodes=nodes_per)
-        br = simulate_iteration(wl, sub)
-        res["dlrm"] = br.total * waves
-        out[name] = res
+        per = t_res.select(cluster=name)
+        fit = [c for c in per
+               if c.record["footprint_bytes"] <= cl.node.total_cap
+               and c.breakdown.feasible]
+        out[name] = {
+            "transformer-1t": (min(c.record["total"] for c in fit) if fit
+                               else float("inf")),
+            "dlrm": d_res.select(cluster=name).cells[0].record["turnaround"],
+        }
     return out

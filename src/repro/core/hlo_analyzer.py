@@ -264,8 +264,19 @@ class HloModule:
             if cond and cond.group(1) in self.computations:
                 c.add(self.comp_cost(cond.group(1)), trip)
             return c
-        if op in ("call", "custom-call", "reduce", "reduce-window",
-                  "scatter", "sort", "map", "select-and-scatter"):
+        if op in ("call", "custom-call"):
+            # A call executes its target once; the callee's own cost model
+            # (incl. slice-aware fusion reads of stacked scan params) is the
+            # traffic — charging the call's operands here would re-charge the
+            # full stacked tensors the callee only windows into.
+            called = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if called and called.group(1) in self.computations:
+                c.add(self.comp_cost(called.group(1)))
+                return c
+            c.bytes += operand_bytes() + out_bytes
+            return c
+        if op in ("reduce", "reduce-window", "scatter", "sort", "map",
+                  "select-and-scatter"):
             called = re.search(r"to_apply=%?([\w.\-]+)", line)
             if called and called.group(1) in self.computations:
                 # applied per output element (reduce/scatter/map)

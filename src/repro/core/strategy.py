@@ -1,30 +1,36 @@
-"""COMET §III-B: parallelization-strategy sweeps.
+"""COMET §III-B: parallelization-strategy sweeps (legacy surface).
 
-For a cluster of N nodes, sweep all power-of-two (MP, DP) with MP*DP = N,
-decompose the workload per combination, and simulate (§III-C).  This is the
-paper's Fig. 8 experiment engine; higher-level studies build on it (dse.py).
+The sweep engine now lives in :mod:`repro.core.study` — strategies are
+:class:`~repro.core.study.ParallelSpec` points enumerated by pluggable
+:class:`~repro.core.study.StrategySpace` implementations, and every sweep is
+a :class:`~repro.core.study.StudySpec` run through
+:func:`~repro.core.study.run_study`. This module keeps the seed API
+(``power_of_two_strategies``, ``sweep_strategies``, ``best_strategy``,
+``footprint_table``) as thin wrappers so existing callers and the paper's
+Fig. 6/8 benchmarks keep working unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig
-from repro.core.memory import per_node_footprint
-from repro.core.simulator import IterationBreakdown, simulate_iteration
+from repro.core.simulator import IterationBreakdown
+from repro.core.study import (
+    PowerOfTwoSpace,
+    StudySpec,
+    run_study,
+)
 from repro.core.workload import Workload, decompose
 
 
-def power_of_two_strategies(num_nodes: int) -> List[tuple]:
-    """All (MP, DP) with MP*DP = N, both powers of two (paper sweep)."""
-    out = []
-    mp = num_nodes
-    while mp >= 1:
-        out.append((mp, num_nodes // mp))
-        mp //= 2
-    return out
+def power_of_two_strategies(num_nodes: int) -> List[Tuple[int, int]]:
+    """All (MP, DP) with MP*DP = N, MP a power of two (paper sweep).
+
+    Legacy tuple form of ``PowerOfTwoSpace().specs(num_nodes)``."""
+    return [(s.mp, s.dp) for s in PowerOfTwoSpace().specs(num_nodes)]
 
 
 @dataclasses.dataclass
@@ -58,16 +64,17 @@ def sweep_strategies(
     ``mem_bw_override`` reproduces §V-B1's 'infinite capacity at baseline
     bandwidth' assumption when set to the node's local bandwidth."""
     decomp = workload_fn or decompose
-    results = []
-    for mp, dp in power_of_two_strategies(cluster.num_nodes):
-        if mp < min_mp or (max_mp is not None and mp > max_mp):
-            continue
-        wl = decomp(cfg, shape, mp=mp, dp=dp)
-        br = simulate_iteration(wl, cluster, zero_stage=zero_stage,
-                                mem_bw_override=mem_bw_override)
-        fp = per_node_footprint(wl, cluster.node, zero_stage)
-        results.append(StrategyResult(mp, dp, br, fp.total))
-    return results
+    spec = StudySpec(
+        name="strategy-sweep", model=cfg, shape=shape, cluster=cluster,
+        strategies=PowerOfTwoSpace(zero_stage=zero_stage, min_mp=min_mp,
+                                   max_mp=max_mp),
+        workload=lambda ctx: decomp(cfg, shape, mp=ctx.strategy.mp,
+                                    dp=ctx.strategy.dp),
+        mem_bw_override=mem_bw_override,
+    )
+    return [StrategyResult(c.strategy.mp, c.strategy.dp, c.breakdown,
+                           c.footprint.total)
+            for c in run_study(spec)]
 
 
 def best_strategy(results: List[StrategyResult],

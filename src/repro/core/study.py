@@ -1,0 +1,610 @@
+"""Declarative Study API: one engine for every COMET case study.
+
+COMET's methodology (§V) is a joint sweep over *parallelization strategies*
+and *cluster resource knobs*; this module turns that into data instead of
+per-figure functions:
+
+  * :class:`ParallelSpec` — a strategy point generalizing the paper's
+    (MP, DP) pairs to (MP, DP, PP, EP, ZeRO stage);
+  * :class:`StrategySpace` — pluggable strategy enumerators
+    (:class:`PowerOfTwoSpace` reproduces the paper sweep,
+    :class:`FactorizationSpace` adds non-power-of-two factorizations,
+    :class:`GridSpace` takes the cartesian product over all five axes,
+    :class:`ExplicitSpace` pins a hand-picked list);
+  * :class:`Axis` — one swept cluster knob, addressed by a dotted path into
+    the frozen config tree (``"node.exp_bw"``, ``"topology.intra_bw"``,
+    ``"num_nodes"``) or by an arbitrary ``apply(cluster, value)`` transform;
+  * :class:`StudySpec` — the study: base cluster + axes x strategies, an
+    optional custom workload builder and derived metrics;
+  * :func:`run_study` — the engine: enumerates cells, memoizes workload
+    decompositions and :func:`simulate_iteration` calls, optionally fans
+    cells out over processes, and returns a :class:`StudyResult` of tidy
+    records with ``normalize``/``pivot``/``to_csv``/``to_json``.
+
+``repro.core.dse`` expresses the paper's Fig. 8-13/15 case studies as
+StudySpecs over this engine; see ``docs/study_api.md`` for a custom study.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import itertools
+import json
+import os
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.memory import FootprintReport
+from repro.core.simulator import IterationBreakdown, simulate_iteration
+from repro.core.workload import Workload, decompose
+
+GB = 1e9
+
+DEFAULT_ZERO_STAGE = 2  # paper default (§IV-B): ZeRO-2 (os + g sharded)
+
+
+# ===================================================================== #
+# Strategy points and strategy spaces
+# ===================================================================== #
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ParallelSpec:
+    """One parallelization-strategy point.
+
+    Generalizes the paper's (MP, DP) pairs: PP (pipeline) and EP (expert)
+    degrees and the ZeRO stage are first-class so strategy spaces can
+    enumerate them; the analytical ``decompose`` currently models MP x DP
+    (+ its internal EP rule) — studies that sweep PP/EP supply their own
+    workload builder until the decomposition grows those axes natively.
+    """
+
+    mp: int = 1
+    dp: int = 1
+    pp: int = 1
+    ep: int = 1
+    zero_stage: int = DEFAULT_ZERO_STAGE
+
+    def __post_init__(self):
+        for f in ("mp", "dp", "pp", "ep"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1, got {getattr(self, f)}")
+        if not 0 <= self.zero_stage <= 3:
+            raise ValueError(f"zero_stage must be 0..3, got {self.zero_stage}")
+
+    @property
+    def num_nodes(self) -> int:
+        return self.mp * self.dp * self.pp * self.ep
+
+    @property
+    def label(self) -> str:
+        parts = [f"MP{self.mp}", f"DP{self.dp}"]
+        if self.pp > 1:
+            parts.append(f"PP{self.pp}")
+        if self.ep > 1:
+            parts.append(f"EP{self.ep}")
+        if self.zero_stage != DEFAULT_ZERO_STAGE:
+            parts.append(f"Z{self.zero_stage}")
+        return "_".join(parts)
+
+
+class StrategySpace:
+    """Enumerates the :class:`ParallelSpec` points to evaluate on a cluster."""
+
+    def specs(self, num_nodes: int) -> List[ParallelSpec]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerOfTwoSpace(StrategySpace):
+    """The paper's sweep: all (MP, DP) with MP * DP = N, MP a power of two,
+    MP descending (Fig. 8 ordering)."""
+
+    zero_stage: int = DEFAULT_ZERO_STAGE
+    min_mp: int = 1
+    max_mp: Optional[int] = None
+
+    def specs(self, num_nodes: int) -> List[ParallelSpec]:
+        out = []
+        mp = num_nodes
+        while mp >= 1:
+            if mp >= self.min_mp and (self.max_mp is None
+                                      or mp <= self.max_mp):
+                out.append(ParallelSpec(mp=mp, dp=num_nodes // mp,
+                                        zero_stage=self.zero_stage))
+            mp //= 2
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationSpace(StrategySpace):
+    """All exact factorizations MP * DP = N (non-power-of-two included),
+    MP descending — e.g. 12 nodes yields MP in (12, 6, 4, 3, 2, 1)."""
+
+    zero_stage: int = DEFAULT_ZERO_STAGE
+    min_mp: int = 1
+    max_mp: Optional[int] = None
+
+    def specs(self, num_nodes: int) -> List[ParallelSpec]:
+        out = []
+        for mp in range(num_nodes, 0, -1):
+            if num_nodes % mp:
+                continue
+            if mp < self.min_mp or (self.max_mp is not None
+                                    and mp > self.max_mp):
+                continue
+            out.append(ParallelSpec(mp=mp, dp=num_nodes // mp,
+                                    zero_stage=self.zero_stage))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpace(StrategySpace):
+    """Cartesian product over (mp, dp, pp, ep, zero_stage) value sets.
+
+    With ``fill_cluster`` (default) only points whose total degree equals
+    the cluster size survive — the paper's "use every node" constraint;
+    switch it off to study partial-cluster placements."""
+
+    mp: Sequence[int] = (1,)
+    dp: Sequence[int] = (1,)
+    pp: Sequence[int] = (1,)
+    ep: Sequence[int] = (1,)
+    zero_stages: Sequence[int] = (DEFAULT_ZERO_STAGE,)
+    fill_cluster: bool = True
+
+    def specs(self, num_nodes: int) -> List[ParallelSpec]:
+        out = []
+        for mp, dp, pp, ep, z in itertools.product(
+                self.mp, self.dp, self.pp, self.ep, self.zero_stages):
+            s = ParallelSpec(mp=mp, dp=dp, pp=pp, ep=ep, zero_stage=z)
+            if self.fill_cluster and s.num_nodes != num_nodes:
+                continue
+            out.append(s)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplicitSpace(StrategySpace):
+    """A fixed, ordered list of strategies (cluster size is not checked, so
+    partial-cluster what-ifs are allowed)."""
+
+    strategies: Tuple[ParallelSpec, ...]
+
+    def specs(self, num_nodes: int) -> List[ParallelSpec]:
+        return list(self.strategies)
+
+
+StrategiesLike = Union[StrategySpace, ParallelSpec, Iterable, None]
+
+
+def as_strategy_space(obj: StrategiesLike) -> Optional[StrategySpace]:
+    """Coerce user input to a StrategySpace: a space passes through, a
+    ParallelSpec or (mp, dp) tuple becomes a one-point ExplicitSpace, an
+    iterable of either becomes an ExplicitSpace, None stays None."""
+    if obj is None or isinstance(obj, StrategySpace):
+        return obj
+    if isinstance(obj, ParallelSpec):
+        return ExplicitSpace((obj,))
+    if isinstance(obj, tuple) and len(obj) == 2 \
+            and all(isinstance(x, int) for x in obj):
+        return ExplicitSpace((ParallelSpec(mp=obj[0], dp=obj[1]),))
+    specs = []
+    for item in obj:
+        if isinstance(item, ParallelSpec):
+            specs.append(item)
+        else:
+            mp, dp = item
+            specs.append(ParallelSpec(mp=mp, dp=dp))
+    return ExplicitSpace(tuple(specs))
+
+
+# ===================================================================== #
+# Dotted-path overrides over the frozen config tree
+# ===================================================================== #
+
+def get_by_path(obj: Any, path: str) -> Any:
+    """Read ``obj.a.b.c`` given ``"a.b.c"``."""
+    for part in path.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def set_by_path(obj: Any, path: str, value: Any, scale: bool = False) -> Any:
+    """Functionally update a nested frozen-dataclass field by dotted path.
+
+    ``set_by_path(cluster, "node.exp_bw", 1e12)`` returns a new cluster;
+    with ``scale=True`` the leaf is multiplied by ``value`` instead of
+    replaced (the paper's "2x intra-pod bandwidth" style knob)."""
+    head, _, rest = path.partition(".")
+    if not dataclasses.is_dataclass(obj):
+        raise TypeError(f"cannot override {path!r} on non-dataclass "
+                        f"{type(obj).__name__}")
+    if head not in {f.name for f in dataclasses.fields(obj)}:
+        raise AttributeError(
+            f"{type(obj).__name__} has no field {head!r} "
+            f"(available: {sorted(f.name for f in dataclasses.fields(obj))})")
+    if rest:
+        new_child = set_by_path(getattr(obj, head), rest, value, scale)
+        return dataclasses.replace(obj, **{head: new_child})
+    leaf = getattr(obj, head) * value if scale else value
+    return dataclasses.replace(obj, **{head: leaf})
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One swept knob: a name, its values, and how a value rewrites the
+    cluster — a dotted ``path`` (optionally ``mode="scale"``) or a custom
+    ``apply(cluster, value) -> cluster``. An axis with neither is a pure
+    label axis (it only parameterizes the workload builder or metrics)."""
+
+    name: str
+    values: Sequence[Any]
+    path: Optional[str] = None
+    mode: str = "set"                                  # "set" | "scale"
+    apply: Optional[Callable[[ClusterConfig, Any], ClusterConfig]] = None
+
+    def __post_init__(self):
+        if self.mode not in ("set", "scale"):
+            raise ValueError(f"mode must be 'set' or 'scale', got {self.mode!r}")
+        if self.path is not None and self.apply is not None:
+            raise ValueError("give either path or apply, not both")
+
+    def override(self, cluster: ClusterConfig, value: Any) -> ClusterConfig:
+        if self.apply is not None:
+            return self.apply(cluster, value)
+        if self.path is None:
+            return cluster
+        return set_by_path(cluster, self.path, value,
+                           scale=(self.mode == "scale"))
+
+
+# ===================================================================== #
+# Study specification
+# ===================================================================== #
+
+@dataclasses.dataclass
+class StudyContext:
+    """Everything a workload builder / metric / evaluator can see for one
+    cell. ``workload``/``breakdown``/``footprint`` are populated as the
+    engine progresses through the cell."""
+
+    spec: "StudySpec"
+    strategy: Optional[ParallelSpec]
+    point: Dict[str, Any]                      # axis name -> swept value
+    cluster: Optional[ClusterConfig]           # None only in evaluate studies
+    workload: Optional[Workload] = None
+    breakdown: Optional[IterationBreakdown] = None
+    footprint: Optional[FootprintReport] = None
+
+
+@dataclasses.dataclass
+class StudySpec:
+    """A declarative COMET study: strategies x axes on a base cluster.
+
+    ``workload`` (default: ``decompose(model, shape, mp, dp)``) may read
+    anything on the context; list the axis names it depends on in
+    ``workload_deps`` so the engine's memoizer keys decompositions
+    correctly. ``metrics`` adds derived record columns. ``evaluate``
+    replaces the simulator entirely (for studies over measured frontends —
+    see experiments/hillclimb_run.py)."""
+
+    name: str
+    cluster: Optional[ClusterConfig] = None
+    model: Optional[ModelConfig] = None
+    shape: Optional[ShapeConfig] = None
+    axes: Sequence[Axis] = ()
+    strategies: StrategiesLike = None
+    workload: Optional[Callable[[StudyContext], Workload]] = None
+    workload_deps: Sequence[str] = ()
+    mem_bw_override: Union[float, str, None] = None    # float | "local" | None
+    require_fit: bool = False
+    metrics: Dict[str, Callable[[StudyContext], Any]] = \
+        dataclasses.field(default_factory=dict)
+    evaluate: Optional[Callable[[StudyContext], Dict[str, Any]]] = None
+
+    # Record columns the engine itself writes; an axis shadowing one would
+    # silently corrupt select()/pivot()/best().
+    RESERVED_COLUMNS = frozenset({
+        "study", "strategy", "mp", "dp", "pp", "ep", "zero_stage",
+        "fp_compute", "fp_exposed_comm", "ig_compute", "ig_exposed_comm",
+        "wg_compute", "wg_exposed_comm", "optimizer", "total",
+        "feasible", "footprint_bytes", "mem_bw",
+    })
+
+    def __post_init__(self):
+        axis_names = [a.name for a in self.axes]
+        if len(set(axis_names)) != len(axis_names):
+            raise ValueError(f"duplicate axis names: {axis_names}")
+        reserved = set(axis_names) & self.RESERVED_COLUMNS
+        if reserved:
+            raise ValueError(
+                f"axis names shadow engine record columns: {sorted(reserved)}")
+        unknown = set(self.workload_deps) - set(axis_names)
+        if unknown:
+            raise ValueError(f"workload_deps name unknown axes: {unknown}")
+        if isinstance(self.mem_bw_override, str) \
+                and self.mem_bw_override != "local":
+            raise ValueError("mem_bw_override must be a float, None, "
+                             "or the string 'local'")
+
+
+@dataclasses.dataclass
+class CellResult:
+    """One evaluated cell: its identity plus the raw model objects (for
+    programmatic consumers) and the flat ``record`` (for tidy output)."""
+
+    strategy: Optional[ParallelSpec]
+    point: Dict[str, Any]
+    cluster: Optional[ClusterConfig]
+    breakdown: Optional[IterationBreakdown]
+    footprint: Optional[FootprintReport]
+    record: Dict[str, Any]
+
+
+# ===================================================================== #
+# Engine
+# ===================================================================== #
+
+def _cells(spec: StudySpec) -> List[Tuple[Optional[ParallelSpec],
+                                          Dict[str, Any], ClusterConfig]]:
+    """Axis-product-major enumeration; strategies are resolved against each
+    cell's *overridden* cluster so a cluster-valued axis (Fig. 15) gets the
+    right per-cluster strategy list."""
+    space = as_strategy_space(spec.strategies)
+    names = [a.name for a in spec.axes]
+    out = []
+    for combo in itertools.product(*(a.values for a in spec.axes)):
+        point = dict(zip(names, combo))
+        cluster = spec.cluster
+        for axis, value in zip(spec.axes, combo):
+            cluster = axis.override(cluster, value)
+        if cluster is None and spec.evaluate is None:
+            raise ValueError(
+                f"study {spec.name!r}: no cluster — set StudySpec.cluster "
+                "or provide it via an axis apply() (only evaluate-based "
+                "studies may run clusterless)")
+        if space is None:
+            out.append((None, point, cluster))
+        else:
+            n = cluster.num_nodes if cluster is not None else 0
+            for strategy in space.specs(n):
+                out.append((strategy, point, cluster))
+    return out
+
+
+def _default_workload(ctx: StudyContext) -> Workload:
+    s = ctx.strategy or ParallelSpec()
+    if s.pp > 1 or s.ep > 1:
+        raise ValueError(
+            f"strategy {s.label}: the default analytical decomposition "
+            "models MP x DP only — supply StudySpec.workload to study "
+            "PP/EP degrees (see ROADMAP open items)")
+    if ctx.spec.model is None or ctx.spec.shape is None:
+        raise ValueError(f"study {ctx.spec.name!r}: set model+shape or "
+                         "provide a workload builder")
+    return decompose(ctx.spec.model, ctx.spec.shape, mp=s.mp, dp=s.dp)
+
+
+def _workload_key(spec: StudySpec, strategy: Optional[ParallelSpec],
+                  point: Dict[str, Any]) -> tuple:
+    return (strategy,
+            tuple((n, point[n]) for n in spec.workload_deps))
+
+
+def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
+               point: Dict[str, Any], cluster: ClusterConfig,
+               wl_memo: dict, sim_memo: dict) -> CellResult:
+    ctx = StudyContext(spec=spec, strategy=strategy, point=dict(point),
+                       cluster=cluster)
+    base: Dict[str, Any] = {"study": spec.name}
+    if strategy is not None:
+        base.update(strategy=strategy.label, mp=strategy.mp, dp=strategy.dp,
+                    pp=strategy.pp, ep=strategy.ep,
+                    zero_stage=strategy.zero_stage)
+    base.update(point)
+
+    if spec.evaluate is not None:
+        record = {**base, **spec.evaluate(ctx)}
+        for mname, fn in spec.metrics.items():
+            record[mname] = fn(ctx)
+        return CellResult(strategy, ctx.point, cluster, None, None, record)
+
+    wkey = _workload_key(spec, strategy, point)
+    if wkey not in wl_memo:
+        wl_memo[wkey] = (spec.workload or _default_workload)(ctx)
+    ctx.workload = wl_memo[wkey]
+
+    override = spec.mem_bw_override
+    if override == "local":
+        override = cluster.node.local_bw
+    zero = strategy.zero_stage if strategy is not None else DEFAULT_ZERO_STAGE
+    skey = (wkey, cluster, zero, override, spec.require_fit)
+    if skey not in sim_memo:
+        sim_memo[skey] = simulate_iteration(
+            ctx.workload, cluster, zero_stage=zero,
+            mem_bw_override=override, require_fit=spec.require_fit)
+    br = sim_memo[skey]
+    ctx.breakdown = br
+    ctx.footprint = br.footprint
+
+    record = {**base, **br.as_dict(),
+              "feasible": br.feasible,
+              "footprint_bytes": br.footprint.total,
+              "mem_bw": br.mem_bw}
+    for mname, fn in spec.metrics.items():
+        record[mname] = fn(ctx)
+    return CellResult(strategy, ctx.point, cluster, br, br.footprint, record)
+
+
+# --- optional process-parallel execution ------------------------------- #
+# Cells are embarrassingly parallel (§V-E). Closures in specs don't pickle,
+# so the spec travels to fork()ed workers via this module global and only
+# cell indices cross the pipe. The memo dicts are per-worker-process: each
+# fork inherits them empty and fills its own copy, so a worker still
+# decomposes each strategy once across the cells it is handed.
+_FORK_SPEC: Optional[StudySpec] = None
+_FORK_CELLS: List[tuple] = []
+_FORK_WL_MEMO: dict = {}
+_FORK_SIM_MEMO: dict = {}
+
+
+def _eval_cell_by_index(i: int) -> CellResult:
+    strategy, point, cluster = _FORK_CELLS[i]
+    return _eval_cell(_FORK_SPEC, strategy, point, cluster,
+                      _FORK_WL_MEMO, _FORK_SIM_MEMO)
+
+
+def run_study(spec: StudySpec, processes: Optional[int] = None) -> "StudyResult":
+    """Evaluate every cell of ``spec``; memoizes workload decompositions
+    (keyed by strategy + ``workload_deps``) and simulator calls (keyed by
+    workload + overridden cluster + ZeRO stage + bandwidth override).
+
+    ``processes > 1`` fans cells out over a fork()-based process pool
+    (POSIX only; falls back to serial elsewhere)."""
+    global _FORK_SPEC, _FORK_CELLS
+    cells = _cells(spec)
+    if processes and processes > 1 and hasattr(os, "fork") \
+            and _FORK_SPEC is None:
+        # The globals make the fork path non-reentrant; a nested or
+        # concurrent parallel run_study falls back to serial instead of
+        # clobbering the in-flight study's state.
+        import multiprocessing
+        _FORK_SPEC, _FORK_CELLS = spec, cells
+        _FORK_WL_MEMO.clear()
+        _FORK_SIM_MEMO.clear()
+        try:
+            ctx = multiprocessing.get_context("fork")
+            with ctx.Pool(processes=min(processes, len(cells) or 1)) as pool:
+                results = pool.map(_eval_cell_by_index, range(len(cells)))
+            return StudyResult(spec=spec, cells=results)
+        finally:
+            _FORK_SPEC, _FORK_CELLS = None, []
+    wl_memo: dict = {}
+    sim_memo: dict = {}
+    results = [_eval_cell(spec, s, p, cl, wl_memo, sim_memo)
+               for s, p, cl in cells]
+    return StudyResult(spec=spec, cells=results)
+
+
+# ===================================================================== #
+# Results
+# ===================================================================== #
+
+@dataclasses.dataclass
+class StudyResult:
+    """Tidy study output: one record per evaluated cell."""
+
+    spec: StudySpec
+    cells: List[CellResult]
+
+    # -- container protocol -------------------------------------------- #
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def __iter__(self):
+        return iter(self.cells)
+
+    @property
+    def records(self) -> List[Dict[str, Any]]:
+        return [c.record for c in self.cells]
+
+    # -- selection / reduction ----------------------------------------- #
+    def select(self, **where: Any) -> "StudyResult":
+        """Cells whose record matches every ``column=value`` filter."""
+        kept = [c for c in self.cells
+                if all(c.record.get(k) == v for k, v in where.items())]
+        return StudyResult(spec=self.spec, cells=kept)
+
+    def column(self, name: str) -> List[Any]:
+        return [c.record.get(name) for c in self.cells]
+
+    def best(self, metric: str = "total",
+             require_fit_bytes: Optional[float] = None) -> CellResult:
+        """Cell minimizing ``metric``, optionally capacity-constrained."""
+        pool = self.cells
+        if require_fit_bytes is not None:
+            pool = [c for c in pool
+                    if c.record.get("footprint_bytes", 0) <= require_fit_bytes]
+        if not pool:
+            raise ValueError("no cell satisfies the constraint")
+        return min(pool, key=lambda c: c.record[metric])
+
+    # -- derived columns ------------------------------------------------ #
+    def normalize(self, metric: str = "total",
+                  value: Optional[float] = None,
+                  **where: Any) -> "StudyResult":
+        """Add ``<metric>_norm`` = metric / baseline to every record.
+
+        The baseline is ``value`` if given, else the ``metric`` of the
+        single cell selected by the ``where`` filters."""
+        if value is None:
+            base_cells = self.select(**where).cells
+            if len(base_cells) != 1:
+                raise ValueError(
+                    f"normalize baseline filter matched "
+                    f"{len(base_cells)} cells, need exactly 1")
+            value = base_cells[0].record[metric]
+        for c in self.cells:
+            c.record[f"{metric}_norm"] = c.record[metric] / value
+        return self
+
+    # -- reshaping / export --------------------------------------------- #
+    def pivot(self, index: str, columns: str,
+              values: str = "total") -> Dict[Any, Dict[Any, Any]]:
+        """records -> nested dict ``out[record[index]][record[columns]]``.
+
+        Raises if (index, columns) does not uniquely identify a cell —
+        ``select()`` the result down to a unique slice first."""
+        out: Dict[Any, Dict[Any, Any]] = {}
+        for c in self.cells:
+            r = c.record
+            row = out.setdefault(r[index], {})
+            if r[columns] in row:
+                raise ValueError(
+                    f"pivot({index!r}, {columns!r}) is ambiguous: multiple "
+                    f"cells at ({r[index]!r}, {r[columns]!r}) — select() a "
+                    "unique slice before pivoting")
+            row[r[columns]] = r[values]
+        return out
+
+    def _columns(self) -> List[str]:
+        cols: List[str] = []
+        for c in self.cells:
+            for k in c.record:
+                if k not in cols:
+                    cols.append(k)
+        return cols
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        buf = io.StringIO()
+        cols = self._columns()
+        w = csv.DictWriter(buf, fieldnames=cols)
+        w.writeheader()
+        for c in self.cells:
+            w.writerow({k: c.record.get(k, "") for k in cols})
+        text = buf.getvalue()
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps({"study": self.spec.name, "records": self.records},
+                          indent=1, default=str)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

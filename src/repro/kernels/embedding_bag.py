@@ -21,8 +21,11 @@ def _bag_kernel(idx_ref, table_ref, o_ref):
 
     def body(i, acc):
         row = idx_ref[0, 0, i]
+        # Index the leading (blocked) dim with a length-1 dslice too: a bare
+        # int here trips pallas' load discharge rule (no .shape on int).
         return acc + pl.load(
-            table_ref, (0, pl.dslice(row, 1), slice(None)))[0].astype(
+            table_ref,
+            (pl.dslice(0, 1), pl.dslice(row, 1), slice(None)))[0, 0].astype(
                 jnp.float32)
 
     e = table_ref.shape[-1]

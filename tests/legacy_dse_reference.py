@@ -1,0 +1,272 @@
+"""Frozen copy of the seed `repro.core.dse` (pre-Study-API) used as the
+golden reference: tests/test_study.py asserts the declarative rewrites in
+`repro.core.dse` reproduce these numbers bit-for-bit. Do not modernize.
+
+Original docstring:
+COMET §V: design-space-exploration studies (one function per case study).
+
+Each function returns plain dicts/lists so benchmarks can print CSV and tests
+can assert the paper's qualitative claims. All studies are embarrassingly
+parallel in principle; here they run serially in well under the paper's
+"few hours" turnaround (§V-E) because ASTRA-lite is analytical end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.cluster import (
+    ClusterConfig,
+    HierarchicalSwitch,
+    TABLE_III_CLUSTERS,
+)
+from repro.core.memory import per_node_footprint
+from repro.core.simulator import simulate_iteration
+from repro.core.strategy import StrategyResult
+from repro.core.workload import decompose, decompose_dlrm
+
+GB = 1e9
+
+
+def power_of_two_strategies(num_nodes):
+    """Seed copy of the pre-Study-API enumerator."""
+    out = []
+    mp = num_nodes
+    while mp >= 1:
+        out.append((mp, num_nodes // mp))
+        mp //= 2
+    return out
+
+
+def sweep_strategies(cfg, shape, cluster, zero_stage=2, mem_bw_override=None,
+                     min_mp=1, max_mp=None, workload_fn=None):
+    """Seed copy of the pre-Study-API Fig. 8 engine."""
+    decomp = workload_fn or decompose
+    results = []
+    for mp, dp in power_of_two_strategies(cluster.num_nodes):
+        if mp < min_mp or (max_mp is not None and mp > max_mp):
+            continue
+        wl = decomp(cfg, shape, mp=mp, dp=dp)
+        br = simulate_iteration(wl, cluster, zero_stage=zero_stage,
+                                mem_bw_override=mem_bw_override)
+        fp = per_node_footprint(wl, cluster.node, zero_stage)
+        results.append(StrategyResult(mp, dp, br, fp.total))
+    return results
+
+
+# --------------------------------------------------------------------- #
+# §V-B1 / Fig. 8: MP-DP sweep at fixed memory bandwidth
+# --------------------------------------------------------------------- #
+
+def mpdp_sweep(cfg: ModelConfig, shape: ShapeConfig, cluster: ClusterConfig,
+               assume_infinite_capacity: bool = True,
+               min_mp: int = 1) -> List[StrategyResult]:
+    """Training-time breakdown for each (MP, DP); §V-B1 assumes infinite
+    per-node capacity at baseline bandwidth."""
+    override = cluster.node.local_bw if assume_infinite_capacity else None
+    return sweep_strategies(cfg, shape, cluster, mem_bw_override=override,
+                            min_mp=min_mp)
+
+
+# --------------------------------------------------------------------- #
+# §V-B2 / Fig. 9: expanded-memory bandwidth heatmap
+# --------------------------------------------------------------------- #
+
+def memory_expansion_heatmap(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    cluster: ClusterConfig,
+    em_bandwidths_gbs: Sequence[float] = (100, 250, 500, 750, 1000, 1500, 2000),
+    strategies: Optional[Sequence[tuple]] = None,
+) -> Dict[str, Dict[float, float]]:
+    """runtime[strategy_label][bw_EM_GBs], normalized by the caller.
+
+    Expanded capacity is sized to whatever the strategy needs (the y-axis is
+    a proxy for required capacity — paper Fig. 9)."""
+    strategies = strategies or power_of_two_strategies(cluster.num_nodes)
+    out: Dict[str, Dict[float, float]] = {}
+    for mp, dp in strategies:
+        label = f"MP{mp}_DP{dp}"
+        out[label] = {}
+        wl = decompose(cfg, shape, mp=mp, dp=dp)
+        for bw in em_bandwidths_gbs:
+            node = cluster.node.with_expansion(cap=1e15, bw=bw * GB)
+            br = simulate_iteration(wl, cluster.with_node(node))
+            out[label][bw] = br.total
+    return out
+
+
+# --------------------------------------------------------------------- #
+# §V-B3 / Fig. 10: per-node compute-capability scaling
+# --------------------------------------------------------------------- #
+
+def compute_scaling(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    cluster: ClusterConfig,
+    mp: int,
+    dp: int,
+    compute_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0, 8.0),
+    em_bandwidths_gbs: Sequence[float] = (500, 1000, 2000),
+) -> Dict[float, Dict[float, float]]:
+    """runtime[compute_factor][bw_EM_GBs] for a fixed strategy."""
+    wl = decompose(cfg, shape, mp=mp, dp=dp)
+    out: Dict[float, Dict[float, float]] = {}
+    for f in compute_factors:
+        out[f] = {}
+        for bw in em_bandwidths_gbs:
+            node = cluster.node.scaled_compute(f).with_expansion(1e15, bw * GB)
+            br = simulate_iteration(wl, cluster.with_node(node))
+            out[f][bw] = br.total
+    return out
+
+
+# --------------------------------------------------------------------- #
+# §V-B4 / Fig. 11: intra-/inter-pod bandwidth scaling
+# --------------------------------------------------------------------- #
+
+def network_scaling(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    cluster: ClusterConfig,
+    mp: int,
+    dp: int,
+    intra_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
+    inter_factors: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
+) -> Dict[tuple, float]:
+    """runtime[(intra_factor, inter_factor)] at baseline compute/memory."""
+    assert isinstance(cluster.topology, HierarchicalSwitch)
+    wl = decompose(cfg, shape, mp=mp, dp=dp)
+    out: Dict[tuple, float] = {}
+    for fi in intra_factors:
+        for fo in inter_factors:
+            topo = cluster.topology.scaled(intra=fi, inter=fo)
+            br = simulate_iteration(
+                wl, cluster.with_topology(topo),
+                mem_bw_override=cluster.node.local_bw)
+            out[(fi, fo)] = br.total
+    return out
+
+
+# --------------------------------------------------------------------- #
+# §V-B4 / Fig. 12: fixed-aggregate bandwidth re-balancing
+# --------------------------------------------------------------------- #
+
+def bandwidth_rebalance(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    cluster: ClusterConfig,
+    mp: int,
+    dp: int,
+    ratios: Sequence[float] = (1, 2, 3, 4, 5, 6, 7, 8, 9.6, 12, 16),
+) -> Dict[float, float]:
+    """runtime[inter:intra ratio 1:r] with intra+inter = aggregate constant.
+
+    Baseline DGX: 300 + 31.25 = 331.25 GB/s aggregate; ratio 1:9.6."""
+    assert isinstance(cluster.topology, HierarchicalSwitch)
+    agg = cluster.topology.intra_bw + cluster.topology.inter_bw
+    wl = decompose(cfg, shape, mp=mp, dp=dp)
+    out: Dict[float, float] = {}
+    for r in ratios:
+        inter = agg / (1 + r)
+        intra = agg - inter
+        topo = dataclasses.replace(cluster.topology, intra_bw=intra,
+                                   inter_bw=inter)
+        br = simulate_iteration(
+            wl, cluster.with_topology(topo),
+            mem_bw_override=cluster.node.local_bw)
+        out[r] = br.total
+    return out
+
+
+# --------------------------------------------------------------------- #
+# §V-C / Fig. 13: DLRM cluster-size sweep + memory-expansion study
+# --------------------------------------------------------------------- #
+
+def dlrm_cluster_size_sweep(
+    dlrm_cfg,
+    cluster: ClusterConfig,
+    global_batch: int = 4096,
+    node_counts: Sequence[int] = (64, 32, 16, 8),
+) -> Dict[int, dict]:
+    """Single-instance DLRM training breakdown vs cluster size (Fig. 13a)."""
+    out: Dict[int, dict] = {}
+    for n in node_counts:
+        wl = decompose_dlrm(dlrm_cfg, global_batch, n)
+        sub = dataclasses.replace(cluster, num_nodes=n)
+        node = cluster.node.with_expansion(cap=1e15, bw=cluster.node.local_bw)
+        br = simulate_iteration(wl, sub.with_node(node))
+        from repro.core.memory import per_node_footprint
+        rep = per_node_footprint(wl, cluster.node)
+        out[n] = {**br.as_dict(), "footprint_gb": rep.total / GB}
+    return out
+
+
+def dlrm_memory_expansion(
+    dlrm_cfg,
+    cluster: ClusterConfig,
+    global_batch: int = 4096,
+    total_nodes: int = 64,
+    num_instances: int = 8,
+    em_bandwidths_gbs: Sequence[float] = (250, 500, 800, 1000, 1500, 2000),
+    nodes_per_instance_opts: Sequence[int] = (64, 32, 16, 8),
+) -> Dict[int, Dict[float, float]]:
+    """Fig. 13b: turnaround of ``num_instances`` DLRMs on 64 nodes.
+
+    Using fewer nodes per instance needs expanded memory but runs
+    ceil(64/n) instances concurrently: turnaround = iter_time * n_waves."""
+    out: Dict[int, Dict[float, float]] = {}
+    for n in nodes_per_instance_opts:
+        out[n] = {}
+        concurrent = max(1, total_nodes // n)
+        waves = -(-num_instances // concurrent)
+        wl = decompose_dlrm(dlrm_cfg, global_batch, n)
+        sub = dataclasses.replace(cluster, num_nodes=n)
+        for bw in em_bandwidths_gbs:
+            node = cluster.node.with_expansion(cap=1e15, bw=bw * GB)
+            br = simulate_iteration(wl, sub.with_node(node))
+            out[n][bw] = br.total * waves
+    return out
+
+
+# --------------------------------------------------------------------- #
+# §V-D / Fig. 15: comparative training across 11 clusters
+# --------------------------------------------------------------------- #
+
+def cluster_comparison(
+    transformer_cfg: ModelConfig,
+    transformer_shape: ShapeConfig,
+    dlrm_cfg,
+    dlrm_batch: int = 4096,
+    clusters: Optional[Dict[str, ClusterConfig]] = None,
+) -> Dict[str, Dict[str, float]]:
+    """runtime[cluster][workload] for Transformer-1T + 8 DLRM instances.
+
+    Transformer: best feasible (MP, DP) per cluster (capacity-constrained).
+    DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8)."""
+    clusters = clusters or TABLE_III_CLUSTERS
+    out: Dict[str, Dict[str, float]] = {}
+    for name, cl in clusters.items():
+        res: Dict[str, float] = {}
+        # ---- Transformer-1T on the whole cluster
+        sweep = sweep_strategies(transformer_cfg, transformer_shape, cl)
+        fit = [r for r in sweep
+               if r.footprint_bytes <= cl.node.total_cap and
+               r.breakdown.feasible]
+        res["transformer-1t"] = (min(r.total for r in fit) if fit
+                                 else float("inf"))
+        # ---- 8 DLRM instances
+        if cl.node.exp_cap > 0.75 * cl.node.local_cap:
+            nodes_per = 16 if cl.node.exp_bw <= 500 * GB else 8
+        else:
+            nodes_per = min(64, cl.num_nodes)
+        concurrent = max(1, min(cl.num_nodes, 64) // nodes_per)
+        waves = -(-8 // concurrent)
+        wl = decompose_dlrm(dlrm_cfg, dlrm_batch, nodes_per)
+        sub = dataclasses.replace(cl, num_nodes=nodes_per)
+        br = simulate_iteration(wl, sub)
+        res["dlrm"] = br.total * waves
+        out[name] = res
+    return out

@@ -1,0 +1,394 @@
+"""Tests for the declarative Study API (repro.core.study).
+
+Golden-equivalence: every rewritten ``repro.core.dse`` case study must
+reproduce the frozen seed implementation (tests/legacy_dse_reference.py)
+bit-for-bit on transformer-1t / dlrm-1p2t. Plus unit coverage for
+dotted-path overrides, StrategySpace enumeration (incl. non-power-of-two
+and PP/EP/ZeRO specs) and the run_study engine itself.
+"""
+
+import dataclasses
+
+import pytest
+
+import legacy_dse_reference as legacy
+from repro.configs import get_config, get_dlrm_config
+from repro.configs.base import ShapeConfig
+from repro.core import dse
+from repro.core.cluster import BASELINE_DGX_A100, NodeConfig
+from repro.core.study import (
+    Axis,
+    ExplicitSpace,
+    FactorizationSpace,
+    GridSpace,
+    ParallelSpec,
+    PowerOfTwoSpace,
+    StudySpec,
+    as_strategy_space,
+    get_by_path,
+    run_study,
+    set_by_path,
+)
+
+GB = 1e9
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return get_config("transformer-1t")
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("smollm-135m")
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    return dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+
+
+# ===================================================================== #
+# ParallelSpec
+# ===================================================================== #
+
+class TestParallelSpec:
+    def test_label_matches_legacy_form(self):
+        assert ParallelSpec(mp=8, dp=128).label == "MP8_DP128"
+
+    def test_label_extends_for_new_axes(self):
+        s = ParallelSpec(mp=4, dp=8, pp=2, ep=2, zero_stage=3)
+        assert s.label == "MP4_DP8_PP2_EP2_Z3"
+        assert s.num_nodes == 4 * 8 * 2 * 2
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ParallelSpec(mp=0)
+        with pytest.raises(ValueError):
+            ParallelSpec(zero_stage=4)
+
+
+# ===================================================================== #
+# StrategySpace enumeration
+# ===================================================================== #
+
+class TestStrategySpaces:
+    def test_power_of_two_matches_seed_sweep(self):
+        specs = PowerOfTwoSpace().specs(1024)
+        assert [(s.mp, s.dp) for s in specs] == \
+            legacy.power_of_two_strategies(1024)
+
+    def test_power_of_two_min_max_mp(self):
+        specs = PowerOfTwoSpace(min_mp=8, max_mp=64).specs(1024)
+        assert [s.mp for s in specs] == [64, 32, 16, 8]
+
+    def test_factorization_includes_non_power_of_two(self):
+        specs = FactorizationSpace().specs(12)
+        assert [(s.mp, s.dp) for s in specs] == \
+            [(12, 1), (6, 2), (4, 3), (3, 4), (2, 6), (1, 12)]
+
+    def test_grid_space_pp_ep(self):
+        space = GridSpace(mp=(2, 4), dp=(2, 4), pp=(1, 2), ep=(1, 2))
+        specs = space.specs(16)
+        assert all(s.num_nodes == 16 for s in specs)
+        assert ParallelSpec(mp=2, dp=2, pp=2, ep=2) in specs
+        assert ParallelSpec(mp=2, dp=4, pp=2, ep=1) in specs
+        assert len(specs) == 6
+
+    def test_grid_space_zero_stages(self):
+        specs = GridSpace(mp=(8,), dp=(1,), zero_stages=(0, 1, 2, 3),
+                          fill_cluster=False).specs(999)
+        assert [s.zero_stage for s in specs] == [0, 1, 2, 3]
+
+    def test_as_strategy_space_coercions(self):
+        assert as_strategy_space(None) is None
+        one = as_strategy_space(ParallelSpec(mp=2, dp=2))
+        assert isinstance(one, ExplicitSpace) and len(one.specs(0)) == 1
+        tup = as_strategy_space([(8, 128), (64, 16)])
+        assert [(s.mp, s.dp) for s in tup.specs(0)] == [(8, 128), (64, 16)]
+        bare = as_strategy_space((8, 128))  # a single bare (mp, dp) pair
+        assert [(s.mp, s.dp) for s in bare.specs(0)] == [(8, 128)]
+
+
+# ===================================================================== #
+# Dotted-path overrides
+# ===================================================================== #
+
+class TestDottedPathOverrides:
+    def test_set_nested_leaf(self):
+        cl = set_by_path(BASELINE_DGX_A100, "node.exp_bw", 123.0)
+        assert cl.node.exp_bw == 123.0
+        assert BASELINE_DGX_A100.node.exp_bw == 0.0  # original untouched
+
+    def test_set_topology_leaf(self):
+        cl = set_by_path(BASELINE_DGX_A100, "topology.intra_bw", 5.0)
+        assert cl.topology.intra_bw == 5.0
+        assert cl.topology.inter_bw == BASELINE_DGX_A100.topology.inter_bw
+
+    def test_set_top_level(self):
+        assert set_by_path(BASELINE_DGX_A100, "num_nodes", 8).num_nodes == 8
+
+    def test_scale_mode(self):
+        cl = set_by_path(BASELINE_DGX_A100, "node.peak_flops", 2.0,
+                         scale=True)
+        assert cl.node.peak_flops == 2 * BASELINE_DGX_A100.node.peak_flops
+
+    def test_get_by_path(self):
+        assert get_by_path(BASELINE_DGX_A100, "topology.pod_size") == 8
+
+    def test_unknown_field_raises(self):
+        with pytest.raises(AttributeError, match="no field 'nope'"):
+            set_by_path(BASELINE_DGX_A100, "node.nope", 1.0)
+
+    def test_non_dataclass_raises(self):
+        with pytest.raises(TypeError):
+            set_by_path(BASELINE_DGX_A100, "name.upper", 1.0)
+
+    def test_axis_rejects_path_plus_apply(self):
+        with pytest.raises(ValueError):
+            Axis("x", (1,), path="num_nodes", apply=lambda cl, v: cl)
+
+
+# ===================================================================== #
+# run_study engine
+# ===================================================================== #
+
+class TestRunStudy:
+    def test_axis_sweep_records(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=4, dp=2),
+            axes=[Axis("bw_x", (0.5, 1.0, 2.0), path="node.local_bw",
+                       mode="scale")]))
+        assert len(res) == 3
+        assert res.column("bw_x") == [0.5, 1.0, 2.0]
+        totals = res.column("total")
+        assert totals[0] >= totals[1] >= totals[2]  # more bw never slower
+
+    def test_strategy_space_cross_axes(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=PowerOfTwoSpace(),
+            axes=[Axis("f", (1.0, 2.0), path="node.peak_flops",
+                       mode="scale")]))
+        assert len(res) == 2 * 4  # 2 axis values x (MP8,4,2,1)
+
+    def test_workload_memoized_across_axis_values(self, small_cfg,
+                                                  small_cluster):
+        calls = []
+
+        def workload(ctx):
+            calls.append(ctx.strategy)
+            from repro.core.workload import decompose
+            return decompose(small_cfg, SMALL_SHAPE, mp=ctx.strategy.mp,
+                             dp=ctx.strategy.dp)
+
+        run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=4, dp=2),
+            workload=workload,
+            axes=[Axis("bw_x", (0.5, 1.0, 2.0), path="node.local_bw",
+                       mode="scale")]))
+        assert len(calls) == 1  # one strategy -> one decomposition
+
+    def test_zero_stage_is_first_class(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster,
+            strategies=GridSpace(mp=(2,), dp=(4,), zero_stages=(0, 3))))
+        z0, z3 = res.cells
+        assert z0.record["zero_stage"] == 0 and z3.record["zero_stage"] == 3
+        # ZeRO-3 shards model states across DP -> strictly smaller footprint
+        assert z3.record["footprint_bytes"] < z0.record["footprint_bytes"]
+
+    def test_pp_ep_need_custom_workload(self, small_cfg, small_cluster):
+        spec = StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster,
+                         strategies=ParallelSpec(mp=2, dp=2, pp=2))
+        with pytest.raises(ValueError, match="MP x DP only"):
+            run_study(spec)
+
+    def test_mem_bw_override_local(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=4, dp=2),
+            mem_bw_override="local"))
+        assert res.cells[0].record["mem_bw"] == small_cluster.node.local_bw
+
+    def test_duplicate_axis_names_rejected(self, small_cfg):
+        with pytest.raises(ValueError, match="duplicate"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      axes=[Axis("a", (1,)), Axis("a", (2,))])
+
+    def test_reserved_axis_names_rejected(self, small_cfg):
+        with pytest.raises(ValueError, match="shadow"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      axes=[Axis("total", (1, 2))])
+
+    def test_evaluate_study_without_cluster(self):
+        res = run_study(StudySpec(
+            name="t", axes=[Axis("v", ("x", "y"))],
+            evaluate=lambda ctx: {"score": len(ctx.point["v"])}))
+        assert [r["score"] for r in res.records] == [1, 1]
+        assert [r["v"] for r in res.records] == ["x", "y"]
+
+    def test_simulator_study_without_cluster_raises(self, small_cfg):
+        with pytest.raises(ValueError, match="no cluster"):
+            run_study(StudySpec(name="t", model=small_cfg,
+                                shape=SMALL_SHAPE,
+                                strategies=ParallelSpec(mp=1, dp=1)))
+
+    def test_process_parallel_matches_serial(self):
+        # Runs in a fresh interpreter: repro.core never imports jax, so the
+        # fork pool is safe there — unlike this pytest process, where other
+        # test modules have already started JAX's threadpools.
+        script = (
+            "import dataclasses\n"
+            "from repro.configs import get_config\n"
+            "from repro.configs.base import ShapeConfig\n"
+            "from repro.core.cluster import BASELINE_DGX_A100\n"
+            "from repro.core.study import (Axis, PowerOfTwoSpace, StudySpec,"
+            " run_study)\n"
+            "spec = StudySpec(\n"
+            "    name='t', model=get_config('smollm-135m'),\n"
+            "    shape=ShapeConfig('small', 512, 64, 'train'),\n"
+            "    cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),\n"
+            "    strategies=PowerOfTwoSpace(),\n"
+            "    axes=[Axis('f', (1.0, 2.0), path='node.peak_flops',"
+            " mode='scale')])\n"
+            "assert run_study(spec).records == "
+            "run_study(spec, processes=2).records\n"
+            "print('PARALLEL_OK')\n")
+        import os
+        import subprocess
+        import sys
+        env = dict(os.environ)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr
+        assert "PARALLEL_OK" in out.stdout
+
+
+class TestStudyResult:
+    @pytest.fixture(scope="class")
+    def res(self, request):
+        cfg = get_config("smollm-135m")
+        cluster = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+        return run_study(StudySpec(
+            name="t", model=cfg, shape=SMALL_SHAPE, cluster=cluster,
+            strategies=PowerOfTwoSpace(),
+            axes=[Axis("f", (1.0, 2.0), path="node.peak_flops",
+                       mode="scale")]))
+
+    def test_select_and_best(self, res):
+        sel = res.select(strategy="MP8_DP1")
+        assert len(sel) == 2
+        best = res.best()
+        assert best.record["total"] == min(res.column("total"))
+
+    def test_best_with_fit_constraint(self, res):
+        cap = sorted(res.column("footprint_bytes"))[0]
+        best = res.best(require_fit_bytes=cap)
+        assert best.record["footprint_bytes"] <= cap
+        with pytest.raises(ValueError):
+            res.best(require_fit_bytes=-1.0)
+
+    def test_normalize(self, res):
+        res.normalize(strategy="MP8_DP1", f=1.0)
+        base = res.select(strategy="MP8_DP1", f=1.0).cells[0]
+        assert base.record["total_norm"] == pytest.approx(1.0)
+        assert all("total_norm" in r for r in res.records)
+
+    def test_pivot(self, res):
+        table = res.pivot(index="strategy", columns="f")
+        assert set(table) == {"MP8_DP1", "MP4_DP2", "MP2_DP4", "MP1_DP8"}
+        assert set(table["MP8_DP1"]) == {1.0, 2.0}
+
+    def test_pivot_rejects_ambiguous_slice(self, res):
+        # (strategy,) alone does not identify a cell (two f values each)
+        with pytest.raises(ValueError, match="ambiguous"):
+            res.pivot(index="strategy", columns="strategy")
+
+    def test_to_csv_and_json(self, res, tmp_path):
+        text = res.to_csv(str(tmp_path / "out.csv"))
+        lines = text.strip().splitlines()
+        assert len(lines) == len(res) + 1
+        assert lines[0].startswith("study,strategy,mp,dp")
+        import json
+        doc = json.loads(res.to_json())
+        assert len(doc["records"]) == len(res)
+
+
+# ===================================================================== #
+# Golden equivalence: declarative dse == frozen seed implementation
+# ===================================================================== #
+
+class TestGoldenEquivalence:
+    """Reduced grids keep runtime bounded; the comparison itself is exact
+    (== on floats: identical inputs through the same simulator)."""
+
+    def test_fig8_mpdp_sweep(self, tcfg):
+        new = dse.mpdp_sweep(tcfg, SHAPE, BASELINE_DGX_A100)
+        old = legacy.mpdp_sweep(tcfg, SHAPE, BASELINE_DGX_A100)
+        assert [(r.mp, r.dp) for r in new] == [(r.mp, r.dp) for r in old]
+        for a, b in zip(new, old):
+            assert a.breakdown.as_dict() == b.breakdown.as_dict()
+            assert a.footprint_bytes == b.footprint_bytes
+
+    def test_fig9_memory_expansion(self, tcfg):
+        kw = dict(em_bandwidths_gbs=(100, 1000, 2000),
+                  strategies=[(32, 32), (8, 128)])
+        assert dse.memory_expansion_heatmap(
+            tcfg, SHAPE, BASELINE_DGX_A100, **kw) == \
+            legacy.memory_expansion_heatmap(
+                tcfg, SHAPE, BASELINE_DGX_A100, **kw)
+
+    def test_fig10_compute_scaling(self, tcfg):
+        kw = dict(compute_factors=(0.5, 1.0, 2.0),
+                  em_bandwidths_gbs=(500, 2000))
+        assert dse.compute_scaling(
+            tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw) == \
+            legacy.compute_scaling(
+                tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw)
+
+    def test_fig11_network_scaling(self, tcfg):
+        kw = dict(intra_factors=(0.5, 2.0), inter_factors=(1.0, 2.0))
+        assert dse.network_scaling(
+            tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw) == \
+            legacy.network_scaling(
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw)
+
+    def test_fig12_bandwidth_rebalance(self, tcfg):
+        kw = dict(ratios=(1, 6, 9.6, 16))
+        assert dse.bandwidth_rebalance(
+            tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw) == \
+            legacy.bandwidth_rebalance(
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw)
+
+    def test_fig13a_dlrm_cluster_size(self):
+        dlrm = get_dlrm_config()
+        kw = dict(global_batch=65536, node_counts=(64, 16, 8))
+        assert dse.dlrm_cluster_size_sweep(
+            dlrm, BASELINE_DGX_A100, **kw) == \
+            legacy.dlrm_cluster_size_sweep(dlrm, BASELINE_DGX_A100, **kw)
+
+    def test_fig13b_dlrm_memory_expansion(self):
+        dlrm = get_dlrm_config()
+        kw = dict(global_batch=65536, em_bandwidths_gbs=(500, 2000),
+                  nodes_per_instance_opts=(64, 8))
+        assert dse.dlrm_memory_expansion(
+            dlrm, BASELINE_DGX_A100, **kw) == \
+            legacy.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100, **kw)
+
+    def test_fig15_cluster_comparison(self, tcfg):
+        from repro.core.cluster import TABLE_III_CLUSTERS
+        subset = {k: TABLE_III_CLUSTERS[k]
+                  for k in ("A0", "A2", "B1", "dojo", "tpu-v4")}
+        kw = dict(dlrm_batch=65536, clusters=subset)
+        assert dse.cluster_comparison(
+            tcfg, SHAPE, get_dlrm_config(), **kw) == \
+            legacy.cluster_comparison(tcfg, SHAPE, get_dlrm_config(), **kw)
