@@ -2,7 +2,9 @@
 
 Each ``bench_*`` reproduces one COMET case study through the analytical
 pipeline and prints CSV rows (figure, key, metric, value, paper_claim).
-``python -m benchmarks.run [--only figN]``.
+``python -m benchmarks.run [--only figN] [--processes N]`` — ``--processes``
+fans study cells over a fork pool (§V-E) and, on fig15, also reports the
+measured fork-pool speedup.
 
 The §Roofline table from the measured dry-run lives in
 ``benchmarks/roofline_table.py`` (reads experiments/dryrun/*.json).
@@ -26,7 +28,15 @@ from repro.core.workload import decompose
 SHAPE_1T = ShapeConfig("paper", 2048, 1024, "train")
 GB = 1e9
 
+# Set by main() from --processes; every study in this harness runs through
+# _run() so the fork pool applies uniformly.
+PROCESSES = None
+
 Row = tuple
+
+
+def _run(spec):
+    return run_study(spec, processes=PROCESSES)
 
 
 def _rows_fig6() -> List[Row]:
@@ -45,7 +55,7 @@ def _rows_fig6() -> List[Row]:
 def _rows_fig8() -> List[Row]:
     """Fig 8: MP/DP sweep on the 1024-GPU DGX-A100 baseline."""
     cfg = get_config("transformer-1t")
-    res = run_study(dse.mpdp_study(cfg, SHAPE_1T, BASELINE_DGX_A100))
+    res = _run(dse.mpdp_study(cfg, SHAPE_1T, BASELINE_DGX_A100))
     rows = [("fig8", "best_strategy", "label", res.best().record["strategy"],
              "paper: MP8_DP128")]
     for c in res:
@@ -63,11 +73,11 @@ def _rows_fig8() -> List[Row]:
 def _rows_fig9() -> List[Row]:
     """Fig 9: expanded-memory bandwidth heatmap (normalized to MP64_DP16)."""
     cfg = get_config("transformer-1t")
-    base = run_study(StudySpec(
+    base = _run(StudySpec(
         name="fig9-baseline", model=cfg, shape=SHAPE_1T,
         cluster=BASELINE_DGX_A100,
         strategies=ParallelSpec(mp=64, dp=16))).cells[0].record["total"]
-    hm = run_study(dse.memory_expansion_study(
+    hm = _run(dse.memory_expansion_study(
         cfg, SHAPE_1T, BASELINE_DGX_A100,
         em_bandwidths_gbs=(100, 250, 500, 1000, 2000),
         strategies=[(32, 32), (16, 64), (8, 128)],
@@ -90,7 +100,7 @@ def _rows_fig9() -> List[Row]:
 def _rows_fig10() -> List[Row]:
     """Fig 10: per-node compute-capability scaling (MP8_DP128)."""
     cfg = get_config("transformer-1t")
-    cs = run_study(dse.compute_scaling_study(
+    cs = _run(dse.compute_scaling_study(
         cfg, SHAPE_1T, BASELINE_DGX_A100, 8, 128,
         compute_factors=(0.5, 1.0, 2.0, 4.0, 8.0),
         em_bandwidths_gbs=(500, 1000, 2000),
@@ -112,7 +122,7 @@ def _rows_fig11() -> List[Row]:
     rows = []
     for (mp, dp) in ((64, 16), (8, 128)):
         ns = {(c.point["intra_x"], c.point["inter_x"]): c.record["total"]
-              for c in run_study(dse.network_scaling_study(
+              for c in _run(dse.network_scaling_study(
                   cfg, SHAPE_1T, BASELINE_DGX_A100, mp, dp))}
         base = ns[(1.0, 1.0)]
         for (fi, fo), t in sorted(ns.items()):
@@ -130,7 +140,7 @@ def _rows_fig12() -> List[Row]:
     rows = []
     for (mp, dp) in ((64, 16), (8, 128)):
         rb = {c.point["ratio"]: c.record["total"]
-              for c in run_study(dse.bandwidth_rebalance_study(
+              for c in _run(dse.bandwidth_rebalance_study(
                   cfg, SHAPE_1T, BASELINE_DGX_A100, mp, dp))}
         base = rb[9.6]
         best = min(rb, key=rb.get)
@@ -147,7 +157,7 @@ def _rows_fig13() -> List[Row]:
     dlrm = get_dlrm_config()
     rows = []
     sw = {c.point["nodes"]: c.record
-          for c in run_study(dse.dlrm_cluster_size_study(
+          for c in _run(dse.dlrm_cluster_size_study(
               dlrm, BASELINE_DGX_A100, global_batch=65536))}
     for n, d in sw.items():
         rows.append(("fig13a", f"nodes{n}", "total_ms",
@@ -157,7 +167,7 @@ def _rows_fig13() -> List[Row]:
                             + d["wg_exposed_comm"]) * 1e3, 2),
                      "comm shrinks once an instance fits one pod"
                      if n == 8 else ""))
-    me = run_study(dse.dlrm_memory_expansion_study(
+    me = _run(dse.dlrm_memory_expansion_study(
         dlrm, BASELINE_DGX_A100, global_batch=65536,
     )).pivot(index="nodes_per_inst", columns="bw_em_gbs",
              values="turnaround")
@@ -172,12 +182,26 @@ def _rows_fig13() -> List[Row]:
 
 
 def _rows_fig15() -> List[Row]:
-    """Fig 15 / Table III: 11-cluster comparison."""
+    """Fig 15 / Table III: 11-cluster comparison (+ fork-pool speedup
+    when --processes is given)."""
     tcfg = get_config("transformer-1t")
     cmp = dse.cluster_comparison(tcfg, SHAPE_1T, get_dlrm_config(),
-                                 dlrm_batch=65536)
+                                 dlrm_batch=65536, processes=PROCESSES)
     a0 = cmp["A0"]
     rows = []
+    if PROCESSES and PROCESSES > 1:
+        t_study, _ = dse.cluster_comparison_studies(
+            tcfg, SHAPE_1T, get_dlrm_config(), 65536)
+        t0 = time.monotonic()
+        run_study(t_study)
+        t_serial = time.monotonic() - t0
+        t0 = time.monotonic()
+        run_study(t_study, processes=PROCESSES)
+        t_par = time.monotonic() - t0
+        rows.append(("fig15", "engine", "fork_speedup",
+                     round(t_serial / t_par, 2),
+                     f"serial {t_serial:.1f}s vs {PROCESSES} procs "
+                     f"{t_par:.1f}s on the fig15 transformer study"))
     for name, r in cmp.items():
         tf = a0["transformer-1t"] / r["transformer-1t"]
         dl = a0["dlrm"] / r["dlrm"]
@@ -217,6 +241,26 @@ def _rows_v5e_archs() -> List[Row]:
     return rows
 
 
+def _rows_tco() -> List[Row]:
+    """Beyond paper: heterogeneous A100+EM pod mix ranked perf-per-dollar
+    (§V-D's qualitative perf/$ argument, quantified)."""
+    tcfg = get_config("transformer-1t")
+    ranked = dse.hetero_cost_ranking(
+        tcfg, SHAPE_1T, processes=PROCESSES,
+        em_pod_fractions=(0.0, 0.5, 1.0),
+        strategies=[(64, 16), (16, 64), (8, 128)])
+    rows = []
+    for i, r in enumerate(ranked):
+        claim = ("full EM + small MP should lead (B1-vs-B0, Fig. 15)"
+                 if i == 0 else "")
+        rows.append(("tco", f"em{r['em_pod_frac']}_{r['strategy']}",
+                     "perf_per_tco_usd", f"{r['perf_per_dollar']:.3e}",
+                     claim))
+        rows.append(("tco", f"em{r['em_pod_frac']}_{r['strategy']}",
+                     "tco_musd", round(r["tco"] / 1e6, 2), ""))
+    return rows
+
+
 BENCHES = {
     "fig6": _rows_fig6,
     "fig8": _rows_fig8,
@@ -226,14 +270,19 @@ BENCHES = {
     "fig12": _rows_fig12,
     "fig13": _rows_fig13,
     "fig15": _rows_fig15,
+    "tco": _rows_tco,
     "v5e-comet": _rows_v5e_archs,
 }
 
 
 def main() -> None:
+    global PROCESSES
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--processes", type=int, default=None,
+                    help="fan study cells over a fork pool (POSIX)")
     args = ap.parse_args()
+    PROCESSES = args.processes
     print("figure,key,metric,value,paper_claim,bench_ms")
     for name, fn in BENCHES.items():
         if args.only and args.only != name:

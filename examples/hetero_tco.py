@@ -1,0 +1,53 @@
+"""Heterogeneous-cluster + cost/TCO example: the COMET §V-D
+perf-per-dollar question, made quantitative.
+
+Should you buy expanded memory for none, half, or all of a 64-pod A100
+cluster?  Each mix is one ``ClusterSpec`` (plain pods + memory-expanded
+pods over the same interconnect); the cost model prices nodes, HBM,
+expanded memory, links and energy, and the study engine emits
+``cost_usd`` / ``tco`` / ``perf_per_dollar`` columns per cell.
+
+Synchronous-training semantics: every node holds the same shard, so a
+strategy is feasible only if it fits the *least-capable* pod group — the
+study shows partial EM deployment buys nothing for one big synchronous
+job (you pay for EM the small-MP strategies still can't use), while full
+EM unlocks MP8_DP128 and wins perf-per-dollar outright.
+
+Run: PYTHONPATH=src python examples/hetero_tco.py
+"""
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import get_cluster
+from repro.core.dse import hetero_cost_study
+from repro.core.study import run_study
+
+cfg = get_config("transformer-1t")
+shape = ShapeConfig("paper", 2048, 1024, "train")
+
+res = run_study(hetero_cost_study(
+    cfg, shape, em_pod_fractions=(0.0, 0.25, 0.5, 1.0),
+    strategies=[(64, 16), (32, 32), (16, 64), (8, 128)]))
+
+print(f"{'em_frac':>8} {'strategy':>12} {'feasible':>9} {'iter_s':>8} "
+      f"{'capex_M$':>9} {'tco_M$':>8} {'perf/$':>11}")
+for c in res:
+    r = c.record
+    print(f"{r['em_pod_frac']:>8} {r['strategy']:>12} "
+          f"{str(r['feasible']):>9} {r['total']:>8.2f} "
+          f"{r['cost_usd'] / 1e6:>9.2f} {r['tco'] / 1e6:>8.2f} "
+          f"{r['perf_per_dollar']:>11.3e}")
+
+best = res.select(feasible=True).best("perf_per_dollar", maximize=True)
+print(f"\nBest perf-per-TCO-dollar: {best.record['strategy']} at "
+      f"em_pod_frac={best.record['em_pod_frac']} "
+      f"({best.record['perf_per_dollar']:.3e} iters/s/$).")
+
+# The same cost knobs are sweepable axes: how cheap must EM get before the
+# all-EM cluster beats B0 on *capex* alone?  (cost.usd_per_gb_em is a
+# dotted path into the frozen config tree, like any other Axis.)
+b1 = get_cluster("B1")
+print(f"\nB1 capex at $8/GB EM: ${b1.cost.capex(b1) / 1e6:.1f}M "
+      f"(vs B0 ${get_cluster('B0').cost.capex(get_cluster('B0')) / 1e6:.1f}M)"
+      " — sweep Axis('em_usd', values, path='cost.usd_per_gb_em') to find"
+      " the break-even price.")

@@ -7,7 +7,21 @@ simulator.simulate_iteration. Measured frontend: launch.dryrun ->
 hlo.terms_from_compiled -> the same roofline arithmetic.
 """
 
-from repro.core.cluster import ClusterConfig, NodeConfig, get_cluster  # noqa: F401
+from repro.core.cluster import (  # noqa: F401
+    ClusterConfig,
+    ClusterSpec,
+    CostModel,
+    NodeConfig,
+    PodSpec,
+    get_cluster,
+    list_clusters,
+)
+from repro.core.topology import (  # noqa: F401
+    HierarchicalSwitch,
+    SingleSwitch,
+    Topology,
+    Torus,
+)
 from repro.core.gemm import CommEvent, ExplicitOp, Gemm, PhaseCost  # noqa: F401
 from repro.core.memory import (  # noqa: F401
     effective_memory_bw,

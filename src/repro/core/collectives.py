@@ -2,191 +2,60 @@
 
 The paper uses ASTRA-SIM's analytical network backend with hierarchical
 (bandwidth-aware) collectives [10], [58]: reduce-scatter within the pod,
-all-reduce across pods on the shrunken shard, all-gather back.  This module
-reimplements that analytical model for the three topology families in
-``core.cluster`` and for the rank-placement rule used throughout the paper:
-MP groups fill consecutive ranks (pods first), DP groups stride by MP.
+all-reduce across pods on the shrunken shard, all-gather back.  The
+analytical models themselves live on the topology families in
+:mod:`repro.core.topology` — each implements
+``Topology.collective_time(collective, size, scope, mp, dp)`` — and this
+module's :class:`CollectiveModel` consumes that protocol, so adding a
+topology family never touches this file.
 
-All functions return seconds for one collective of ``size`` bytes issued by
-every member of the group (the usual symmetric-collective convention).
+Rank placement (shared by every family, re-exported here): MP groups fill
+consecutive ranks (pods first), DP groups stride by MP.  All functions
+return seconds for one collective of ``size`` bytes issued by every member
+of the group (the usual symmetric-collective convention).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Tuple
-
-from repro.core.cluster import (
-    ClusterConfig,
-    HierarchicalSwitch,
-    SingleSwitch,
-    Torus,
+from repro.core.cluster import ClusterLike
+from repro.core.topology import (  # noqa: F401  (legacy import surface)
+    GroupPlacement,
+    Topology,
+    all_to_all,
+    flat_time,
+    placement,
+    ring_allgather,
+    ring_allreduce,
 )
 
 
-def _ring_ar(size: float, n: int, bw: float, lat: float) -> float:
-    """Logical-ring all-reduce: 2(n-1)/n * size / bw + 2(n-1) hops."""
-    if n <= 1 or size <= 0:
-        return 0.0
-    return 2 * (n - 1) / n * size / bw + 2 * (n - 1) * lat
-
-
-def _ring_ag(size: float, n: int, bw: float, lat: float) -> float:
-    """All-gather / reduce-scatter: (n-1)/n * size / bw (one ring pass)."""
-    if n <= 1 or size <= 0:
-        return 0.0
-    return (n - 1) / n * size / bw + (n - 1) * lat
-
-
-def _a2a(size: float, n: int, bw: float, lat: float) -> float:
-    """All-to-all: each node sends size*(n-1)/n bytes through its link."""
-    if n <= 1 or size <= 0:
-        return 0.0
-    return (n - 1) / n * size / bw + lat
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupPlacement:
-    """How a communication group maps onto pods.
-
-    intra: members co-located per pod; inter: number of pods spanned.
-    group size = intra * inter.
-    """
-
-    intra: int
-    inter: int
-
-
-def placement(scope: str, mp: int, dp: int, pod_size: int) -> GroupPlacement:
-    """Paper's placement: MP consecutive (fills pods first), DP strided."""
-    if scope in ("mp", "ep"):
-        if mp <= pod_size:
-            return GroupPlacement(intra=mp, inter=1)
-        return GroupPlacement(intra=pod_size, inter=mp // pod_size)
-    # dp: peers stride by mp
-    if mp >= pod_size:
-        return GroupPlacement(intra=1, inter=dp)
-    per_pod = max(1, pod_size // mp)
-    per_pod = min(per_pod, dp)
-    return GroupPlacement(intra=per_pod, inter=max(1, dp // per_pod))
-
-
 class CollectiveModel:
-    """Collective timing for one cluster + one (MP, DP) strategy."""
+    """Collective timing for one cluster (or bare topology) + one (MP, DP)
+    strategy.  Dispatches through the :class:`Topology` protocol."""
 
-    def __init__(self, cluster: ClusterConfig, mp: int, dp: int):
+    def __init__(self, cluster: "ClusterLike | Topology", mp: int, dp: int):
         self.cluster = cluster
-        self.topo = cluster.topology
+        # Use the node groups' topology (agreeing with the simulator when a
+        # per-pod fabric overrides the interconnect); mixed fabrics need one
+        # model per group, so refuse to pick one silently.
+        topos = {g.topology for g in getattr(cluster, "node_groups", ())}
+        if len(topos) > 1:
+            raise ValueError(
+                "cluster mixes per-pod fabrics; build one CollectiveModel "
+                "per NodeGroup.topology (as the simulator does) instead of "
+                "timing over the shared interconnect only")
+        self.topo = topos.pop() if topos \
+            else getattr(cluster, "topology", cluster)
         self.mp = max(1, mp)
         self.dp = max(1, dp)
 
-    # ------------------------------------------------------------------ #
     def time(self, collective: str, size: float, scope: str) -> float:
         group = self.mp if scope in ("mp", "ep") else self.dp
         if group <= 1 or size <= 0:
             return 0.0
-        topo = self.topo
-        if isinstance(topo, HierarchicalSwitch):
-            return self._hier(collective, size, scope, topo)
-        if isinstance(topo, Torus):
-            return self._torus(collective, size, scope, topo, group)
-        if isinstance(topo, SingleSwitch):
-            return self._flat(collective, size, group, topo.bw, topo.latency)
-        raise TypeError(f"unknown topology {type(topo)!r}")
-
-    # ------------------------------------------------------------------ #
-    @staticmethod
-    def _flat(collective: str, size: float, n: int, bw: float, lat: float) -> float:
-        if collective == "all-reduce":
-            return _ring_ar(size, n, bw, lat)
-        if collective in ("all-gather", "reduce-scatter"):
-            return _ring_ag(size, n, bw, lat)
-        if collective == "all-to-all":
-            return _a2a(size, n, bw, lat)
-        raise ValueError(f"unknown collective {collective!r}")
-
-    # ------------------------------------------------------------------ #
-    def _hier(self, collective: str, size: float, scope: str,
-              topo: HierarchicalSwitch) -> float:
-        pl = placement(scope, self.mp, self.dp, topo.pod_size)
-        p, q = pl.intra, pl.inter
-        if q <= 1:  # fully intra-pod
-            return self._flat(collective, size, p, topo.intra_bw, topo.intra_latency)
-        if p <= 1:  # fully inter-pod
-            return self._flat(collective, size, q, topo.inter_bw, topo.inter_latency)
-        # Hierarchical collective [10],[58]: intra RS -> inter stage on
-        # size/p -> intra AG.
-        if collective == "all-reduce":
-            t_intra = 2 * _ring_ag(size, p, topo.intra_bw, topo.intra_latency)
-            t_inter = _ring_ar(size / p, q, topo.inter_bw, topo.inter_latency)
-            return t_intra + t_inter
-        if collective in ("all-gather", "reduce-scatter"):
-            t_intra = _ring_ag(size, p, topo.intra_bw, topo.intra_latency)
-            t_inter = _ring_ag(size / p, q, topo.inter_bw, topo.inter_latency)
-            return t_intra + t_inter
-        if collective == "all-to-all":
-            # Traffic share crossing pod boundaries vs. staying local.
-            n = p * q
-            inter_frac = (n - p) / n
-            intra_frac = (p - 1) / n
-            t_inter = inter_frac * size / topo.inter_bw + topo.inter_latency
-            t_intra = intra_frac * size / topo.intra_bw + topo.intra_latency
-            return max(t_inter, t_intra)
-        raise ValueError(f"unknown collective {collective!r}")
-
-    # ------------------------------------------------------------------ #
-    def _torus(self, collective: str, size: float, scope: str,
-               topo: Torus, group: int) -> float:
-        """Multi-dimensional bucket algorithm: per-dimension ring stages.
-
-        Bidirectional links -> ring uses both directions (2x link bw).
-        Groups smaller than the full torus use as many dims as needed
-        (mesh-axis-major placement)."""
-        pod = topo.pod_size
-        bw = 2 * topo.link_bw
-        if topo.dcn_bw and group > pod:
-            # group spans pods over DCN: hierarchical (torus intra + DCN flat)
-            q = math.ceil(group / pod)
-            if collective == "all-reduce":
-                t_in = self._torus("reduce-scatter", size, scope, topo, pod) \
-                     + self._torus("all-gather", size, scope, topo, pod)
-                t_out = _ring_ar(size / pod, q, topo.dcn_bw, topo.dcn_latency)
-                return t_in + t_out
-            t_in = self._torus(collective, size, scope, topo, pod)
-            t_out = self._flat(collective, size / pod, q, topo.dcn_bw,
-                               topo.dcn_latency)
-            return t_in + t_out
-        # Decompose the group across torus dims (row-major).
-        dims = []
-        rem = min(group, pod)
-        for d in topo.dims:
-            if rem <= 1:
-                break
-            use = math.gcd(rem, d) if rem % d else d
-            use = min(d, rem)
-            dims.append(use)
-            rem = max(1, rem // use)
-        if not dims:
-            return 0.0
-        if collective == "all-reduce":
-            t, s = 0.0, size
-            for d in dims:  # reduce-scatter sweep
-                t += _ring_ag(s, d, bw, topo.latency)
-                s /= d
-            for d in reversed(dims):  # all-gather sweep
-                s *= d
-                t += _ring_ag(s, d, bw, topo.latency)
-            return t
-        if collective in ("all-gather", "reduce-scatter"):
-            t, s = 0.0, size
-            for d in dims:
-                t += _ring_ag(s, d, bw, topo.latency)
-                s /= d
-            return t
-        if collective == "all-to-all":
-            n = 1
-            for d in dims:
-                n *= d
-            return _a2a(size, n, bw * len(dims), topo.latency)
-        raise ValueError(f"unknown collective {collective!r}")
+        time_fn = getattr(self.topo, "collective_time", None)
+        if time_fn is None:
+            raise TypeError(
+                f"{type(self.topo).__name__} does not implement the "
+                "Topology protocol (missing collective_time)")
+        return time_fn(collective, size, scope, self.mp, self.dp)

@@ -15,7 +15,9 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import (
     ClusterConfig,
+    ClusterSpec,
     HierarchicalSwitch,
+    PodSpec,
     TABLE_III_CLUSTERS,
 )
 from repro.core.strategy import StrategyResult
@@ -23,6 +25,7 @@ from repro.core.study import (
     Axis,
     ParallelSpec,
     PowerOfTwoSpace,
+    StudyResult,
     StudySpec,
     as_strategy_space,
     run_study,
@@ -281,6 +284,61 @@ def dlrm_memory_expansion(
 
 
 # --------------------------------------------------------------------- #
+# Beyond Fig. 13: heterogeneous pod mix ranked by perf-per-dollar
+# (paper §V-D discusses perf/$ qualitatively; MAD-Max carries the cost
+# model explicitly — this study does both over a mixed A100+EM fleet).
+# --------------------------------------------------------------------- #
+
+def hetero_cost_study(
+    cfg: ModelConfig, shape: ShapeConfig,
+    em_pod_fractions: Sequence[float] = (0.0, 0.25, 0.5, 1.0),
+    plain: str = "B0", expanded: str = "B1",
+    strategies=None,
+) -> StudySpec:
+    """Fig.-8-style sweep over clusters mixing plain and memory-expanded
+    pods, with ``cost_usd``/``tco``/``perf_per_dollar`` columns.
+
+    Each ``em_pod_frac`` value builds a :class:`ClusterSpec` whose pods mix
+    the ``plain`` cluster's node with the ``expanded`` cluster's node (same
+    interconnect and pod size).  Synchronous-training semantics apply: a
+    strategy is feasible only if its shard fits the *plain* pods too, so
+    the ranking quantifies when partial EM deployment is money wasted and
+    when full EM wins perf-per-dollar (Fig. 15's B0-vs-B1 story)."""
+    base, em = TABLE_III_CLUSTERS[plain], TABLE_III_CLUSTERS[expanded]
+    pod = base.topology.pod_size
+    num_pods = base.num_nodes // pod
+
+    def mix(_, frac: float) -> ClusterSpec:
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"em_pod_frac must be in [0, 1], got {frac}")
+        n_em = int(round(frac * num_pods))
+        pods = tuple(
+            p for p in (PodSpec(base.node, count=num_pods - n_em,
+                                nodes_per_pod=pod),
+                        PodSpec(em.node, count=n_em, nodes_per_pod=pod))
+            if p.count > 0)
+        return ClusterSpec(
+            name=f"{plain}+{expanded}-em{n_em}of{num_pods}",
+            pods=pods, interconnect=base.topology, cost=em.cost,
+            notes=f"{num_pods - n_em} plain + {n_em} memory-expanded pods.")
+
+    return StudySpec(
+        name="hetero-em-tco", model=cfg, shape=shape,
+        strategies=as_strategy_space(strategies) or PowerOfTwoSpace(min_mp=8),
+        axes=[Axis("em_pod_frac", tuple(em_pod_fractions), apply=mix)])
+
+
+def hetero_cost_ranking(cfg: ModelConfig, shape: ShapeConfig,
+                        processes: Optional[int] = None,
+                        **kwargs) -> List[Dict[str, float]]:
+    """Feasible (em_pod_frac, strategy) cells, best perf-per-dollar first."""
+    res: StudyResult = run_study(hetero_cost_study(cfg, shape, **kwargs),
+                                 processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["perf_per_dollar"], reverse=True)
+
+
+# --------------------------------------------------------------------- #
 # §V-D / Fig. 15: comparative training across 11 clusters
 # --------------------------------------------------------------------- #
 
@@ -333,15 +391,18 @@ def cluster_comparison(
     dlrm_cfg,
     dlrm_batch: int = 4096,
     clusters: Optional[Dict[str, ClusterConfig]] = None,
+    processes: Optional[int] = None,
 ) -> Dict[str, Dict[str, float]]:
     """runtime[cluster][workload] for Transformer-1T + 8 DLRM instances.
 
     Transformer: best feasible (MP, DP) per cluster (capacity-constrained).
-    DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8)."""
+    DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8).
+    ``processes`` fans study cells over a fork pool (§V-E)."""
     clusters = clusters or TABLE_III_CLUSTERS
     t_study, d_study = cluster_comparison_studies(
         transformer_cfg, transformer_shape, dlrm_cfg, dlrm_batch, clusters)
-    t_res, d_res = run_study(t_study), run_study(d_study)
+    t_res = run_study(t_study, processes=processes)
+    d_res = run_study(d_study, processes=processes)
     out: Dict[str, Dict[str, float]] = {}
     for name, cl in clusters.items():
         per = t_res.select(cluster=name)

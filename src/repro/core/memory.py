@@ -67,6 +67,21 @@ def per_node_footprint(
     return FootprintReport(states, awm, total, fits_local, fits_total)
 
 
+def cluster_footprint(workload: Workload, cluster,
+                      zero_stage: int = 2) -> FootprintReport:
+    """Per-node footprint across a (possibly heterogeneous) cluster.
+
+    The byte totals are node-independent (same shard everywhere under
+    synchronous training); the fits flags AND across every node group, so
+    a mixed cluster only 'fits' if its least-capable group does."""
+    reps = [per_node_footprint(workload, g.node, zero_stage)
+            for g in cluster.node_groups]
+    return dataclasses.replace(
+        reps[0],
+        fits_local=all(r.fits_local for r in reps),
+        fits_total=all(r.fits_total for r in reps))
+
+
 def hybrid_bandwidth(total_bytes: float, data_lm: float,
                      bw_lm: float, bw_em: float) -> float:
     """Paper Eqn (3). ``data_lm`` = bytes served from local memory."""

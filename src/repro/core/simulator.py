@@ -11,7 +11,11 @@ semantics:
     compute is exposed;
   * MP and DP collectives travel disjoint link sets under the paper's
     placement (MP fills pods, DP strides), so they get independent network
-    streams (documented simplification of ASTRA-SIM's link-level model).
+    streams (documented simplification of ASTRA-SIM's link-level model);
+  * heterogeneous clusters (ClusterSpec with several pod groups) follow
+    synchronous-training semantics: every group holds the same shard, the
+    slowest / least-capable group gates the iteration, and the cluster is
+    feasible only if the shard fits every group's nodes.
 
 Outputs the per-phase compute/exposed-communication breakdown of Fig. 8a.
 """
@@ -19,9 +23,9 @@ Outputs the per-phase compute/exposed-communication breakdown of Fig. 8a.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-from repro.core.cluster import ClusterConfig
+from repro.core.cluster import ClusterLike, NodeConfig
 from repro.core.collectives import CollectiveModel
 from repro.core.memory import (
     FootprintReport,
@@ -29,6 +33,7 @@ from repro.core.memory import (
     per_node_footprint,
 )
 from repro.core.roofline import compute_delay
+from repro.core.topology import Topology
 from repro.core.workload import Workload
 
 OPTIM_BYTES_PER_PARAM = 28  # grad read + fp32 m/v/master read+write
@@ -73,13 +78,53 @@ class IterationBreakdown:
 
 def simulate_iteration(
     workload: Workload,
-    cluster: ClusterConfig,
+    cluster: ClusterLike,
     zero_stage: int = 2,
-    mem_bw_override: Optional[float] = None,
+    mem_bw_override: "Optional[float | str]" = None,
     require_fit: bool = False,
 ) -> IterationBreakdown:
-    """One training iteration of ``workload`` on ``cluster``."""
-    node = cluster.node
+    """One training iteration of ``workload`` on ``cluster``.
+
+    Accepts the homogeneous ``ClusterConfig`` shim or a composable
+    ``ClusterSpec``; a heterogeneous spec simulates each node group and is
+    gated by the slowest one (synchronous training), with feasibility
+    requiring the shard to fit every group.  ``mem_bw_override`` may be a
+    float or the string ``"local"``, which resolves to each group's own
+    ``node.local_bw`` (§V-B1's infinite-capacity assumption)."""
+    groups = cluster.node_groups
+    if len(groups) == 1:
+        g = groups[0]
+        return _simulate_group(workload, g.node, g.topology, zero_stage,
+                               mem_bw_override, require_fit)
+    per = [_simulate_group(workload, g.node, g.topology, zero_stage,
+                           mem_bw_override, require_fit) for g in groups]
+    reps = [b.footprint for b in per]
+    # Footprint totals are node-independent; only the fits flags differ.
+    worst_rep = dataclasses.replace(
+        max(reps, key=lambda r: r.total),
+        fits_local=all(r.fits_local for r in reps),
+        fits_total=all(r.fits_total for r in reps))
+    feasible = all(b.feasible for b in per)
+    if require_fit and not feasible:
+        return IterationBreakdown(PhaseBreakdown(), PhaseBreakdown(),
+                                  PhaseBreakdown(), 0.0, worst_rep,
+                                  min(b.mem_bw for b in per), False)
+    worst = max(per, key=lambda b: b.total)
+    return IterationBreakdown(worst.fp, worst.ig, worst.wg, worst.optimizer,
+                              worst_rep, worst.mem_bw, feasible)
+
+
+def _simulate_group(
+    workload: Workload,
+    node: NodeConfig,
+    topology: Topology,
+    zero_stage: int,
+    mem_bw_override: "Optional[float | str]",
+    require_fit: bool,
+) -> IterationBreakdown:
+    """The ASTRA-lite timeline for one homogeneous node group."""
+    if mem_bw_override == "local":
+        mem_bw_override = node.local_bw
     fp_rep = per_node_footprint(workload, node, zero_stage)
     mem_bw = (mem_bw_override if mem_bw_override is not None
               else effective_memory_bw(node, fp_rep.total))
@@ -87,7 +132,7 @@ def simulate_iteration(
     if require_fit and not feasible:
         return IterationBreakdown(PhaseBreakdown(), PhaseBreakdown(),
                                   PhaseBreakdown(), 0.0, fp_rep, mem_bw, False)
-    coll = CollectiveModel(cluster, workload.mp, workload.dp)
+    coll = CollectiveModel(topology, workload.mp, workload.dp)
     sram = node.sram_bytes
 
     # Precompute per-unique-layer delays.

@@ -16,7 +16,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.cluster import ClusterConfig
+from repro.core.cluster import ClusterLike
 from repro.core.simulator import IterationBreakdown
 from repro.core.study import (
     PowerOfTwoSpace,
@@ -52,7 +52,7 @@ class StrategyResult:
 def sweep_strategies(
     cfg: ModelConfig,
     shape: ShapeConfig,
-    cluster: ClusterConfig,
+    cluster: ClusterLike,
     zero_stage: int = 2,
     mem_bw_override: Optional[float] = None,
     min_mp: int = 1,

@@ -46,7 +46,7 @@ from typing import (
 )
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.cluster import ClusterConfig
+from repro.core.cluster import ClusterConfig, ClusterLike
 from repro.core.memory import FootprintReport
 from repro.core.simulator import IterationBreakdown, simulate_iteration
 from repro.core.workload import Workload, decompose
@@ -254,7 +254,7 @@ class Axis:
     values: Sequence[Any]
     path: Optional[str] = None
     mode: str = "set"                                  # "set" | "scale"
-    apply: Optional[Callable[[ClusterConfig, Any], ClusterConfig]] = None
+    apply: Optional[Callable[[ClusterLike, Any], ClusterLike]] = None
 
     def __post_init__(self):
         if self.mode not in ("set", "scale"):
@@ -262,7 +262,7 @@ class Axis:
         if self.path is not None and self.apply is not None:
             raise ValueError("give either path or apply, not both")
 
-    def override(self, cluster: ClusterConfig, value: Any) -> ClusterConfig:
+    def override(self, cluster: ClusterLike, value: Any) -> ClusterLike:
         if self.apply is not None:
             return self.apply(cluster, value)
         if self.path is None:
@@ -284,7 +284,7 @@ class StudyContext:
     spec: "StudySpec"
     strategy: Optional[ParallelSpec]
     point: Dict[str, Any]                      # axis name -> swept value
-    cluster: Optional[ClusterConfig]           # None only in evaluate studies
+    cluster: Optional[ClusterLike]             # None only in evaluate studies
     workload: Optional[Workload] = None
     breakdown: Optional[IterationBreakdown] = None
     footprint: Optional[FootprintReport] = None
@@ -302,7 +302,7 @@ class StudySpec:
     see experiments/hillclimb_run.py)."""
 
     name: str
-    cluster: Optional[ClusterConfig] = None
+    cluster: Optional[ClusterLike] = None
     model: Optional[ModelConfig] = None
     shape: Optional[ShapeConfig] = None
     axes: Sequence[Axis] = ()
@@ -322,6 +322,7 @@ class StudySpec:
         "fp_compute", "fp_exposed_comm", "ig_compute", "ig_exposed_comm",
         "wg_compute", "wg_exposed_comm", "optimizer", "total",
         "feasible", "footprint_bytes", "mem_bw",
+        "cost_usd", "tco", "perf_per_dollar",
     })
 
     def __post_init__(self):
@@ -348,7 +349,7 @@ class CellResult:
 
     strategy: Optional[ParallelSpec]
     point: Dict[str, Any]
-    cluster: Optional[ClusterConfig]
+    cluster: Optional[ClusterLike]
     breakdown: Optional[IterationBreakdown]
     footprint: Optional[FootprintReport]
     record: Dict[str, Any]
@@ -359,7 +360,7 @@ class CellResult:
 # ===================================================================== #
 
 def _cells(spec: StudySpec) -> List[Tuple[Optional[ParallelSpec],
-                                          Dict[str, Any], ClusterConfig]]:
+                                          Dict[str, Any], ClusterLike]]:
     """Axis-product-major enumeration; strategies are resolved against each
     cell's *overridden* cluster so a cluster-valued axis (Fig. 15) gets the
     right per-cluster strategy list."""
@@ -404,8 +405,29 @@ def _workload_key(spec: StudySpec, strategy: Optional[ParallelSpec],
             tuple((n, point[n]) for n in spec.workload_deps))
 
 
+def _cost_columns(record: Dict[str, Any], cluster: ClusterLike) -> None:
+    """Attach cost_usd / tco / perf_per_dollar when the cluster carries a
+    CostModel.  perf_per_dollar is iterations-per-second per TCO dollar:
+    1 / (iteration_time * tco) — the paper §V-D ranking metric.  Infeasible
+    cells get 0.0 so ``best("perf_per_dollar", maximize=True)`` never
+    recommends a strategy that does not fit in memory."""
+    cost = getattr(cluster, "cost", None)
+    if cost is None:
+        return
+    capex = cost.capex(cluster)
+    record["cost_usd"] = capex
+    tco = capex + cost.energy_usd(cluster)
+    record["tco"] = tco
+    total = record.get("total")
+    if record.get("feasible", True) and isinstance(total, (int, float)) \
+            and total > 0 and tco > 0:
+        record["perf_per_dollar"] = 1.0 / (total * tco)
+    else:
+        record["perf_per_dollar"] = 0.0
+
+
 def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
-               point: Dict[str, Any], cluster: ClusterConfig,
+               point: Dict[str, Any], cluster: ClusterLike,
                wl_memo: dict, sim_memo: dict) -> CellResult:
     ctx = StudyContext(spec=spec, strategy=strategy, point=dict(point),
                        cluster=cluster)
@@ -418,6 +440,8 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
 
     if spec.evaluate is not None:
         record = {**base, **spec.evaluate(ctx)}
+        if cluster is not None:
+            _cost_columns(record, cluster)
         for mname, fn in spec.metrics.items():
             record[mname] = fn(ctx)
         return CellResult(strategy, ctx.point, cluster, None, None, record)
@@ -427,11 +451,18 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
         wl_memo[wkey] = (spec.workload or _default_workload)(ctx)
     ctx.workload = wl_memo[wkey]
 
+    # "local" resolves per node group inside the simulator, so it works on
+    # heterogeneous ClusterSpecs too (each group's own node.local_bw).
     override = spec.mem_bw_override
-    if override == "local":
-        override = cluster.node.local_bw
     zero = strategy.zero_stage if strategy is not None else DEFAULT_ZERO_STAGE
-    skey = (wkey, cluster, zero, override, spec.require_fit)
+    # The simulator never reads the CostModel, so strip it from the memo
+    # key: a pure cost-axis sweep (path="cost.usd_per_gb_em") simulates
+    # each physical configuration once, not once per price point.
+    sim_cluster = cluster
+    if dataclasses.is_dataclass(cluster) \
+            and getattr(cluster, "cost", None) is not None:
+        sim_cluster = dataclasses.replace(cluster, cost=None)
+    skey = (wkey, sim_cluster, zero, override, spec.require_fit)
     if skey not in sim_memo:
         sim_memo[skey] = simulate_iteration(
             ctx.workload, cluster, zero_stage=zero,
@@ -444,6 +475,7 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
               "feasible": br.feasible,
               "footprint_bytes": br.footprint.total,
               "mem_bw": br.mem_bw}
+    _cost_columns(record, cluster)
     for mname, fn in spec.metrics.items():
         record[mname] = fn(ctx)
     return CellResult(strategy, ctx.point, cluster, br, br.footprint, record)
@@ -532,15 +564,18 @@ class StudyResult:
         return [c.record.get(name) for c in self.cells]
 
     def best(self, metric: str = "total",
-             require_fit_bytes: Optional[float] = None) -> CellResult:
-        """Cell minimizing ``metric``, optionally capacity-constrained."""
+             require_fit_bytes: Optional[float] = None,
+             maximize: bool = False) -> CellResult:
+        """Cell minimizing ``metric`` (or maximizing it, e.g. for
+        ``perf_per_dollar``), optionally capacity-constrained."""
         pool = self.cells
         if require_fit_bytes is not None:
             pool = [c for c in pool
                     if c.record.get("footprint_bytes", 0) <= require_fit_bytes]
         if not pool:
             raise ValueError("no cell satisfies the constraint")
-        return min(pool, key=lambda c: c.record[metric])
+        pick = max if maximize else min
+        return pick(pool, key=lambda c: c.record[metric])
 
     # -- derived columns ------------------------------------------------ #
     def normalize(self, metric: str = "total",

@@ -1,0 +1,330 @@
+"""Network topology protocol + the three COMET topology families.
+
+COMET §III-C3 models collectives analytically per topology family (the
+paper uses ASTRA-SIM's analytical backend with hierarchical bandwidth-aware
+collectives [10], [58]).  This module makes the family set *pluggable*:
+:class:`Topology` is a structural protocol — pod size, per-hop
+bandwidth/latency (:attr:`Topology.hops`), functional updates
+(``with_``/``scaled``), and the collective-time model itself
+(:meth:`Topology.collective_time`) — that ``repro.core.collectives`` and
+``repro.core.simulator`` consume through the interface.  Adding a new
+fabric is one frozen dataclass implementing the protocol; no isinstance
+ladder anywhere downstream needs to grow.
+
+Rank placement follows the paper throughout: MP groups fill consecutive
+ranks (pods first), DP groups stride by MP.  All times are seconds for one
+collective of ``size`` bytes issued by every member of the group (the
+usual symmetric-collective convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol, Tuple, runtime_checkable
+
+# --------------------------------------------------------------------- #
+# Ring / all-to-all primitives (shared by every topology family)
+# --------------------------------------------------------------------- #
+
+
+def ring_allreduce(size: float, n: int, bw: float, lat: float) -> float:
+    """Logical-ring all-reduce: 2(n-1)/n * size / bw + 2(n-1) hops."""
+    if n <= 1 or size <= 0:
+        return 0.0
+    return 2 * (n - 1) / n * size / bw + 2 * (n - 1) * lat
+
+
+def ring_allgather(size: float, n: int, bw: float, lat: float) -> float:
+    """All-gather / reduce-scatter: (n-1)/n * size / bw (one ring pass)."""
+    if n <= 1 or size <= 0:
+        return 0.0
+    return (n - 1) / n * size / bw + (n - 1) * lat
+
+
+def all_to_all(size: float, n: int, bw: float, lat: float) -> float:
+    """All-to-all: each node sends size*(n-1)/n bytes through its link."""
+    if n <= 1 or size <= 0:
+        return 0.0
+    return (n - 1) / n * size / bw + lat
+
+
+def flat_time(collective: str, size: float, n: int, bw: float,
+              lat: float) -> float:
+    """One-level (flat) network: dispatch a collective to its ring form."""
+    if collective == "all-reduce":
+        return ring_allreduce(size, n, bw, lat)
+    if collective in ("all-gather", "reduce-scatter"):
+        return ring_allgather(size, n, bw, lat)
+    if collective == "all-to-all":
+        return all_to_all(size, n, bw, lat)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def _group_size(scope: str, mp: int, dp: int) -> int:
+    return mp if scope in ("mp", "ep") else dp
+
+
+# --------------------------------------------------------------------- #
+# Rank placement
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlacement:
+    """How a communication group maps onto pods.
+
+    intra: members co-located per pod; inter: number of pods spanned.
+    group size = intra * inter.
+    """
+
+    intra: int
+    inter: int
+
+
+def placement(scope: str, mp: int, dp: int, pod_size: int) -> GroupPlacement:
+    """Paper's placement: MP consecutive (fills pods first), DP strided."""
+    if scope in ("mp", "ep"):
+        if mp <= pod_size:
+            return GroupPlacement(intra=mp, inter=1)
+        return GroupPlacement(intra=pod_size, inter=mp // pod_size)
+    # dp: peers stride by mp
+    if mp >= pod_size:
+        return GroupPlacement(intra=1, inter=dp)
+    per_pod = max(1, pod_size // mp)
+    per_pod = min(per_pod, dp)
+    return GroupPlacement(intra=per_pod, inter=max(1, dp // per_pod))
+
+
+# --------------------------------------------------------------------- #
+# The protocol
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    """One network level as seen by a node: per-node-per-direction
+    bandwidth (bytes/s) and per-message latency (s)."""
+
+    name: str
+    bw: float
+    latency: float
+
+
+@runtime_checkable
+class Topology(Protocol):
+    """Structural interface every topology family implements.
+
+    Consumers (``CollectiveModel``, the simulator, ``CostModel``) talk to
+    this protocol only; concrete families are plain frozen dataclasses.
+    """
+
+    @property
+    def pod_size(self) -> int: ...
+
+    @property
+    def hops(self) -> Tuple[Hop, ...]: ...
+
+    @property
+    def links_per_node(self) -> int: ...
+
+    def collective_time(self, collective: str, size: float, scope: str,
+                        mp: int, dp: int) -> float: ...
+
+    def with_(self, **updates): ...
+
+    def scaled(self, **factors): ...
+
+
+class TopologyBase:
+    """Functional-update mixin shared by the concrete families."""
+
+    def with_(self, **updates):
+        """Return a copy with the named fields replaced."""
+        return dataclasses.replace(self, **updates)
+
+    def scaled(self, **factors):
+        """Return a copy with each named field multiplied by its factor."""
+        return dataclasses.replace(
+            self, **{f: getattr(self, f) * v for f, v in factors.items()})
+
+
+# --------------------------------------------------------------------- #
+# Concrete families
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalSwitch(TopologyBase):
+    """Two-level switch: fast intra-pod + slower inter-pod (Fig. 7)."""
+
+    pod_size: int
+    intra_bw: float                # per-node per-direction, bytes/s
+    inter_bw: float
+    intra_latency: float = 1e-6
+    inter_latency: float = 5e-6
+
+    def scaled(self, intra: float = 1.0, inter: float = 1.0) -> "HierarchicalSwitch":
+        return dataclasses.replace(
+            self, intra_bw=self.intra_bw * intra, inter_bw=self.inter_bw * inter)
+
+    @property
+    def hops(self) -> Tuple[Hop, ...]:
+        return (Hop("intra", self.intra_bw, self.intra_latency),
+                Hop("inter", self.inter_bw, self.inter_latency))
+
+    @property
+    def links_per_node(self) -> int:
+        return 2                   # one intra-pod link + one inter-pod uplink
+
+    def collective_time(self, collective: str, size: float, scope: str,
+                        mp: int, dp: int) -> float:
+        if _group_size(scope, mp, dp) <= 1 or size <= 0:
+            return 0.0
+        pl = placement(scope, mp, dp, self.pod_size)
+        p, q = pl.intra, pl.inter
+        if q <= 1:  # fully intra-pod
+            return flat_time(collective, size, p, self.intra_bw,
+                             self.intra_latency)
+        if p <= 1:  # fully inter-pod
+            return flat_time(collective, size, q, self.inter_bw,
+                             self.inter_latency)
+        # Hierarchical collective [10],[58]: intra RS -> inter stage on
+        # size/p -> intra AG.
+        if collective == "all-reduce":
+            t_intra = 2 * ring_allgather(size, p, self.intra_bw,
+                                         self.intra_latency)
+            t_inter = ring_allreduce(size / p, q, self.inter_bw,
+                                     self.inter_latency)
+            return t_intra + t_inter
+        if collective in ("all-gather", "reduce-scatter"):
+            t_intra = ring_allgather(size, p, self.intra_bw,
+                                     self.intra_latency)
+            t_inter = ring_allgather(size / p, q, self.inter_bw,
+                                     self.inter_latency)
+            return t_intra + t_inter
+        if collective == "all-to-all":
+            # Traffic share crossing pod boundaries vs. staying local.
+            n = p * q
+            inter_frac = (n - p) / n
+            intra_frac = (p - 1) / n
+            t_inter = inter_frac * size / self.inter_bw + self.inter_latency
+            t_intra = intra_frac * size / self.intra_bw + self.intra_latency
+            return max(t_inter, t_intra)
+        raise ValueError(f"unknown collective {collective!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus(TopologyBase):
+    """k-dimensional torus (TPU): per-direction link bandwidth per dim."""
+
+    dims: Tuple[int, ...]
+    link_bw: float
+    latency: float = 1e-6
+    # Optional DCN uplink for multi-pod torus clusters (v5e pods over DCN).
+    dcn_bw: float = 0.0
+    dcn_latency: float = 10e-6
+
+    @property
+    def pod_size(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def hops(self) -> Tuple[Hop, ...]:
+        out = (Hop("link", self.link_bw, self.latency),)
+        if self.dcn_bw:
+            out += (Hop("dcn", self.dcn_bw, self.dcn_latency),)
+        return out
+
+    @property
+    def links_per_node(self) -> int:
+        return 2 * len(self.dims) + (1 if self.dcn_bw else 0)
+
+    def collective_time(self, collective: str, size: float, scope: str,
+                        mp: int, dp: int) -> float:
+        group = _group_size(scope, mp, dp)
+        if group <= 1 or size <= 0:
+            return 0.0
+        return self._time(collective, size, group)
+
+    def _time(self, collective: str, size: float, group: int) -> float:
+        """Multi-dimensional bucket algorithm: per-dimension ring stages.
+
+        Bidirectional links -> ring uses both directions (2x link bw).
+        Groups smaller than the full torus use as many dims as needed
+        (mesh-axis-major placement)."""
+        pod = self.pod_size
+        bw = 2 * self.link_bw
+        if self.dcn_bw and group > pod:
+            # group spans pods over DCN: hierarchical (torus intra + DCN flat)
+            q = math.ceil(group / pod)
+            if collective == "all-reduce":
+                t_in = self._time("reduce-scatter", size, pod) \
+                     + self._time("all-gather", size, pod)
+                t_out = ring_allreduce(size / pod, q, self.dcn_bw,
+                                       self.dcn_latency)
+                return t_in + t_out
+            t_in = self._time(collective, size, pod)
+            t_out = flat_time(collective, size / pod, q, self.dcn_bw,
+                              self.dcn_latency)
+            return t_in + t_out
+        # Decompose the group across torus dims (row-major).
+        dims = []
+        rem = min(group, pod)
+        for d in self.dims:
+            if rem <= 1:
+                break
+            use = math.gcd(rem, d) if rem % d else d
+            use = min(d, rem)
+            dims.append(use)
+            rem = max(1, rem // use)
+        if not dims:
+            return 0.0
+        if collective == "all-reduce":
+            t, s = 0.0, size
+            for d in dims:  # reduce-scatter sweep
+                t += ring_allgather(s, d, bw, self.latency)
+                s /= d
+            for d in reversed(dims):  # all-gather sweep
+                s *= d
+                t += ring_allgather(s, d, bw, self.latency)
+            return t
+        if collective in ("all-gather", "reduce-scatter"):
+            t, s = 0.0, size
+            for d in dims:
+                t += ring_allgather(s, d, bw, self.latency)
+                s /= d
+            return t
+        if collective == "all-to-all":
+            n = 1
+            for d in dims:
+                n *= d
+            return all_to_all(size, n, bw * len(dims), self.latency)
+        raise ValueError(f"unknown collective {collective!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSwitch(TopologyBase):
+    """One logical switch delivering ``bw`` per node (Dojo model)."""
+
+    bw: float
+    latency: float = 1e-6
+
+    @property
+    def pod_size(self) -> int:  # flat network: one "pod"
+        return 1 << 30
+
+    @property
+    def hops(self) -> Tuple[Hop, ...]:
+        return (Hop("switch", self.bw, self.latency),)
+
+    @property
+    def links_per_node(self) -> int:
+        return 1
+
+    def collective_time(self, collective: str, size: float, scope: str,
+                        mp: int, dp: int) -> float:
+        group = _group_size(scope, mp, dp)
+        if group <= 1 or size <= 0:
+            return 0.0
+        return flat_time(collective, size, group, self.bw, self.latency)

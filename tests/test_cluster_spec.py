@@ -1,0 +1,456 @@
+"""Tests for the composable cluster layer: Topology protocol, PodSpec /
+ClusterSpec, CostModel + cost columns, registry helpers.
+
+Golden guarantees: a homogeneous ClusterSpec reproduces the seed Table III
+numbers exactly through the same simulator path, and cost columns are
+monotone in $/node and invariant under pod-count refactorings of the same
+hardware (hypothesis property tests)."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import (
+    B_HYBRID_EM,
+    BASELINE_DGX_A100,
+    DOJO,
+    TABLE_III_CLUSTERS,
+    ClusterSpec,
+    CostModel,
+    NodeConfig,
+    PodSpec,
+    get_cluster,
+    list_clusters,
+)
+from repro.core.collectives import CollectiveModel
+from repro.core.memory import cluster_footprint
+from repro.core.simulator import simulate_iteration
+from repro.core.study import Axis, ParallelSpec, StudySpec, run_study
+from repro.core.topology import (
+    HierarchicalSwitch,
+    SingleSwitch,
+    Topology,
+    Torus,
+)
+from repro.core.workload import decompose
+
+GB = 1e9
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return get_config("transformer-1t")
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("smollm-135m")
+
+
+@pytest.fixture(scope="module")
+def small_wl(small_cfg):
+    return decompose(small_cfg, SMALL_SHAPE, mp=4, dp=2)
+
+
+# ===================================================================== #
+# Topology protocol
+# ===================================================================== #
+
+class TestTopologyProtocol:
+    TOPOS = (BASELINE_DGX_A100.topology,
+             Torus(dims=(4, 4), link_bw=48 * GB),
+             Torus(dims=(4, 4), link_bw=48 * GB, dcn_bw=25 * GB),
+             SingleSwitch(bw=1000 * GB))
+
+    @pytest.mark.parametrize("topo", TOPOS, ids=lambda t: type(t).__name__)
+    def test_implements_protocol(self, topo):
+        assert isinstance(topo, Topology)
+        assert topo.pod_size >= 1
+        assert topo.links_per_node >= 1
+        assert all(h.bw > 0 for h in topo.hops)
+
+    @pytest.mark.parametrize("topo", TOPOS, ids=lambda t: type(t).__name__)
+    @pytest.mark.parametrize("coll", ("all-reduce", "all-gather",
+                                      "reduce-scatter", "all-to-all"))
+    def test_collective_model_dispatches_through_protocol(self, topo, coll):
+        """CollectiveModel.time == the protocol method, for every family."""
+        cm = CollectiveModel(topo, mp=8, dp=2)
+        assert cm.time(coll, 1e9, "mp") == \
+            topo.collective_time(coll, 1e9, "mp", 8, 2)
+        assert cm.time(coll, 1e9, "mp") > 0
+
+    def test_trivial_group_is_free(self):
+        topo = SingleSwitch(bw=1000 * GB)
+        assert topo.collective_time("all-reduce", 1e9, "dp", 8, 1) == 0.0
+        assert topo.collective_time("all-reduce", 0.0, "mp", 8, 1) == 0.0
+
+    def test_functional_updates(self):
+        hs = BASELINE_DGX_A100.topology
+        assert hs.with_(pod_size=16).pod_size == 16
+        assert hs.scaled(intra=2).intra_bw == 2 * hs.intra_bw  # legacy form
+        t = Torus(dims=(4, 4), link_bw=48 * GB)
+        assert t.scaled(link_bw=2.0).link_bw == 96 * GB
+        assert t.with_(dcn_bw=25 * GB).dcn_bw == 25 * GB
+
+    def test_unknown_topology_rejected(self):
+        with pytest.raises(TypeError, match="Topology protocol"):
+            CollectiveModel(object(), mp=8, dp=2).time("all-reduce", 1e9, "mp")
+
+
+# ===================================================================== #
+# ClusterSpec: homogeneous golden equivalence + heterogeneous semantics
+# ===================================================================== #
+
+class TestHomogeneousGolden:
+    """A homogeneous ClusterSpec must reproduce the seed Table III numbers
+    exactly (same floats) through the ClusterConfig shim path."""
+
+    @pytest.mark.parametrize("name,mp,dp", [("B1", 64, 16), ("B1", 8, 128),
+                                            ("dojo", 64, 1)])
+    def test_spec_matches_shim(self, tcfg, name, mp, dp):
+        shim = get_cluster(name)
+        spec = ClusterSpec.homogeneous(shim.name, shim.node, shim.num_nodes,
+                                       shim.topology, cost=shim.cost)
+        wl = decompose(tcfg, SHAPE, mp=mp, dp=dp)
+        a = simulate_iteration(wl, shim)
+        b = simulate_iteration(wl, spec)
+        assert a.as_dict() == b.as_dict()
+        assert a.feasible == b.feasible
+        assert a.footprint.total == b.footprint.total
+
+    def test_to_spec_roundtrip(self, small_wl):
+        cl = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+        spec = cl.to_spec()
+        assert spec.num_nodes == 8
+        assert not spec.is_heterogeneous
+        assert spec.node == cl.node
+        assert simulate_iteration(small_wl, spec).as_dict() == \
+            simulate_iteration(small_wl, cl).as_dict()
+
+    def test_table_iii_specs_preserve_registry(self, small_wl):
+        for name, cl in TABLE_III_CLUSTERS.items():
+            spec = cl.to_spec()
+            assert spec.num_nodes == cl.num_nodes, name
+            assert simulate_iteration(small_wl, spec).total == \
+                simulate_iteration(small_wl, cl).total, name
+
+
+class TestHeterogeneous:
+    def _hybrid(self, plain, em, net, count=2, npp=4):
+        return ClusterSpec(
+            name="hy", interconnect=net,
+            pods=(PodSpec(plain, count=count, nodes_per_pod=npp),
+                  PodSpec(em, count=count, nodes_per_pod=npp)))
+
+    def test_shape_accessors(self):
+        assert B_HYBRID_EM.num_nodes == 1024
+        assert B_HYBRID_EM.is_heterogeneous
+        assert len(B_HYBRID_EM.node_groups) == 2
+        with pytest.raises(ValueError, match="heterogeneous"):
+            B_HYBRID_EM.node
+
+    def test_node_groups_merge_identical_pods(self):
+        node = BASELINE_DGX_A100.node
+        spec = ClusterSpec(
+            name="s", interconnect=BASELINE_DGX_A100.topology,
+            pods=(PodSpec(node, count=2, nodes_per_pod=8),
+                  PodSpec(node, count=3, nodes_per_pod=8)))
+        (g,) = spec.node_groups
+        assert g.num_nodes == 40
+        assert not spec.is_heterogeneous
+
+    def test_empty_pods_rejected(self):
+        with pytest.raises(ValueError, match="no pods"):
+            ClusterSpec(name="s", pods=(),
+                        interconnect=BASELINE_DGX_A100.topology)
+
+    def test_slowest_group_gates(self, small_wl):
+        """Mixing in slower-compute pods degrades to the slow group."""
+        net = HierarchicalSwitch(4, 300 * GB, 31.25 * GB)
+        fast = BASELINE_DGX_A100.node
+        slow = fast.scaled_compute(0.25)
+        mixed = self._hybrid(fast, slow, net)
+        t_mixed = simulate_iteration(small_wl, mixed).total
+        t_slow = simulate_iteration(
+            small_wl, ClusterSpec.homogeneous("slow", slow, 8, net)).total
+        t_fast = simulate_iteration(
+            small_wl, ClusterSpec.homogeneous("fast", fast, 8, net)).total
+        assert t_mixed == t_slow > t_fast
+
+    def test_feasibility_requires_every_group(self, tcfg):
+        """MP8 fits EM pods but not plain pods -> hybrid infeasible."""
+        wl = decompose(tcfg, SHAPE, mp=8, dp=128)
+        assert simulate_iteration(wl, get_cluster("B1")).feasible
+        br = simulate_iteration(wl, B_HYBRID_EM)
+        assert not br.feasible
+        rep = cluster_footprint(wl, B_HYBRID_EM)
+        assert not rep.fits_total
+        assert rep.total == br.footprint.total
+
+    def test_require_fit_zeroes_infeasible_hybrid(self, tcfg):
+        wl = decompose(tcfg, SHAPE, mp=8, dp=128)
+        br = simulate_iteration(wl, B_HYBRID_EM, require_fit=True)
+        assert not br.feasible and br.total == 0.0
+
+    def test_per_pod_fabric_overrides_interconnect(self, small_wl):
+        """A pod group with a faster private fabric communicates faster."""
+        node = BASELINE_DGX_A100.node
+        slow_net = HierarchicalSwitch(4, 30 * GB, 3 * GB)
+        fast_net = HierarchicalSwitch(4, 300 * GB, 31.25 * GB)
+        base = ClusterSpec.homogeneous("s", node, 8, slow_net)
+        upgraded = base.with_pods(
+            (PodSpec(node, count=2, nodes_per_pod=4, fabric=fast_net),))
+        assert simulate_iteration(small_wl, upgraded).total <= \
+            simulate_iteration(small_wl, base).total
+        assert upgraded.node_groups[0].topology == fast_net
+
+    def test_map_nodes(self):
+        spec = B_HYBRID_EM.map_nodes(lambda n: n.scaled_compute(2.0))
+        for g in spec.node_groups:
+            assert g.node.peak_flops == 2 * 625e12
+
+    def test_with_node_with_topology_shim_parity(self):
+        node = BASELINE_DGX_A100.node
+        spec = B_HYBRID_EM.with_node(node)
+        assert not spec.is_heterogeneous and spec.node == node
+        fast = B_HYBRID_EM.interconnect.scaled(intra=2)
+        assert B_HYBRID_EM.with_topology(fast).topology == fast
+
+    def test_mem_bw_override_local_on_hetero(self, tcfg):
+        """'local' resolves per node group, so it works on mixed specs."""
+        wl = decompose(tcfg, SHAPE, mp=64, dp=16)
+        a = simulate_iteration(wl, B_HYBRID_EM, mem_bw_override="local")
+        b = simulate_iteration(wl, get_cluster("B1"),
+                               mem_bw_override=get_cluster("B1").node.local_bw)
+        assert a.mem_bw == b.mem_bw
+        res = run_study(StudySpec(
+            name="t", model=tcfg, shape=SHAPE, cluster=B_HYBRID_EM,
+            strategies=ParallelSpec(mp=64, dp=16), mem_bw_override="local"))
+        assert res.cells[0].record["mem_bw"] == \
+            B_HYBRID_EM.node_groups[0].node.local_bw
+
+    def test_collective_model_rejects_mixed_fabrics(self):
+        node = BASELINE_DGX_A100.node
+        net = HierarchicalSwitch(4, 300 * GB, 31.25 * GB)
+        mixed = ClusterSpec(
+            "m", (PodSpec(node, 1, 4, fabric=net.scaled(intra=2)),
+                  PodSpec(node, 1, 4)), net)
+        with pytest.raises(ValueError, match="per-pod fabrics"):
+            CollectiveModel(mixed, mp=4, dp=2)
+        # uniform-fabric hetero specs are fine
+        CollectiveModel(B_HYBRID_EM, mp=4, dp=2)
+
+    def test_collective_model_honors_single_pod_fabric(self):
+        """CollectiveModel must agree with the simulator when one fabric
+        overrides the interconnect."""
+        node = BASELINE_DGX_A100.node
+        fabric = HierarchicalSwitch(4, 300 * GB, 31.25 * GB)
+        spec = ClusterSpec(
+            "f", (PodSpec(node, 2, 4, fabric=fabric),),
+            interconnect=SingleSwitch(bw=25 * GB))
+        cm = CollectiveModel(spec, mp=4, dp=2)
+        assert cm.time("all-reduce", 1e9, "mp") == \
+            fabric.collective_time("all-reduce", 1e9, "mp", 4, 2)
+
+    def test_em_pod_frac_validated(self, tcfg):
+        from repro.core import dse
+        spec = dse.hetero_cost_study(tcfg, SHAPE, em_pod_fractions=(1.5,),
+                                     strategies=[(64, 16)])
+        with pytest.raises(ValueError, match=r"em_pod_frac must be in"):
+            run_study(spec)
+
+
+# ===================================================================== #
+# CostModel + study columns
+# ===================================================================== #
+
+class TestCostModel:
+    COST = CostModel(usd_per_node=10_000, usd_per_gb_local=20,
+                     usd_per_gb_em=5, usd_per_link=100, usd_per_kwh=0.1,
+                     amortization_years=2.0)
+    NODE = NodeConfig("n", 100e12, 80 * GB, 2000 * GB, 40e6,
+                      exp_cap=400 * GB, exp_bw=500 * GB, tdp_watts=500)
+
+    def test_capex_hand_check(self):
+        net = HierarchicalSwitch(8, 300 * GB, 31.25 * GB)  # 2 links/node
+        spec = ClusterSpec.homogeneous("s", self.NODE, 16, net,
+                                       cost=self.COST)
+        per_node = 10_000 + 20 * 80 + 5 * 400 + 100 * 2
+        assert self.COST.capex(spec) == pytest.approx(16 * per_node)
+
+    def test_energy_hand_check(self):
+        net = SingleSwitch(bw=1000 * GB)
+        spec = ClusterSpec.homogeneous("s", self.NODE, 16, net,
+                                       cost=self.COST)
+        kwh = 16 * 0.5 * 8760 * 2.0
+        assert self.COST.energy_usd(spec) == pytest.approx(kwh * 0.1)
+        assert self.COST.tco(spec) == pytest.approx(
+            self.COST.capex(spec) + self.COST.energy_usd(spec))
+
+    def test_registry_clusters_carry_costs(self):
+        for name in list_clusters():
+            cl = get_cluster(name)
+            assert cl.cost is not None, name
+            assert cl.cost.tco(cl) > 0, name
+
+    def test_study_emits_cost_columns(self, small_cfg):
+        cluster = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE, cluster=cluster,
+            strategies=ParallelSpec(mp=4, dp=2)))
+        r = res.cells[0].record
+        assert r["cost_usd"] == cluster.cost.capex(cluster)
+        assert r["tco"] == cluster.cost.tco(cluster)
+        assert r["perf_per_dollar"] == pytest.approx(
+            1.0 / (r["total"] * r["tco"]))
+
+    def test_no_cost_model_no_columns(self, small_cfg):
+        cluster = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8,
+                                      cost=None)
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE, cluster=cluster,
+            strategies=ParallelSpec(mp=4, dp=2)))
+        assert "cost_usd" not in res.cells[0].record
+
+    def test_cost_axis_is_sweepable(self, small_cfg):
+        """The MAD-Max-style question: how does $/GB-EM move the ranking?"""
+        cluster = dataclasses.replace(
+            get_cluster("B1"), num_nodes=8,
+            node=get_cluster("B1").node)
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE, cluster=cluster,
+            strategies=ParallelSpec(mp=4, dp=2),
+            axes=[Axis("em_usd", (4.0, 8.0, 16.0),
+                       path="cost.usd_per_gb_em")]))
+        costs = res.column("cost_usd")
+        assert costs[0] < costs[1] < costs[2]
+        totals = res.column("total")
+        assert totals[0] == totals[1] == totals[2]  # pure price knob
+
+    def test_infeasible_cells_get_zero_perf_per_dollar(self, tcfg):
+        """best(maximize=True) must never recommend a strategy that does
+        not fit: infeasible cells score 0."""
+        res = run_study(StudySpec(
+            name="t", model=tcfg, shape=SHAPE, cluster=get_cluster("B0"),
+            strategies=[(64, 16), (8, 128)]))  # MP8 doesn't fit B0
+        by_strat = {c.record["strategy"]: c.record for c in res}
+        assert not by_strat["MP8_DP128"]["feasible"]
+        assert by_strat["MP8_DP128"]["perf_per_dollar"] == 0.0
+        best = res.best("perf_per_dollar", maximize=True)
+        assert best.record["feasible"]
+
+    def test_cost_axis_shares_one_simulation(self, small_cfg, monkeypatch):
+        """A pure price sweep simulates each physical config once."""
+        import repro.core.study as study_mod
+        calls = []
+        real = study_mod.simulate_iteration
+        monkeypatch.setattr(study_mod, "simulate_iteration",
+                            lambda *a, **k: calls.append(1) or real(*a, **k))
+        run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),
+            strategies=ParallelSpec(mp=4, dp=2),
+            axes=[Axis("em_usd", (4.0, 8.0, 16.0),
+                       path="cost.usd_per_gb_em")]))
+        assert len(calls) == 1
+
+    def test_best_maximize_ranks_perf_per_dollar(self, small_cfg):
+        cluster = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE, cluster=cluster,
+            strategies=ParallelSpec(mp=4, dp=2),
+            axes=[Axis("f", (1.0, 2.0), path="node.peak_flops",
+                       mode="scale")]))
+        best = res.best("perf_per_dollar", maximize=True)
+        assert best.record["perf_per_dollar"] == \
+            max(res.column("perf_per_dollar"))
+
+    def test_axis_cannot_shadow_cost_columns(self, small_cfg):
+        with pytest.raises(ValueError, match="shadow"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      axes=[Axis("perf_per_dollar", (1,))])
+
+
+class TestHeteroStudyEndToEnd:
+    def test_hetero_cost_study_runs(self, tcfg):
+        """Acceptance: hetero + cost study end-to-end via StudySpec with
+        cost_usd / perf_per_dollar columns in its StudyResult."""
+        from repro.core import dse
+        res = run_study(dse.hetero_cost_study(
+            tcfg, SHAPE, em_pod_fractions=(0.0, 0.5, 1.0),
+            strategies=[(64, 16), (8, 128)]))
+        assert len(res) == 6
+        for r in res.records:
+            assert {"cost_usd", "tco", "perf_per_dollar"} <= set(r)
+        # more EM pods -> strictly more capex for the same interconnect
+        capex = res.pivot(index="em_pod_frac", columns="strategy",
+                          values="cost_usd")
+        assert capex[0.0]["MP64_DP16"] < capex[0.5]["MP64_DP16"] \
+            < capex[1.0]["MP64_DP16"]
+        # MP8 only feasible with EM everywhere (plain pods can't hold it)
+        feas = res.pivot(index="em_pod_frac", columns="strategy",
+                         values="feasible")
+        assert feas[1.0]["MP8_DP128"] and not feas[0.5]["MP8_DP128"]
+        # and the full-EM small-MP cell wins perf-per-dollar outright
+        ranked = dse.hetero_cost_ranking(
+            tcfg, SHAPE, em_pod_fractions=(0.0, 0.5, 1.0),
+            strategies=[(64, 16), (8, 128)])
+        assert ranked[0]["strategy"] == "MP8_DP128"
+        assert ranked[0]["em_pod_frac"] == 1.0
+
+
+# ===================================================================== #
+# Registry helpers
+# ===================================================================== #
+
+class TestRegistry:
+    def test_list_clusters_sorted_and_complete(self):
+        names = list_clusters()
+        assert names == sorted(names)
+        assert {"dgx-a100-1k", "B1", "dojo", "tpu-v4",
+                "b-hybrid-em"} <= set(names)
+        for name in names:
+            assert get_cluster(name).num_nodes > 0
+
+    def test_did_you_mean_suggestion(self):
+        with pytest.raises(KeyError, match="did you mean.*dgx-a100-1k"):
+            get_cluster("dgx-a100")
+        with pytest.raises(KeyError, match="did you mean"):
+            get_cluster("topu-v4")
+
+    def test_gibberish_still_lists_available(self):
+        with pytest.raises(KeyError, match="available"):
+            get_cluster("zzzzqqqq")
+
+
+# ===================================================================== #
+# Deterministic refactoring-invariance spot checks (the full hypothesis
+# property versions live in tests/test_property.py, which is skipped when
+# hypothesis is unavailable).
+# ===================================================================== #
+
+class TestRefactoringInvariance:
+    NET = HierarchicalSwitch(4, 300 * GB, 31.25 * GB)
+    NODE = NodeConfig("n", 100e12, 80 * GB, 2000 * GB, 40e6, tdp_watts=400)
+    COST = CostModel(usd_per_node=10_000, usd_per_gb_local=20,
+                     usd_per_link=100, usd_per_kwh=0.1)
+
+    @pytest.mark.parametrize("cut", (1, 2, 3))
+    def test_cost_and_sim_invariant_under_pod_refactoring(self, cut,
+                                                          small_wl):
+        """The same hardware split into differently-sized PodSpec groups
+        prices and simulates identically."""
+        one = ClusterSpec("one", (PodSpec(self.NODE, 4, 4),), self.NET,
+                          cost=self.COST)
+        two = ClusterSpec("two", (PodSpec(self.NODE, cut, 4),
+                                  PodSpec(self.NODE, 4 - cut, 4)),
+                          self.NET, cost=self.COST)
+        assert one.num_nodes == two.num_nodes
+        assert self.COST.capex(one) == pytest.approx(self.COST.capex(two))
+        assert self.COST.tco(one) == pytest.approx(self.COST.tco(two))
+        assert simulate_iteration(small_wl, one).as_dict() == \
+            simulate_iteration(small_wl, two).as_dict()

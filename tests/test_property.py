@@ -9,8 +9,15 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cluster import BASELINE_DGX_A100, NodeConfig
+from repro.core.cluster import (
+    BASELINE_DGX_A100,
+    ClusterSpec,
+    CostModel,
+    NodeConfig,
+    PodSpec,
+)
 from repro.core.collectives import CollectiveModel
+from repro.core.topology import HierarchicalSwitch
 from repro.core.gemm import Gemm, PhaseCost, gemm_traffic_bytes
 from repro.core.memory import hybrid_bandwidth, model_state_bytes
 from repro.core.roofline import compute_delay
@@ -91,6 +98,41 @@ class TestCollectiveProperties:
         t = cm.time(coll, size, "mp")
         assert t >= 0
         assert cm.time(coll, 2 * size, "mp") >= t
+
+
+class TestCostModelProperties:
+    NET = HierarchicalSwitch(4, 300e9, 31.25e9)
+    NODE = NodeConfig("n", 100e12, 80e9, 2000e9, 40e6, tdp_watts=400)
+
+    @given(a=st.floats(0, 1e6), b=st.floats(0, 1e6))
+    @settings(max_examples=100, deadline=None)
+    def test_capex_monotone_in_usd_per_node(self, a, b):
+        """Cost columns are monotone in $/node (ISSUE 2 satellite)."""
+        lo, hi = sorted((a, b))
+        spec = ClusterSpec.homogeneous("s", self.NODE, 16, self.NET)
+        assert CostModel(usd_per_node=lo).capex(spec) <= \
+            CostModel(usd_per_node=hi).capex(spec)
+
+    @given(count=st.integers(2, 64), data=st.data(),
+           usd_node=st.floats(0, 1e5), usd_gb=st.floats(0, 100),
+           usd_link=st.floats(0, 1e4), usd_kwh=st.floats(0, 1))
+    @settings(max_examples=100, deadline=None)
+    def test_cost_invariant_under_pod_refactoring(self, count, data,
+                                                  usd_node, usd_gb,
+                                                  usd_link, usd_kwh):
+        """Splitting the same hardware into different PodSpec groupings
+        never changes capex or TCO."""
+        cut = data.draw(st.integers(1, count - 1))
+        cost = CostModel(usd_per_node=usd_node, usd_per_gb_local=usd_gb,
+                         usd_per_link=usd_link, usd_per_kwh=usd_kwh)
+        one = ClusterSpec("one", (PodSpec(self.NODE, count, 4),),
+                          self.NET, cost=cost)
+        two = ClusterSpec("two", (PodSpec(self.NODE, cut, 4),
+                                  PodSpec(self.NODE, count - cut, 4)),
+                          self.NET, cost=cost)
+        assert one.num_nodes == two.num_nodes
+        assert cost.capex(one) == pytest.approx(cost.capex(two))
+        assert cost.tco(one) == pytest.approx(cost.tco(two))
 
 
 class TestNumericsProperties:
