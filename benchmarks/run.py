@@ -220,6 +220,34 @@ def _rows_fig15() -> List[Row]:
     return rows
 
 
+def _rows_pp_ep() -> List[Row]:
+    """Beyond Fig. 8: MoE transformer over the native MP x DP x PP x EP
+    product on a bandwidth-starved (A0) and a memory-expanded (B1) cluster
+    (ISSUE 3 tentpole: PP stages + EP expert sharding in the default
+    workload builder)."""
+    ranked = dse.pp_ep_ranking(processes=PROCESSES)
+    rows = []
+    for cl in ("A0", "B1"):
+        per = [r for r in ranked if r["cluster"] == cl]
+        if not per:
+            rows.append(("pp_ep", cl, "best_strategy", "infeasible",
+                         "no four-axis cell fits this cluster"))
+            continue
+        best = per[0]
+        base = next((r for r in per if r["pp"] == 1 and r["ep"] == 1), None)
+        rows.append(("pp_ep", cl, "best_strategy", best["strategy"],
+                     "best cell should use pp>1 or ep>1 on A0/B1"))
+        if base is not None:
+            rows.append(("pp_ep", cl, "speedup_vs_best_mpdp",
+                         round(base["total"] / best["total"], 3),
+                         "four-axis sweep beats the MP x DP slice"))
+        for r in per[:5]:
+            rows.append(("pp_ep", cl, f"total_s@{r['strategy']}",
+                         round(r["total"], 3),
+                         f"bubble={round(r['bubble_fraction'], 3)}"))
+    return rows
+
+
 def _rows_v5e_archs() -> List[Row]:
     """Beyond paper: COMET analytics for the 10 assigned archs on the
     production v5e pod (the analytical cross-check of the dry-run table)."""
@@ -270,6 +298,7 @@ BENCHES = {
     "fig12": _rows_fig12,
     "fig13": _rows_fig13,
     "fig15": _rows_fig15,
+    "pp_ep": _rows_pp_ep,
     "tco": _rows_tco,
     "v5e-comet": _rows_v5e_archs,
 }

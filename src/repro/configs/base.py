@@ -91,12 +91,17 @@ class HybridConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
-    """One input-shape cell: (seq_len, global_batch, kind)."""
+    """One input-shape cell: (seq_len, global_batch, kind).
+
+    ``num_microbatches`` is the pipeline-parallel microbatch count used
+    when a strategy has pp > 1 (0 = auto: the decomposition defaults to
+    4 * pp, capped at the per-replica batch)."""
 
     name: str
     seq_len: int
     global_batch: int
     kind: str                      # "train" | "prefill" | "decode"
+    num_microbatches: int = 0
 
     @property
     def tokens(self) -> int:

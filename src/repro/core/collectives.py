@@ -5,19 +5,22 @@ The paper uses ASTRA-SIM's analytical network backend with hierarchical
 all-reduce across pods on the shrunken shard, all-gather back.  The
 analytical models themselves live on the topology families in
 :mod:`repro.core.topology` — each implements
-``Topology.collective_time(collective, size, scope, mp, dp)`` — and this
-module's :class:`CollectiveModel` consumes that protocol, so adding a
-topology family never touches this file.
+``Topology.collective_time(collective, size, scope, mp, dp, pp=1, ep=1)``
+— and this module's :class:`CollectiveModel` consumes that protocol, so
+adding a topology family never touches this file.
 
-Rank placement (shared by every family, re-exported here): MP groups fill
-consecutive ranks (pods first), DP groups stride by MP.  All functions
-return seconds for one collective of ``size`` bytes issued by every member
-of the group (the usual symmetric-collective convention).
+Rank placement (shared by every family, re-exported here) follows the
+four-axis mesh order: MP groups fill consecutive ranks (pods first), then
+EP, then DP (striding by the inner axes), with PP stages outermost — the
+stage-boundary ``"p2p"`` transfers hop ``mp * ep * dp`` ranks.  All
+functions return seconds for one collective of ``size`` bytes issued by
+every member of the group (the usual symmetric-collective convention).
 """
 
 from __future__ import annotations
 
 from repro.core.cluster import ClusterLike
+from repro.core.topology import _group_size  # live: four-axis group sizing
 from repro.core.topology import (  # noqa: F401  (legacy import surface)
     GroupPlacement,
     Topology,
@@ -30,10 +33,15 @@ from repro.core.topology import (  # noqa: F401  (legacy import surface)
 
 
 class CollectiveModel:
-    """Collective timing for one cluster (or bare topology) + one (MP, DP)
-    strategy.  Dispatches through the :class:`Topology` protocol."""
+    """Collective timing for one cluster (or bare topology) + one
+    (MP, DP, PP, EP) strategy.  Dispatches through the :class:`Topology`
+    protocol; group sizing covers the four-axis product (scope ``"ep"``
+    with ep == 1 keeps the legacy mapping onto the MP group, ``"dp"`` spans
+    the DP x EP data group, ``"edp"`` the expert-gradient DP group, and
+    ``"pp"`` carries the stage-boundary ``"p2p"`` transfers)."""
 
-    def __init__(self, cluster: "ClusterLike | Topology", mp: int, dp: int):
+    def __init__(self, cluster: "ClusterLike | Topology", mp: int, dp: int,
+                 pp: int = 1, ep: int = 1):
         self.cluster = cluster
         # Use the node groups' topology (agreeing with the simulator when a
         # per-pod fabric overrides the interconnect); mixed fabrics need one
@@ -48,9 +56,11 @@ class CollectiveModel:
             else getattr(cluster, "topology", cluster)
         self.mp = max(1, mp)
         self.dp = max(1, dp)
+        self.pp = max(1, pp)
+        self.ep = max(1, ep)
 
     def time(self, collective: str, size: float, scope: str) -> float:
-        group = self.mp if scope in ("mp", "ep") else self.dp
+        group = _group_size(scope, self.mp, self.dp, self.pp, self.ep)
         if group <= 1 or size <= 0:
             return 0.0
         time_fn = getattr(self.topo, "collective_time", None)
@@ -58,4 +68,5 @@ class CollectiveModel:
             raise TypeError(
                 f"{type(self.topo).__name__} does not implement the "
                 "Topology protocol (missing collective_time)")
-        return time_fn(collective, size, scope, self.mp, self.dp)
+        return time_fn(collective, size, scope, self.mp, self.dp,
+                       pp=self.pp, ep=self.ep)

@@ -23,6 +23,7 @@ from repro.core.cluster import (
 from repro.core.strategy import StrategyResult
 from repro.core.study import (
     Axis,
+    GridSpace,
     ParallelSpec,
     PowerOfTwoSpace,
     StudyResult,
@@ -336,6 +337,54 @@ def hetero_cost_ranking(cfg: ModelConfig, shape: ShapeConfig,
                                  processes=processes)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["perf_per_dollar"], reverse=True)
+
+
+# --------------------------------------------------------------------- #
+# Beyond Fig. 8: the full MP x DP x PP x EP joint sweep (ISSUE 3 tentpole)
+# Megatron-LM-style pipeline stages + GSPMD-style expert sharding now run
+# through the default analytical workload builder, so the four-axis design
+# space the paper's §V methodology implies is swept directly.
+# --------------------------------------------------------------------- #
+
+def pp_ep_study(
+    cfg: Optional[ModelConfig] = None,
+    shape: Optional[ShapeConfig] = None,
+    clusters: Sequence[str] = ("A0", "B1"),
+    mp: Sequence[int] = (4, 8, 16, 32, 64),
+    dp: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128, 256),
+    pp: Sequence[int] = (1, 2, 4),
+    ep: Sequence[int] = (1, 2),
+    num_microbatches: Sequence[int] = (0,),
+) -> StudySpec:
+    """MoE transformer over the four-axis MP x DP x PP x EP product on the
+    registry clusters (default: bandwidth-starved A0 vs memory-expanded B1).
+
+    Every cell runs the default workload builder — PP stages with their
+    p2p boundary transfers and microbatch bubble, EP expert sharding with
+    all-to-all dispatch/combine — so the ranking shows where pipeline or
+    expert degrees beat the paper's pure MP x DP slice."""
+    from repro.configs import get_config
+    from repro.core.cluster import get_cluster
+
+    cfg = cfg or get_config("llama4-maverick-400b-a17b")
+    shape = shape or ShapeConfig("pp_ep", 4096, 256, "train")
+    names = tuple(clusters)
+    return StudySpec(
+        name="pp-ep-four-axis", model=cfg, shape=shape,
+        axes=[Axis("cluster", names,
+                   apply=lambda _, name: get_cluster(name))],
+        strategies=GridSpace(mp=tuple(mp), dp=tuple(dp), pp=tuple(pp),
+                             ep=tuple(ep),
+                             num_microbatches=tuple(num_microbatches)))
+
+
+def pp_ep_ranking(processes: Optional[int] = None,
+                  **kwargs) -> List[Dict[str, float]]:
+    """Feasible four-axis cells, fastest first (per-cluster ranking is a
+    ``select(cluster=...)`` away)."""
+    res = run_study(pp_ep_study(**kwargs), processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["total"])
 
 
 # --------------------------------------------------------------------- #

@@ -122,13 +122,16 @@ class CommEvent:
     """One collective issued by a layer in a phase.
 
     scope: which mesh dimension the collective spans —
-      "mp" (model-parallel group), "dp" (data-parallel group),
-      "ep" (expert-parallel group; maps onto the mp group in this repo).
+      "mp" (model-parallel group),
+      "dp" (data-parallel group; spans DP x EP when an EP axis exists),
+      "ep" (expert-parallel group; with ep == 1 it maps onto the mp group),
+      "pp" (pipeline axis: the stage-boundary "p2p" transfers),
+      "edp" (expert-gradient group: DP only, experts being EP-sharded).
     blocking: True -> on the critical path (FP/IG MP collectives);
               False -> overlappable with compute (WG DP collectives).
     """
 
-    collective: str  # all-reduce | all-gather | reduce-scatter | all-to-all
+    collective: str  # all-reduce | all-gather | reduce-scatter | all-to-all | p2p
     size_bytes: int
     scope: str
     blocking: bool

@@ -49,15 +49,85 @@ class FootprintReport:
     fits_total: bool
 
 
+def worst_report(reps) -> FootprintReport:
+    """Gating report over several footprints (pipeline stages, node
+    groups): the largest total, with the fits flags ANDed — feasible only
+    if every report fits."""
+    return dataclasses.replace(
+        max(reps, key=lambda r: r.total),
+        fits_local=all(r.fits_local for r in reps),
+        fits_total=all(r.fits_total for r in reps))
+
+
+def _data_ways(workload: Workload) -> int:
+    """ZeRO shards dense weights across the full data group: DP x EP (EP
+    ranks replicate the dense weights, so they join the sharding group;
+    pre-EP workloads have ep == 1 and this is exactly dp)."""
+    return max(1, workload.dp * getattr(workload, "ep", 1))
+
+
+def _layer_states(layers, dense_ways: int, expert_ways: int,
+                  zero_stage: int) -> float:
+    """Model-state bytes for a layer list: dense params replicate (and ZeRO-
+    shard) across DP x EP, expert params are EP-sharded already and only
+    replicate across DP — mirroring the "dp" vs "edp" gradient scopes."""
+    dense = sum((l.weight_bytes - l.expert_bytes) * l.repeat
+                for l in layers) / FP16
+    expert = sum(l.expert_bytes * l.repeat for l in layers) / FP16
+    states = model_state_bytes(dense, dense_ways, zero_stage)
+    if expert:
+        states += model_state_bytes(expert, expert_ways, zero_stage)
+    return states
+
+
+def stage_footprints(
+    workload: Workload,
+    node: Optional[NodeConfig] = None,
+    zero_stage: int = 2,
+) -> list:
+    """Per-pipeline-stage footprint reports (one entry when pp == 1).
+
+    Each stage holds its own layers' model states.  Activation working
+    memory is per-microbatch (1/m of the full-batch intermediates) times
+    the schedule's stash depth: GPipe stashes all ``m`` in-flight
+    microbatches; 1F1B at stage ``s`` stashes at most ``pp - s``
+    (Megatron-LM §2.2), so early stages pay more."""
+    m = max(1, getattr(workload, "num_microbatches", 1))
+    schedule = getattr(workload, "schedule", "1f1b")
+    pp = max(1, getattr(workload, "pp", 1))
+    dways = _data_ways(workload)
+    reps = []
+    for s, layers in enumerate(workload.stage_layers()):
+        states = _layer_states(layers, dways, max(1, workload.dp),
+                               zero_stage)
+        max_act = max((l.act_out_bytes for l in layers), default=0)
+        stash = m if schedule == "gpipe" else min(m, pp - s)
+        awm = max_act / m * stash
+        total = states + awm
+        fits_local = fits_total = True
+        if node is not None:
+            fits_local = total <= node.local_cap
+            fits_total = total <= node.total_cap
+        reps.append(FootprintReport(states, awm, total, fits_local,
+                                    fits_total))
+    return reps
+
+
 def per_node_footprint(
     workload: Workload,
     node: Optional[NodeConfig] = None,
     zero_stage: int = 2,
 ) -> FootprintReport:
     """Per-node footprint of a decomposed workload (paper defaults: ZeRO-2,
-    fp16 activations, checkpoint activations host-offloaded)."""
-    params = workload.total_weight_bytes() / FP16
-    states = model_state_bytes(params, workload.dp, zero_stage)
+    fp16 activations, checkpoint activations host-offloaded).
+
+    For pipeline workloads (pp > 1) this reports the *worst* stage's bytes,
+    with the fits flags ANDed over every stage (feasibility = each stage
+    fits its nodes)."""
+    if getattr(workload, "pp", 1) > 1:
+        return worst_report(stage_footprints(workload, node, zero_stage))
+    states = _layer_states(workload.layers, _data_ways(workload),
+                           max(1, workload.dp), zero_stage)
     awm = workload.activation_working_bytes()
     total = states + awm
     fits_local = fits_total = True
@@ -74,12 +144,8 @@ def cluster_footprint(workload: Workload, cluster,
     The byte totals are node-independent (same shard everywhere under
     synchronous training); the fits flags AND across every node group, so
     a mixed cluster only 'fits' if its least-capable group does."""
-    reps = [per_node_footprint(workload, g.node, zero_stage)
-            for g in cluster.node_groups]
-    return dataclasses.replace(
-        reps[0],
-        fits_local=all(r.fits_local for r in reps),
-        fits_total=all(r.fits_total for r in reps))
+    return worst_report([per_node_footprint(workload, g.node, zero_stage)
+                         for g in cluster.node_groups])
 
 
 def hybrid_bandwidth(total_bytes: float, data_lm: float,

@@ -15,7 +15,19 @@ semantics:
   * heterogeneous clusters (ClusterSpec with several pod groups) follow
     synchronous-training semantics: every group holds the same shard, the
     slowest / least-capable group gates the iteration, and the cluster is
-    feasible only if the shard fits every group's nodes.
+    feasible only if the shard fits every group's nodes;
+  * pipeline workloads (``Workload.pp > 1``) run a microbatch schedule
+    model: each stage's full-batch time ``T_s`` (compute + blocking comm +
+    exposed residue, including the stage-boundary p2p transfers) is split
+    into ``m = num_microbatches`` microbatches, and the iteration is gated
+    by the slowest stage with the standard bubble term
+
+        T_pipe = (m + pp - 1) / m * max_s T_s
+
+    i.e. bubble fraction (pp - 1) / (m + pp - 1) — identical for GPipe and
+    1F1B (they differ in activation stashing, handled by
+    ``repro.core.memory.stage_footprints``).  Feasibility requires every
+    stage to fit its nodes.
 
 Outputs the per-phase compute/exposed-communication breakdown of Fig. 8a.
 """
@@ -23,7 +35,7 @@ Outputs the per-phase compute/exposed-communication breakdown of Fig. 8a.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterLike, NodeConfig
 from repro.core.collectives import CollectiveModel
@@ -31,12 +43,16 @@ from repro.core.memory import (
     FootprintReport,
     effective_memory_bw,
     per_node_footprint,
+    stage_footprints,
+    worst_report,
 )
 from repro.core.roofline import compute_delay
 from repro.core.topology import Topology
-from repro.core.workload import Workload
+from repro.core.workload import LayerSpec, Workload
 
 OPTIM_BYTES_PER_PARAM = 28  # grad read + fp32 m/v/master read+write
+
+_SCOPES = ("mp", "dp", "ep", "pp", "edp")
 
 
 @dataclasses.dataclass
@@ -48,6 +64,10 @@ class PhaseBreakdown:
     def total(self) -> float:
         return self.compute + self.exposed_comm
 
+    def scaled(self, factor: float) -> "PhaseBreakdown":
+        return PhaseBreakdown(self.compute * factor,
+                              self.exposed_comm * factor)
+
 
 @dataclasses.dataclass
 class IterationBreakdown:
@@ -58,6 +78,10 @@ class IterationBreakdown:
     footprint: FootprintReport
     mem_bw: float
     feasible: bool
+    # Pipeline-schedule idle fraction (pp - 1) / (m + pp - 1); 0.0 when the
+    # workload has no pipeline dimension.  Kept out of as_dict() so the
+    # time components still sum to ``total``.
+    bubble_fraction: float = 0.0
 
     @property
     def total(self) -> float:
@@ -74,6 +98,13 @@ class IterationBreakdown:
             "optimizer": self.optimizer,
             "total": self.total,
         }
+
+
+def _infeasible(rep: FootprintReport, mem_bw: float,
+                bubble_fraction: float = 0.0) -> IterationBreakdown:
+    return IterationBreakdown(PhaseBreakdown(), PhaseBreakdown(),
+                              PhaseBreakdown(), 0.0, rep, mem_bw, False,
+                              bubble_fraction=bubble_fraction)
 
 
 def simulate_iteration(
@@ -98,60 +129,52 @@ def simulate_iteration(
                                mem_bw_override, require_fit)
     per = [_simulate_group(workload, g.node, g.topology, zero_stage,
                            mem_bw_override, require_fit) for g in groups]
-    reps = [b.footprint for b in per]
     # Footprint totals are node-independent; only the fits flags differ.
-    worst_rep = dataclasses.replace(
-        max(reps, key=lambda r: r.total),
-        fits_local=all(r.fits_local for r in reps),
-        fits_total=all(r.fits_total for r in reps))
+    worst_rep = worst_report([b.footprint for b in per])
     feasible = all(b.feasible for b in per)
     if require_fit and not feasible:
-        return IterationBreakdown(PhaseBreakdown(), PhaseBreakdown(),
-                                  PhaseBreakdown(), 0.0, worst_rep,
-                                  min(b.mem_bw for b in per), False)
+        return _infeasible(worst_rep, min(b.mem_bw for b in per),
+                           bubble_fraction=max(b.bubble_fraction
+                                               for b in per))
     worst = max(per, key=lambda b: b.total)
     return IterationBreakdown(worst.fp, worst.ig, worst.wg, worst.optimizer,
-                              worst_rep, worst.mem_bw, feasible)
+                              worst_rep, worst.mem_bw, feasible,
+                              bubble_fraction=worst.bubble_fraction)
 
 
-def _simulate_group(
-    workload: Workload,
-    node: NodeConfig,
-    topology: Topology,
-    zero_stage: int,
-    mem_bw_override: "Optional[float | str]",
-    require_fit: bool,
-) -> IterationBreakdown:
-    """The ASTRA-lite timeline for one homogeneous node group."""
-    if mem_bw_override == "local":
-        mem_bw_override = node.local_bw
-    fp_rep = per_node_footprint(workload, node, zero_stage)
-    mem_bw = (mem_bw_override if mem_bw_override is not None
-              else effective_memory_bw(node, fp_rep.total))
-    feasible = fp_rep.fits_total
-    if require_fit and not feasible:
-        return IterationBreakdown(PhaseBreakdown(), PhaseBreakdown(),
-                                  PhaseBreakdown(), 0.0, fp_rep, mem_bw, False)
-    coll = CollectiveModel(topology, workload.mp, workload.dp)
-    sram = node.sram_bytes
+# --------------------------------------------------------------------- #
+# Shared timeline machinery
+# --------------------------------------------------------------------- #
 
-    # Precompute per-unique-layer delays.
-    delays = []  # (layer, {phase: compute_delay}, {phase: [(dur, blocking, scope)]})
-    for layer in workload.layers:
+# (layer, {phase: compute delay}, {phase: [(dur, blocking, scope)]})
+_Delays = List[Tuple[LayerSpec, Dict[str, float], Dict[str, list]]]
+
+
+def _layer_delays(layers: List[LayerSpec], node: NodeConfig, mem_bw: float,
+                  coll: CollectiveModel, sram: float) -> _Delays:
+    out = []
+    for layer in layers:
         d = {p: compute_delay(layer.phase_cost(p, sram), node, mem_bw).delay
              for p in ("fp", "ig", "wg")}
         c = {p: [(coll.time(e.collective, e.size_bytes, e.scope),
                   e.blocking, e.scope) for e in layer.comm(p)]
              for p in ("fp", "ig", "wg")}
-        delays.append((layer, d, c))
+        out.append((layer, d, c))
+    return out
 
+
+def _run_timeline(delays: _Delays) -> Tuple[PhaseBreakdown, PhaseBreakdown,
+                                            PhaseBreakdown]:
+    """FP pass then interleaved IG/WG backward pass over one layer list,
+    with blocking collectives on the critical path and non-blocking ones on
+    independent per-scope network streams (residue exposed at the end)."""
     fp = PhaseBreakdown()
     ig = PhaseBreakdown()
     wg = PhaseBreakdown()
 
     # ---------------- forward pass ----------------
     tc = 0.0
-    tn: Dict[str, float] = {"mp": 0.0, "dp": 0.0, "ep": 0.0}
+    tn: Dict[str, float] = {s: 0.0 for s in _SCOPES}
     for layer, d, c in delays:
         for _ in range(layer.repeat):
             tc += d["fp"]
@@ -169,7 +192,7 @@ def _simulate_group(
 
     # ---------------- backward (IG + WG interleaved, reverse order) ------
     tc = 0.0
-    tn = {"mp": 0.0, "dp": 0.0, "ep": 0.0}
+    tn = {s: 0.0 for s in _SCOPES}
     for layer, d, c in reversed(delays):
         for _ in range(layer.repeat):
             tc += d["ig"]
@@ -198,14 +221,102 @@ def _simulate_group(
                     tn[scope] = start + dur
     # Non-blocking residue past the end of backward compute is exposed.
     wg.exposed_comm += max(0.0, max(tn.values()) - tc)
+    return fp, ig, wg
 
-    # ---------------- optimizer update ----------------
-    dense_w = sum(l.weight_bytes * l.repeat for l in workload.layers
-                  if l.optim_bytes is None)
-    sparse = sum(l.optim_bytes * l.repeat for l in workload.layers
+
+def _optimizer_time(layers: List[LayerSpec], dense_ways: int,
+                    expert_ways: int, zero_stage: int,
+                    mem_bw: float) -> float:
+    """Optimizer-update memory time.  Dense params ZeRO-shard across the
+    DP x EP data group; expert params are EP-sharded already and shard
+    across DP only (matching ``memory._layer_states``)."""
+    dense_w = sum((l.weight_bytes - l.expert_bytes) * l.repeat
+                  for l in layers if l.optim_bytes is None)
+    expert_w = sum(l.expert_bytes * l.repeat for l in layers
+                   if l.optim_bytes is None)
+    sparse = sum(l.optim_bytes * l.repeat for l in layers
                  if l.optim_bytes is not None)
     params = dense_w / 2
-    shard = params / max(1, workload.dp) if zero_stage >= 1 else params
-    optim = (shard * OPTIM_BYTES_PER_PARAM + sparse) / mem_bw
+    shard = params / max(1, dense_ways) if zero_stage >= 1 else params
+    if expert_w:
+        ep_params = expert_w / 2
+        shard += (ep_params / max(1, expert_ways) if zero_stage >= 1
+                  else ep_params)
+    return (shard * OPTIM_BYTES_PER_PARAM + sparse) / mem_bw
 
+
+def _simulate_group(
+    workload: Workload,
+    node: NodeConfig,
+    topology: Topology,
+    zero_stage: int,
+    mem_bw_override: "Optional[float | str]",
+    require_fit: bool,
+) -> IterationBreakdown:
+    """The ASTRA-lite timeline for one homogeneous node group."""
+    if mem_bw_override == "local":
+        mem_bw_override = node.local_bw
+    if getattr(workload, "pp", 1) > 1:
+        return _simulate_pipeline(workload, node, topology, zero_stage,
+                                  mem_bw_override, require_fit)
+    ep = getattr(workload, "ep", 1)
+    fp_rep = per_node_footprint(workload, node, zero_stage)
+    mem_bw = (mem_bw_override if mem_bw_override is not None
+              else effective_memory_bw(node, fp_rep.total))
+    feasible = fp_rep.fits_total
+    if require_fit and not feasible:
+        return _infeasible(fp_rep, mem_bw)
+    coll = CollectiveModel(topology, workload.mp, workload.dp, ep=ep)
+    delays = _layer_delays(workload.layers, node, mem_bw, coll,
+                           node.sram_bytes)
+    fp, ig, wg = _run_timeline(delays)
+    optim = _optimizer_time(workload.layers, workload.dp * ep, workload.dp,
+                            zero_stage, mem_bw)
     return IterationBreakdown(fp, ig, wg, optim, fp_rep, mem_bw, feasible)
+
+
+def _simulate_pipeline(
+    workload: Workload,
+    node: NodeConfig,
+    topology: Topology,
+    zero_stage: int,
+    mem_bw_override: Optional[float],
+    require_fit: bool,
+) -> IterationBreakdown:
+    """Microbatch pipeline schedule over the slowest stage (GPipe / 1F1B).
+
+    Per-stage full-batch times come from the same timeline machinery as the
+    flat path (boundary p2p transfers are blocking events on the boundary
+    layers); the reported phase breakdown is the gating stage's, scaled by
+    the schedule factor (m + pp - 1) / m so ``total`` is the pipeline
+    iteration time.  The optimizer step runs concurrently on every stage,
+    so its time is the max over stages."""
+    pp = workload.pp
+    m = max(1, workload.num_microbatches)
+    stages = workload.stage_layers()
+    reps = stage_footprints(workload, node, zero_stage)
+    worst_rep = worst_report(reps)
+    mem_bws = [mem_bw_override if mem_bw_override is not None
+               else effective_memory_bw(node, r.total) for r in reps]
+    feasible = worst_rep.fits_total
+    bubble = (pp - 1) / (m + pp - 1)
+    if require_fit and not feasible:
+        return _infeasible(worst_rep, min(mem_bws), bubble_fraction=bubble)
+    coll = CollectiveModel(topology, workload.mp, workload.dp,
+                           pp=pp, ep=workload.ep)
+    data_ways = workload.dp * workload.ep
+    per_stage = []
+    for layers, bw in zip(stages, mem_bws):
+        delays = _layer_delays(layers, node, bw, coll, node.sram_bytes)
+        fp, ig, wg = _run_timeline(delays)
+        per_stage.append((fp, ig, wg, fp.total + ig.total + wg.total))
+    k = max(range(pp), key=lambda s: per_stage[s][3])
+    fp, ig, wg, _ = per_stage[k]
+    scale = (m + pp - 1) / m
+    optim = max(_optimizer_time(layers, data_ways, workload.dp, zero_stage,
+                                bw)
+                for layers, bw in zip(stages, mem_bws))
+    return IterationBreakdown(fp.scaled(scale), ig.scaled(scale),
+                              wg.scaled(scale), optim, worst_rep,
+                              mem_bws[k], feasible,
+                              bubble_fraction=bubble)

@@ -5,7 +5,8 @@ and *cluster resource knobs*; this module turns that into data instead of
 per-figure functions:
 
   * :class:`ParallelSpec` — a strategy point generalizing the paper's
-    (MP, DP) pairs to (MP, DP, PP, EP, ZeRO stage);
+    (MP, DP) pairs to (MP, DP, PP, EP, ZeRO stage, microbatch count), all
+    modeled natively by the default analytical workload builder;
   * :class:`StrategySpace` — pluggable strategy enumerators
     (:class:`PowerOfTwoSpace` reproduces the paper sweep,
     :class:`FactorizationSpace` adds non-power-of-two factorizations,
@@ -32,6 +33,7 @@ import dataclasses
 import io
 import itertools
 import json
+import math
 import os
 from typing import (
     Any,
@@ -48,8 +50,12 @@ from typing import (
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig, ClusterLike
 from repro.core.memory import FootprintReport
-from repro.core.simulator import IterationBreakdown, simulate_iteration
-from repro.core.workload import Workload, decompose
+from repro.core.simulator import (
+    IterationBreakdown,
+    PhaseBreakdown,
+    simulate_iteration,
+)
+from repro.core.workload import InfeasibleStrategyError, Workload, decompose
 
 GB = 1e9
 
@@ -64,11 +70,10 @@ DEFAULT_ZERO_STAGE = 2  # paper default (§IV-B): ZeRO-2 (os + g sharded)
 class ParallelSpec:
     """One parallelization-strategy point.
 
-    Generalizes the paper's (MP, DP) pairs: PP (pipeline) and EP (expert)
-    degrees and the ZeRO stage are first-class so strategy spaces can
-    enumerate them; the analytical ``decompose`` currently models MP x DP
-    (+ its internal EP rule) — studies that sweep PP/EP supply their own
-    workload builder until the decomposition grows those axes natively.
+    Generalizes the paper's (MP, DP) pairs to the four-axis product
+    (MP, DP, PP, EP) plus the ZeRO stage — all modeled natively by the
+    default analytical ``decompose``.  ``num_microbatches`` sets the
+    pipeline microbatch count (0 = auto: the shape's knob, else ``4 * pp``).
     """
 
     mp: int = 1
@@ -76,6 +81,7 @@ class ParallelSpec:
     pp: int = 1
     ep: int = 1
     zero_stage: int = DEFAULT_ZERO_STAGE
+    num_microbatches: int = 0          # 0 = auto (shape knob or 4 * pp)
 
     def __post_init__(self):
         for f in ("mp", "dp", "pp", "ep"):
@@ -83,6 +89,14 @@ class ParallelSpec:
                 raise ValueError(f"{f} must be >= 1, got {getattr(self, f)}")
         if not 0 <= self.zero_stage <= 3:
             raise ValueError(f"zero_stage must be 0..3, got {self.zero_stage}")
+        if self.num_microbatches < 0:
+            raise ValueError(
+                f"num_microbatches must be >= 0, got {self.num_microbatches}")
+        if self.pp == 1 and self.num_microbatches:
+            # Microbatching is a pipeline knob: without PP it has no effect
+            # on the decomposition, so normalize it away — distinct specs
+            # must mean distinct physics (labels, memo keys, grid dedupe).
+            object.__setattr__(self, "num_microbatches", 0)
 
     @property
     def num_nodes(self) -> int:
@@ -97,6 +111,8 @@ class ParallelSpec:
             parts.append(f"EP{self.ep}")
         if self.zero_stage != DEFAULT_ZERO_STAGE:
             parts.append(f"Z{self.zero_stage}")
+        if self.num_microbatches:
+            parts.append(f"MB{self.num_microbatches}")
         return "_".join(parts)
 
 
@@ -110,21 +126,34 @@ class StrategySpace:
 @dataclasses.dataclass(frozen=True)
 class PowerOfTwoSpace(StrategySpace):
     """The paper's sweep: all (MP, DP) with MP * DP = N, MP a power of two,
-    MP descending (Fig. 8 ordering)."""
+    MP descending (Fig. 8 ordering).
+
+    ``pp`` / ``ep`` extend the sweep to the four-axis product: for every
+    (pp, ep) pair dividing the cluster, MP powers of two enumerate over the
+    remaining N / (pp * ep) nodes.  Defaults reproduce the paper sweep."""
 
     zero_stage: int = DEFAULT_ZERO_STAGE
     min_mp: int = 1
     max_mp: Optional[int] = None
+    pp: Sequence[int] = (1,)
+    ep: Sequence[int] = (1,)
+    num_microbatches: int = 0
 
     def specs(self, num_nodes: int) -> List[ParallelSpec]:
         out = []
-        mp = num_nodes
-        while mp >= 1:
-            if mp >= self.min_mp and (self.max_mp is None
-                                      or mp <= self.max_mp):
-                out.append(ParallelSpec(mp=mp, dp=num_nodes // mp,
-                                        zero_stage=self.zero_stage))
-            mp //= 2
+        for pp, ep in itertools.product(self.pp, self.ep):
+            if num_nodes % (pp * ep):
+                continue
+            rem = num_nodes // (pp * ep)
+            mp = rem
+            while mp >= 1:
+                if mp >= self.min_mp and (self.max_mp is None
+                                          or mp <= self.max_mp):
+                    out.append(ParallelSpec(
+                        mp=mp, dp=rem // mp, pp=pp, ep=ep,
+                        zero_stage=self.zero_stage,
+                        num_microbatches=self.num_microbatches))
+                mp //= 2
         return out
 
 
@@ -152,7 +181,8 @@ class FactorizationSpace(StrategySpace):
 
 @dataclasses.dataclass(frozen=True)
 class GridSpace(StrategySpace):
-    """Cartesian product over (mp, dp, pp, ep, zero_stage) value sets.
+    """Cartesian product over (mp, dp, pp, ep, zero_stage, microbatch)
+    value sets.
 
     With ``fill_cluster`` (default) only points whose total degree equals
     the cluster size survive — the paper's "use every node" constraint;
@@ -163,15 +193,22 @@ class GridSpace(StrategySpace):
     pp: Sequence[int] = (1,)
     ep: Sequence[int] = (1,)
     zero_stages: Sequence[int] = (DEFAULT_ZERO_STAGE,)
+    num_microbatches: Sequence[int] = (0,)
     fill_cluster: bool = True
 
     def specs(self, num_nodes: int) -> List[ParallelSpec]:
         out = []
-        for mp, dp, pp, ep, z in itertools.product(
-                self.mp, self.dp, self.pp, self.ep, self.zero_stages):
-            s = ParallelSpec(mp=mp, dp=dp, pp=pp, ep=ep, zero_stage=z)
+        seen = set()
+        for mp, dp, pp, ep, z, mb in itertools.product(
+                self.mp, self.dp, self.pp, self.ep, self.zero_stages,
+                self.num_microbatches):
+            s = ParallelSpec(mp=mp, dp=dp, pp=pp, ep=ep, zero_stage=z,
+                             num_microbatches=mb)
             if self.fill_cluster and s.num_nodes != num_nodes:
                 continue
+            if s in seen:   # pp=1 normalizes the microbatch knob away
+                continue
+            seen.add(s)
             out.append(s)
         return out
 
@@ -294,7 +331,8 @@ class StudyContext:
 class StudySpec:
     """A declarative COMET study: strategies x axes on a base cluster.
 
-    ``workload`` (default: ``decompose(model, shape, mp, dp)``) may read
+    ``workload`` (default: ``decompose(model, shape, mp, dp, pp, ep)`` —
+    the full four-axis analytical decomposition) may read
     anything on the context; list the axis names it depends on in
     ``workload_deps`` so the engine's memoizer keys decompositions
     correctly. ``metrics`` adds derived record columns. ``evaluate``
@@ -319,6 +357,7 @@ class StudySpec:
     # silently corrupt select()/pivot()/best().
     RESERVED_COLUMNS = frozenset({
         "study", "strategy", "mp", "dp", "pp", "ep", "zero_stage",
+        "num_microbatches", "bubble_fraction", "infeasible_reason",
         "fp_compute", "fp_exposed_comm", "ig_compute", "ig_exposed_comm",
         "wg_compute", "wg_exposed_comm", "optimizer", "total",
         "feasible", "footprint_bytes", "mem_bw",
@@ -388,15 +427,12 @@ def _cells(spec: StudySpec) -> List[Tuple[Optional[ParallelSpec],
 
 def _default_workload(ctx: StudyContext) -> Workload:
     s = ctx.strategy or ParallelSpec()
-    if s.pp > 1 or s.ep > 1:
-        raise ValueError(
-            f"strategy {s.label}: the default analytical decomposition "
-            "models MP x DP only — supply StudySpec.workload to study "
-            "PP/EP degrees (see ROADMAP open items)")
     if ctx.spec.model is None or ctx.spec.shape is None:
         raise ValueError(f"study {ctx.spec.name!r}: set model+shape or "
                          "provide a workload builder")
-    return decompose(ctx.spec.model, ctx.spec.shape, mp=s.mp, dp=s.dp)
+    return decompose(ctx.spec.model, ctx.spec.shape, mp=s.mp, dp=s.dp,
+                     pp=s.pp, ep=s.ep,
+                     num_microbatches=s.num_microbatches or None)
 
 
 def _workload_key(spec: StudySpec, strategy: Optional[ParallelSpec],
@@ -435,7 +471,8 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
     if strategy is not None:
         base.update(strategy=strategy.label, mp=strategy.mp, dp=strategy.dp,
                     pp=strategy.pp, ep=strategy.ep,
-                    zero_stage=strategy.zero_stage)
+                    zero_stage=strategy.zero_stage,
+                    num_microbatches=strategy.num_microbatches)
     base.update(point)
 
     if spec.evaluate is not None:
@@ -448,8 +485,39 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
 
     wkey = _workload_key(spec, strategy, point)
     if wkey not in wl_memo:
-        wl_memo[wkey] = (spec.workload or _default_workload)(ctx)
-    ctx.workload = wl_memo[wkey]
+        try:
+            wl_memo[wkey] = (spec.workload or _default_workload)(ctx)
+        except InfeasibleStrategyError as err:
+            wl_memo[wkey] = err
+    wl = wl_memo[wkey]
+    if isinstance(wl, InfeasibleStrategyError):
+        # A swept degree this model cannot realize (ep not dividing the
+        # experts, pp past the layer count): an infeasible record, not an
+        # aborted sweep.  Derives the standard column set from a zeroed
+        # IterationBreakdown (one schema for both record shapes) plus every
+        # custom metric column (NaN when the metric needs the absent
+        # workload) so pivot()/normalize()/best() keep working on mixed
+        # results.
+        zeroed = IterationBreakdown(
+            PhaseBreakdown(), PhaseBreakdown(), PhaseBreakdown(),
+            0.0, None, 0.0, False).as_dict()
+        record = {**base, **zeroed, "total": float("inf"),
+                  "feasible": False, "footprint_bytes": float("inf"),
+                  "mem_bw": 0.0, "bubble_fraction": 0.0,
+                  "infeasible_reason": str(wl)}
+        if cluster is not None:
+            _cost_columns(record, cluster)
+        for mname, fn in spec.metrics.items():
+            try:
+                record[mname] = fn(ctx)
+            except Exception:
+                record[mname] = float("nan")
+        return CellResult(strategy, ctx.point, cluster, None, None, record)
+    ctx.workload = wl
+    if strategy is not None and hasattr(ctx.workload, "num_microbatches"):
+        # Surface the workload's *resolved* microbatch count (the strategy
+        # may have asked for 0 = auto; pp == 1 resolves to 1).
+        base["num_microbatches"] = ctx.workload.num_microbatches
 
     # "local" resolves per node group inside the simulator, so it works on
     # heterogeneous ClusterSpecs too (each group's own node.local_bw).
@@ -474,7 +542,8 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
     record = {**base, **br.as_dict(),
               "feasible": br.feasible,
               "footprint_bytes": br.footprint.total,
-              "mem_bw": br.mem_bw}
+              "mem_bw": br.mem_bw,
+              "bubble_fraction": br.bubble_fraction}
     _cost_columns(record, cluster)
     for mname, fn in spec.metrics.items():
         record[mname] = fn(ctx)
@@ -567,8 +636,13 @@ class StudyResult:
              require_fit_bytes: Optional[float] = None,
              maximize: bool = False) -> CellResult:
         """Cell minimizing ``metric`` (or maximizing it, e.g. for
-        ``perf_per_dollar``), optionally capacity-constrained."""
-        pool = self.cells
+        ``perf_per_dollar``), optionally capacity-constrained.  Cells whose
+        metric is missing or NaN (infeasible-strategy records) are
+        skipped."""
+        pool = [c for c in self.cells
+                if not (c.record.get(metric) is None
+                        or (isinstance(c.record.get(metric), float)
+                            and math.isnan(c.record[metric])))]
         if require_fit_bytes is not None:
             pool = [c for c in pool
                     if c.record.get("footprint_bytes", 0) <= require_fit_bytes]
@@ -637,7 +711,12 @@ class StudyResult:
         return text
 
     def to_json(self, path: Optional[str] = None) -> str:
-        text = json.dumps({"study": self.spec.name, "records": self.records},
+        # inf/nan (infeasible-strategy records) are not valid JSON tokens;
+        # serialize them as null so strict RFC 8259 parsers accept the file.
+        records = [{k: (None if isinstance(v, float) and not math.isfinite(v)
+                        else v) for k, v in r.items()}
+                   for r in self.records]
+        text = json.dumps({"study": self.spec.name, "records": records},
                           indent=1, default=str)
         if path:
             with open(path, "w") as f:

@@ -58,11 +58,26 @@ def flat_time(collective: str, size: float, n: int, bw: float,
         return ring_allgather(size, n, bw, lat)
     if collective == "all-to-all":
         return all_to_all(size, n, bw, lat)
+    if collective == "p2p":   # one point-to-point transfer (PP stage hop)
+        return size / bw + lat if size > 0 else 0.0
     raise ValueError(f"unknown collective {collective!r}")
 
 
-def _group_size(scope: str, mp: int, dp: int) -> int:
-    return mp if scope in ("mp", "ep") else dp
+def _group_size(scope: str, mp: int, dp: int, pp: int = 1, ep: int = 1) -> int:
+    """Communication-group size for a scope under the four-axis product.
+
+    ``"ep"`` with ep == 1 keeps the legacy mapping onto the MP group;
+    ``"dp"`` spans the full DP x EP data group (EP ranks replicate dense
+    weights); ``"edp"`` is the expert-gradient group (DP only)."""
+    if scope == "mp":
+        return mp
+    if scope == "ep":
+        return ep if ep > 1 else mp
+    if scope == "pp":
+        return pp
+    if scope == "edp":
+        return dp
+    return dp * ep
 
 
 # --------------------------------------------------------------------- #
@@ -81,18 +96,33 @@ class GroupPlacement:
     inter: int
 
 
-def placement(scope: str, mp: int, dp: int, pod_size: int) -> GroupPlacement:
-    """Paper's placement: MP consecutive (fills pods first), DP strided."""
-    if scope in ("mp", "ep"):
+def _strided(group: int, stride: int, pod_size: int) -> GroupPlacement:
+    """Placement of a group whose peers stride ``stride`` consecutive
+    ranks apart (pods fill rank-major)."""
+    if stride >= pod_size:
+        return GroupPlacement(intra=1, inter=group)
+    per_pod = max(1, pod_size // stride)
+    per_pod = min(per_pod, group)
+    return GroupPlacement(intra=per_pod, inter=max(1, group // per_pod))
+
+
+def placement(scope: str, mp: int, dp: int, pod_size: int,
+              pp: int = 1, ep: int = 1) -> GroupPlacement:
+    """Paper's placement, extended to the four-axis mesh: MP consecutive
+    (fills pods first), then EP, then DP, with PP stages outermost."""
+    if scope == "mp" or (scope == "ep" and ep <= 1):
+        # legacy: the EP group rode the MP group
         if mp <= pod_size:
             return GroupPlacement(intra=mp, inter=1)
         return GroupPlacement(intra=pod_size, inter=mp // pod_size)
-    # dp: peers stride by mp
-    if mp >= pod_size:
-        return GroupPlacement(intra=1, inter=dp)
-    per_pod = max(1, pod_size // mp)
-    per_pod = min(per_pod, dp)
-    return GroupPlacement(intra=per_pod, inter=max(1, dp // per_pod))
+    if scope == "ep":
+        return _strided(ep, mp, pod_size)
+    if scope == "pp":
+        return _strided(pp, mp * ep * dp, pod_size)
+    if scope == "edp":
+        return _strided(dp, mp * ep, pod_size)
+    # dp: the full DP x EP data group, peers stride by mp
+    return _strided(dp * ep, mp, pod_size)
 
 
 # --------------------------------------------------------------------- #
@@ -127,7 +157,8 @@ class Topology(Protocol):
     def links_per_node(self) -> int: ...
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int) -> float: ...
+                        mp: int, dp: int, pp: int = 1, ep: int = 1
+                        ) -> float: ...
 
     def with_(self, **updates): ...
 
@@ -175,10 +206,18 @@ class HierarchicalSwitch(TopologyBase):
         return 2                   # one intra-pod link + one inter-pod uplink
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int) -> float:
-        if _group_size(scope, mp, dp) <= 1 or size <= 0:
+                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+        if _group_size(scope, mp, dp, pp, ep) <= 1 or size <= 0:
             return 0.0
-        pl = placement(scope, mp, dp, self.pod_size)
+        if collective == "p2p":
+            # Stage neighbours sit mp*ep*dp ranks apart.  Unless the whole
+            # pp-stage mesh fits inside one pod, some stage boundary
+            # crosses pods — and the simulator gates on the slowest stage,
+            # so bill the inter-pod hop.
+            if mp * ep * dp * pp <= self.pod_size:
+                return size / self.intra_bw + self.intra_latency
+            return size / self.inter_bw + self.inter_latency
+        pl = placement(scope, mp, dp, self.pod_size, pp, ep)
         p, q = pl.intra, pl.inter
         if q <= 1:  # fully intra-pod
             return flat_time(collective, size, p, self.intra_bw,
@@ -241,10 +280,16 @@ class Torus(TopologyBase):
         return 2 * len(self.dims) + (1 if self.dcn_bw else 0)
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int) -> float:
-        group = _group_size(scope, mp, dp)
+                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+        group = _group_size(scope, mp, dp, pp, ep)
         if group <= 1 or size <= 0:
             return 0.0
+        if collective == "p2p":
+            # One hop to the neighbouring stage; DCN when the pp-stage mesh
+            # spills past one torus pod (worst boundary gates, as above).
+            if self.dcn_bw and mp * ep * dp * pp > self.pod_size:
+                return size / self.dcn_bw + self.dcn_latency
+            return size / self.link_bw + self.latency
         return self._time(collective, size, group)
 
     def _time(self, collective: str, size: float, group: int) -> float:
@@ -323,8 +368,8 @@ class SingleSwitch(TopologyBase):
         return 1
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int) -> float:
-        group = _group_size(scope, mp, dp)
+                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+        group = _group_size(scope, mp, dp, pp, ep)
         if group <= 1 or size <= 0:
             return 0.0
         return flat_time(collective, size, group, self.bw, self.latency)

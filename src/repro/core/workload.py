@@ -1,10 +1,11 @@
 """COMET §III-A / §IV-A: model -> per-layer GEMM decomposition.
 
-``decompose(cfg, shape, mp, dp)`` turns a :class:`repro.configs.ModelConfig`
-into a :class:`Workload`: an ordered list of :class:`LayerSpec`, each holding
+``decompose(cfg, shape, mp, dp, pp, ep)`` turns a
+:class:`repro.configs.ModelConfig` into a :class:`Workload`: an ordered list
+of :class:`LayerSpec`, each holding
 
   * the per-node forward GEMMs / explicit ops (already sharded for the given
-    MP degree, with the per-replica batch ``global_batch / dp``),
+    MP degree, with the per-replica batch ``global_batch / (dp * ep)``),
   * the derived input-gradient (IG) and weight-gradient (WG) ops,
   * the communication events per phase (blocking MP collectives in FP/IG,
     non-blocking DP collectives in WG — paper §III-C3),
@@ -14,6 +15,23 @@ The transformer decomposition follows the paper's Table II (Megatron-style
 MP: column-parallel QKV/FFN-in, row-parallel proj/FFN-out, vocab-parallel
 embeddings); the additional families (MoE/EP, SSD, hybrid, enc-dec, VLM)
 extend the same scheme — each is documented inline.
+
+Four-axis strategies (Megatron-LM / GSPMD style):
+
+  * **PP** — ``pp > 1`` partitions the layer stack into ``pp`` contiguous
+    stages balanced by FLOPs (``LayerSpec.stage``), with blocking
+    point-to-point activation transfers (``CommEvent("p2p", ..., "pp")``) at
+    every stage boundary.  The microbatch count rides on the Workload
+    (``num_microbatches``, default ``4 * pp`` capped at the per-replica
+    batch) and drives the simulator's GPipe/1F1B bubble accounting.
+  * **EP** — ``ep > 1`` shards MoE experts over a dedicated EP mesh axis
+    (all-to-all dispatch/combine over scope ``"ep"`` instead of the legacy
+    MP-group approximation); non-expert layers treat the EP group as extra
+    data parallelism (per-replica batch divides by ``dp * ep``, dense
+    gradients all-reduce across it, expert gradients across DP only).
+
+``pp=1, ep=1`` is bit-for-bit the pre-PP/EP decomposition
+(tests/test_decompose_golden.py locks this down).
 """
 
 from __future__ import annotations
@@ -30,13 +48,20 @@ Op = Union[Gemm, ExplicitOp]
 BYTES = 2  # bf16/fp16 operands throughout (paper assumes fp16 activations)
 
 
+class InfeasibleStrategyError(ValueError):
+    """Strategy degrees incompatible with this model — e.g. ``ep`` not
+    dividing ``num_experts``, or ``pp`` exceeding the layer count.  The
+    study engine turns this into an infeasible record instead of aborting
+    the sweep."""
+
+
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
 @dataclasses.dataclass
 class LayerSpec:
-    """One model layer on one node, for one (MP, DP) strategy."""
+    """One model layer on one node, for one (MP, DP, PP, EP) strategy."""
 
     name: str
     fwd: List[Op] = dataclasses.field(default_factory=list)
@@ -52,6 +77,11 @@ class LayerSpec:
     # (28 B/param on the ZeRO-sharded slice). Sparse layers (embedding bags)
     # set this to the touched-rows traffic instead.
     optim_bytes: Optional[int] = None
+    stage: int = 0                 # pipeline stage owning this layer
+    # Portion of weight_bytes that is expert-sharded over the EP axis: its
+    # gradients all-reduce across DP only ("edp" scope), while the dense
+    # remainder syncs across the full DP x EP data group.
+    expert_bytes: int = 0
 
     def add_gemm(self, g: Gemm, has_weight: bool = True) -> None:
         self.fwd.append(g)
@@ -77,7 +107,14 @@ class LayerSpec:
 
 @dataclasses.dataclass
 class Workload:
-    """Ordered per-node layer list + aggregate footprint inputs."""
+    """Ordered per-node layer list + aggregate footprint inputs.
+
+    With ``pp > 1`` the list covers *every* stage (``LayerSpec.stage`` says
+    which node group owns a layer; ``stage_layers()`` splits them), so the
+    ``total_*`` aggregates describe the whole pipeline's share of one
+    replica, not a single node — per-stage views live in
+    ``repro.core.memory.stage_footprints``.
+    """
 
     name: str
     layers: List[LayerSpec]
@@ -85,8 +122,21 @@ class Workload:
     dp: int
     per_replica_batch: int
     seq_len: int
+    pp: int = 1
+    ep: int = 1
+    num_microbatches: int = 1      # pipeline microbatches (1 when pp == 1)
+    schedule: str = "1f1b"         # "gpipe" | "1f1b" (activation stashing)
 
     # ------------------------------------------------------------------ #
+    def stage_layers(self) -> List[List[LayerSpec]]:
+        """Layers grouped by pipeline stage (one group when pp == 1)."""
+        if self.pp <= 1:
+            return [list(self.layers)]
+        out: List[List[LayerSpec]] = [[] for _ in range(self.pp)]
+        for l in self.layers:
+            out[l.stage].append(l)
+        return out
+
     def total_weight_bytes(self) -> int:
         return sum(l.weight_bytes * l.repeat for l in self.layers)
 
@@ -209,54 +259,81 @@ def _norm_layer(name: str, cfg: ModelConfig, tokens: int) -> LayerSpec:
     return spec
 
 
-def _moe_layer(name: str, cfg: ModelConfig, tokens: int, mp: int) -> LayerSpec:
+def _moe_layer(name: str, cfg: ModelConfig, tokens: int, mp: int,
+               ep: int = 1) -> LayerSpec:
     """MoE FFN.
 
-    EP when num_experts % mp == 0 (experts spread over the MP group; two
-    blocking all-to-alls in FP — dispatch + combine — and two in IG);
-    expert-TP otherwise (each expert's d_ff sharded over MP; all-reduce like
-    a dense FFN).  Matches parallel/sharding.py's runtime rule.
+    With ``ep > 1``: experts shard over the dedicated EP mesh axis
+    (requires num_experts % ep == 0); dispatch + combine are blocking
+    all-to-alls over scope ``"ep"`` in FP and again in IG, and each local
+    expert's d_ff additionally shards over MP (expert-TP) with the usual
+    row-parallel all-reduce.  Expert weight bytes are flagged in
+    ``expert_bytes`` so their gradients sync across DP only.
+
+    With ``ep == 1`` (legacy rule, unchanged): EP-over-MP when
+    num_experts % mp == 0 (experts spread over the MP group; two blocking
+    all-to-alls in FP — dispatch + combine — and two in IG); expert-TP
+    otherwise (each expert's d_ff sharded over MP; all-reduce like a dense
+    FFN).  Matches parallel/sharding.py's runtime rule.
     """
     moe = cfg.moe
     assert moe is not None
     spec = LayerSpec(name)
     e = moe.num_experts
+    mult = 3 if cfg.activation == "swiglu" else 2
     # Router (replicated)
     spec.add_gemm(Gemm(tokens, cfg.d_model, e))
     spec.fwd.append(ExplicitOp(flops=6 * tokens * e,
                                bytes_moved=2 * tokens * e * BYTES))
     routed = tokens * moe.top_k
-    use_ep = (e % mp == 0) and mp > 1
-    if use_ep:
-        # Per-node expert compute: capacity-factor share of routed tokens.
-        local_tokens = int(routed / mp * moe.capacity_factor)
-        local_experts = e // mp
-        per_expert = _ceil_div(local_tokens, max(local_experts, 1))
-        mult = 3 if cfg.activation == "swiglu" else 2
-        for _ in range(1):  # aggregate expert GEMMs as one batched GEMM
-            spec.add_gemm(Gemm(per_expert, cfg.d_model, moe.d_ff,
-                               batch=local_experts * (mult - 1)))
-            spec.add_gemm(Gemm(per_expert, moe.d_ff, cfg.d_model,
-                               batch=local_experts))
-        a2a = routed * cfg.d_model * BYTES / mp  # per-node send volume
+
+    def expert_gemms(per_expert: int, d_ff: int, n_experts: int) -> None:
+        """Up(+gate) and down GEMMs for n_experts local experts, batched
+        (the weight-bytes accounting follows add_gemm's single-instance
+        convention, shared by every branch)."""
+        spec.add_gemm(Gemm(per_expert, cfg.d_model, d_ff,
+                           batch=n_experts * (mult - 1)))
+        spec.add_gemm(Gemm(per_expert, d_ff, cfg.d_model, batch=n_experts))
+
+    def dispatch_a2a(size: float, scope: str) -> None:
+        """Blocking dispatch + combine all-to-alls, in FP and again in IG."""
         for comm in (spec.comm_fwd, spec.comm_ig):
-            comm.append(CommEvent("all-to-all", int(a2a), "mp", blocking=True))
-            comm.append(CommEvent("all-to-all", int(a2a), "mp", blocking=True))
-    else:
-        # Expert-TP: every expert's hidden dim sharded over MP.
-        ff_local = _shard(moe.d_ff, mp)
-        per_expert = _ceil_div(routed, e)
-        mult = 3 if cfg.activation == "swiglu" else 2
-        spec.add_gemm(Gemm(per_expert, cfg.d_model, ff_local,
-                           batch=e * (mult - 1)))
-        spec.add_gemm(Gemm(per_expert, ff_local, cfg.d_model, batch=e))
-        out_bytes = tokens * cfg.d_model * BYTES
+            comm.append(CommEvent("all-to-all", int(size), scope, True))
+            comm.append(CommEvent("all-to-all", int(size), scope, True))
+
+    def mp_allreduce(out_bytes: int) -> None:
+        """Row-parallel expert output all-reduce (expert-TP within MP)."""
         if mp > 1:
             spec.comm_fwd.append(CommEvent("all-reduce", out_bytes, "mp", True))
             spec.comm_ig.append(CommEvent("all-reduce", out_bytes, "mp", True))
+
+    if ep > 1:
+        if e % ep:
+            raise InfeasibleStrategyError(
+                f"{name}: num_experts={e} is not divisible by ep={ep}")
+        # Balanced routing: each node dispatches its `routed` tokens into
+        # the EP all-to-all and receives ~capacity_factor x as many back.
+        local_experts = e // ep
+        local_tokens = int(routed * moe.capacity_factor)
+        w0 = spec.weight_bytes
+        expert_gemms(_ceil_div(local_tokens, max(local_experts, 1)),
+                     _shard(moe.d_ff, mp), local_experts)
+        spec.expert_bytes = spec.weight_bytes - w0
+        dispatch_a2a(routed * cfg.d_model * BYTES, "ep")
+        mp_allreduce(local_tokens * cfg.d_model * BYTES)
+    elif (e % mp == 0) and mp > 1:
+        # Legacy EP-over-MP: capacity-factor share of routed tokens.
+        local_tokens = int(routed / mp * moe.capacity_factor)
+        local_experts = e // mp
+        expert_gemms(_ceil_div(local_tokens, max(local_experts, 1)),
+                     moe.d_ff, local_experts)
+        dispatch_a2a(routed * cfg.d_model * BYTES / mp, "mp")
+    else:
+        # Expert-TP: every expert's hidden dim sharded over MP.
+        expert_gemms(_ceil_div(routed, e), _shard(moe.d_ff, mp), e)
+        mp_allreduce(tokens * cfg.d_model * BYTES)
     if moe.shared_expert:
         ff_local = _shard(moe.shared_d_ff, mp)
-        mult = 3 if cfg.activation == "swiglu" else 2
         spec.add_gemm(Gemm(tokens, cfg.d_model, ff_local, batch=mult - 1))
         spec.add_gemm(Gemm(tokens, ff_local, cfg.d_model))
     spec.act_out_bytes = (routed + tokens) * cfg.d_model * BYTES
@@ -335,18 +412,101 @@ def _embedding_layers(cfg: ModelConfig, tokens: int, mp: int):
     return inp, out
 
 
-def _dp_grad_events(layers: Sequence[LayerSpec], dp: int) -> None:
+def _dp_grad_events(layers: Sequence[LayerSpec], dp: int, ep: int = 1) -> None:
     """Attach the WG-phase non-blocking DP gradient collectives (§III-C3).
 
     ZeRO-2 (os+g) distributes optimizer states and gradients across DP with
     no extra communication volume vs. a plain all-reduce (paper §IV-B), so
-    the event stays an all-reduce of the per-node fp16 gradient bytes."""
-    if dp <= 1:
+    the event stays an all-reduce of the per-node fp16 gradient bytes.
+
+    With ``ep > 1`` dense (non-expert) weights are replicated across the
+    whole DP x EP data group, so their gradients all-reduce over scope
+    ``"dp"`` (which the collective model sizes as ``dp * ep``); expert
+    weights are already EP-sharded and sync across DP only (``"edp"``)."""
+    if dp * max(ep, 1) <= 1:
         return
     for l in layers:
-        if l.weight_bytes:
+        dense = l.weight_bytes - l.expert_bytes
+        if dense > 0:
             l.comm_wg.append(
-                CommEvent("all-reduce", l.weight_bytes, "dp", blocking=False))
+                CommEvent("all-reduce", dense, "dp", blocking=False))
+        if l.expert_bytes and dp > 1:
+            l.comm_wg.append(
+                CommEvent("all-reduce", l.expert_bytes, "edp", blocking=False))
+
+
+# ====================================================================== #
+# Pipeline-stage partitioning
+# ====================================================================== #
+
+def _layer_flops(l: LayerSpec) -> int:
+    """Stage-balancing cost: the layer's FLOPs through the same phase_cost
+    accounting the simulator uses (sram irrelevant for the flops term)."""
+    return sum(l.phase_cost(p, 1 << 62).flops for p in ("fp", "ig", "wg"))
+
+
+def _partition_stages(layers: List[LayerSpec], pp: int,
+                      boundary_bytes: int) -> List[LayerSpec]:
+    """Partition the layer stack into ``pp`` contiguous FLOP-balanced stages.
+
+    Repeated layers (``repeat > 1``, the enc-dec stacks) are unrolled so a
+    stack can straddle a stage boundary.  Each boundary gets a blocking
+    point-to-point hidden-state transfer: the sending stage's last layer
+    forwards activations in FP, the receiving stage's first layer returns
+    the activation gradient in IG (both on scope ``"pp"``).
+    """
+    expanded: List[LayerSpec] = []
+    for l in layers:
+        if l.repeat == 1:
+            expanded.append(l)
+        else:
+            for _ in range(l.repeat):
+                expanded.append(dataclasses.replace(
+                    l, repeat=1,
+                    comm_fwd=list(l.comm_fwd), comm_ig=list(l.comm_ig),
+                    comm_wg=list(l.comm_wg)))
+    if pp > len(expanded):
+        raise InfeasibleStrategyError(
+            f"pp={pp} exceeds the {len(expanded)} partitionable layers")
+    costs = [_layer_flops(l) for l in expanded]
+    remaining = sum(costs)
+    n = len(expanded)
+    idx = 0
+    for s in range(pp):
+        stages_left = pp - s
+        max_end = n - (stages_left - 1)   # leave >= 1 layer per later stage
+        target = remaining / stages_left
+        acc = 0
+        j = idx
+        while j < max_end:
+            acc += costs[j]
+            j += 1
+            if acc >= target:
+                break
+        j = max(j, idx + 1)
+        for k in range(idx, j):
+            expanded[k].stage = s
+        remaining -= acc
+        idx = j
+    for k in range(idx, n):              # numerical-edge leftovers
+        expanded[k].stage = pp - 1
+    stages = [[l for l in expanded if l.stage == s] for s in range(pp)]
+    for s in range(pp - 1):
+        stages[s][-1].comm_fwd.append(
+            CommEvent("p2p", boundary_bytes, "pp", blocking=True))
+        stages[s + 1][0].comm_ig.append(
+            CommEvent("p2p", boundary_bytes, "pp", blocking=True))
+    return expanded
+
+
+def _resolve_microbatches(num_microbatches: Optional[int],
+                          shape: ShapeConfig, pp: int, b_local: int) -> int:
+    """Microbatch count: explicit arg > shape knob > 4*pp heuristic, capped
+    at the per-replica batch (a microbatch holds >= 1 sample)."""
+    if pp <= 1:
+        return 1
+    m = num_microbatches or getattr(shape, "num_microbatches", 0) or 4 * pp
+    return max(1, min(m, b_local))
 
 
 # ====================================================================== #
@@ -354,12 +514,24 @@ def _dp_grad_events(layers: Sequence[LayerSpec], dp: int) -> None:
 # ====================================================================== #
 
 def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
+              pp: int = 1, ep: int = 1,
               override_batch: Optional[int] = None,
-              override_seq: Optional[int] = None) -> Workload:
-    """ModelConfig + shape + (MP, DP) -> per-node Workload."""
+              override_seq: Optional[int] = None,
+              num_microbatches: Optional[int] = None,
+              schedule: str = "1f1b") -> Workload:
+    """ModelConfig + shape + (MP, DP, PP, EP) -> per-node Workload.
+
+    ``pp=1, ep=1`` (the defaults) reproduce the pre-PP/EP decomposition
+    bit-for-bit; see the module docstring for the four-axis semantics."""
+    for axis, v in (("mp", mp), ("dp", dp), ("pp", pp), ("ep", ep)):
+        if v < 1:
+            raise ValueError(f"{axis} must be >= 1, got {v}")
+    if schedule not in ("gpipe", "1f1b"):
+        raise ValueError(f"schedule must be 'gpipe' or '1f1b', got {schedule!r}")
     batch = override_batch if override_batch is not None else shape.global_batch
     seq = override_seq if override_seq is not None else shape.seq_len
-    b_local = max(1, batch // max(dp, 1))
+    # Non-expert layers see the EP group as extra data parallelism.
+    b_local = max(1, batch // max(dp * ep, 1))
     decode = shape.kind == "decode"
     # Decode: one new query token per sample attending to a seq-long cache.
     seq_q = 1 if decode else seq
@@ -420,7 +592,7 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
                 layers.append(_norm_layer(f"norm_ffn_{i}", cfg, tokens))
                 is_moe = (i % cfg.moe.moe_every) == (cfg.moe.moe_every - 1)
                 if is_moe:
-                    layers.append(_moe_layer(f"moe_{i}", cfg, tokens, mp))
+                    layers.append(_moe_layer(f"moe_{i}", cfg, tokens, mp, ep))
                 else:
                     layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
             else:  # dense / vlm
@@ -431,10 +603,28 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
                 layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
         layers.append(out)
 
-    _dp_grad_events(layers, dp)
+    if pp > 1:
+        # Boundary tensor between stages: the per-replica hidden state of
+        # the trunk (decoder trunk for enc-dec).
+        if cfg.family == "encdec":
+            tgt = seq - int(seq * cfg.encdec.source_frac)
+            boundary_tokens = b_local * (1 if decode else tgt)
+        else:
+            boundary_tokens = b_local * (1 if decode else seq)
+            if cfg.family == "vlm":
+                assert cfg.vision is not None
+                boundary_tokens = b_local * (
+                    1 if decode else seq + cfg.vision.num_patches)
+        layers = _partition_stages(
+            layers, pp, boundary_tokens * cfg.d_model * BYTES)
+    _dp_grad_events(layers, dp, ep)
+    suffix = f"_pp{pp}_ep{ep}" if (pp > 1 or ep > 1) else ""
     return Workload(
-        name=f"{cfg.arch_id}@{shape.name}[mp{mp}_dp{dp}]",
-        layers=layers, mp=mp, dp=dp,
+        name=f"{cfg.arch_id}@{shape.name}[mp{mp}_dp{dp}{suffix}]",
+        layers=layers, mp=mp, dp=dp, pp=pp, ep=ep,
+        num_microbatches=_resolve_microbatches(num_microbatches, shape,
+                                               pp, b_local),
+        schedule=schedule,
         per_replica_batch=b_local, seq_len=seq,
     )
 

@@ -1,0 +1,210 @@
+"""Golden lockdown of the analytical decomposition (ISSUE 3 satellite).
+
+``decompose(cfg, shape, mp, dp)`` with default ``pp=1, ep=1`` must stay
+bit-for-bit identical to the pre-PP/EP implementation for every registry
+model.  ``tests/golden_decompose.json`` holds SHA-256 digests of exact
+structural fingerprints (every op dim, comm event, and byte count) captured
+from the pre-change code; regenerate (only after an *intentional* model
+change) with:
+
+    PYTHONPATH=src:tests python tests/test_decompose_golden.py --regen
+"""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_dlrm_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core.gemm import CommEvent, ExplicitOp, Gemm
+from repro.core.workload import decompose, decompose_dlrm
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_decompose.json")
+
+PAPER_SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+
+# (model, shape, mp, dp) cells fingerprinted; every registry arch appears.
+CASES = [(arch, "train_4k", mp, dp)
+         for arch in ASSIGNED_ARCHS for (mp, dp) in ((1, 1), (8, 4))]
+CASES += [("transformer-1t", "paper", 8, 128),
+          ("transformer-1t", "paper", 64, 16)]
+
+
+def _op_fp(op):
+    if isinstance(op, Gemm):
+        return ["gemm", op.m, op.k, op.n, op.batch, op.bytes_per_element]
+    if isinstance(op, ExplicitOp):
+        return ["explicit", op.flops, op.bytes_moved]
+    raise TypeError(type(op))
+
+
+def _comm_fp(e: CommEvent):
+    return [e.collective, e.size_bytes, e.scope, e.blocking]
+
+
+def fingerprint(wl):
+    """Exact structural fingerprint of a Workload: every op dim, every comm
+    event, every byte count — JSON-stable, no floats beyond ints."""
+    return {
+        "name": wl.name,
+        "mp": wl.mp, "dp": wl.dp,
+        "per_replica_batch": wl.per_replica_batch,
+        "seq_len": wl.seq_len,
+        "layers": [{
+            "name": l.name,
+            "repeat": l.repeat,
+            "weight_bytes": l.weight_bytes,
+            "act_out_bytes": l.act_out_bytes,
+            "optim_bytes": l.optim_bytes,
+            "fwd": [_op_fp(o) for o in l.fwd],
+            "ig": [_op_fp(o) for o in l.ig],
+            "wg": [_op_fp(o) for o in l.wg],
+            "comm_fwd": [_comm_fp(e) for e in l.comm_fwd],
+            "comm_ig": [_comm_fp(e) for e in l.comm_ig],
+            "comm_wg": [_comm_fp(e) for e in l.comm_wg],
+        } for l in wl.layers],
+    }
+
+
+def digest(wl) -> str:
+    blob = json.dumps(fingerprint(wl), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _shape(name: str) -> ShapeConfig:
+    return PAPER_SHAPE if name == "paper" else SHAPES[name]
+
+
+def _build_all():
+    out = {}
+    for arch, shape_name, mp, dp in CASES:
+        key = f"{arch}@{shape_name}[mp{mp}_dp{dp}]"
+        wl = decompose(get_config(arch), _shape(shape_name), mp=mp, dp=dp)
+        out[key] = digest(wl)
+    out["dlrm-1p2t[n64]"] = digest(
+        decompose_dlrm(get_dlrm_config(), 65536, 64))
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+class TestDecomposeGolden:
+    @pytest.mark.parametrize("arch,shape_name,mp,dp", CASES)
+    def test_default_decompose_matches_pre_change(self, golden, arch,
+                                                  shape_name, mp, dp):
+        key = f"{arch}@{shape_name}[mp{mp}_dp{dp}]"
+        wl = decompose(get_config(arch), _shape(shape_name), mp=mp, dp=dp)
+        assert digest(wl) == golden[key]
+
+    def test_pp1_ep1_explicit_matches_default(self):
+        """Passing pp=1, ep=1 explicitly is the identity."""
+        cfg = get_config("transformer-1t")
+        a = fingerprint(decompose(cfg, PAPER_SHAPE, mp=8, dp=128))
+        b = fingerprint(decompose(cfg, PAPER_SHAPE, mp=8, dp=128,
+                                  pp=1, ep=1))
+        assert a == b
+
+    def test_dlrm_golden(self, golden):
+        wl = decompose_dlrm(get_dlrm_config(), 65536, 64)
+        assert digest(wl) == golden["dlrm-1p2t[n64]"]
+
+
+class TestPpEpDecomposition:
+    """Unit coverage for the new PP/EP surface (beyond the goldens)."""
+
+    def test_pp_partitions_all_stages_nonempty(self):
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, PAPER_SHAPE, mp=8, dp=16, pp=8)
+        stages = wl.stage_layers()
+        assert len(stages) == 8 and all(stages)
+        assert stages[0][0].name == "input_embedding"
+        assert stages[-1][-1].name == "output_embedding"
+
+    def test_p2p_events_sit_at_stage_boundaries(self):
+        cfg = get_config("transformer-1t")
+        pp = 4
+        wl = decompose(cfg, PAPER_SHAPE, mp=8, dp=32, pp=pp)
+        stages = wl.stage_layers()
+        fwd_p2p = [e for l in wl.layers for e in l.comm_fwd
+                   if e.collective == "p2p"]
+        ig_p2p = [e for l in wl.layers for e in l.comm_ig
+                  if e.collective == "p2p"]
+        assert len(fwd_p2p) == len(ig_p2p) == pp - 1
+        assert all(e.scope == "pp" and e.blocking for e in fwd_p2p + ig_p2p)
+        for s in range(pp - 1):
+            assert any(e.collective == "p2p"
+                       for e in stages[s][-1].comm_fwd)      # send fwd act
+            assert any(e.collective == "p2p"
+                       for e in stages[s + 1][0].comm_ig)    # send bwd grad
+
+    def test_pp_conserves_weights_and_flops(self):
+        cfg = get_config("transformer-1t")
+        flat = decompose(cfg, PAPER_SHAPE, mp=8, dp=16)
+        piped = decompose(cfg, PAPER_SHAPE, mp=8, dp=16, pp=8)
+        assert piped.total_weight_bytes() == flat.total_weight_bytes()
+        assert piped.total_flops() == flat.total_flops()
+
+    def test_pp_exceeding_layers_raises(self):
+        cfg = get_config("smollm-135m")
+        with pytest.raises(ValueError, match="exceeds"):
+            decompose(cfg, SHAPES["train_4k"], pp=10_000)
+
+    def test_ep_requires_divisible_experts(self):
+        moe = get_config("granite-moe-3b-a800m")   # 40 experts
+        with pytest.raises(ValueError, match="divisible"):
+            decompose(moe, SHAPES["train_4k"], ep=3)
+
+    def test_ep_emits_all_to_all_on_ep_scope(self):
+        moe = get_config("granite-moe-3b-a800m")
+        wl = decompose(moe, SHAPES["train_4k"], mp=2, dp=2, ep=2)
+        a2a = [e for l in wl.layers for e in l.comm_fwd
+               if e.collective == "all-to-all"]
+        assert a2a and all(e.scope == "ep" for e in a2a)
+        # Expert gradients sync over DP only; dense ones over DP x EP.
+        scopes = {e.scope for l in wl.layers for e in l.comm_wg}
+        assert scopes == {"dp", "edp"}
+
+    def test_ep_divides_per_replica_batch(self):
+        cfg = get_config("smollm-135m")
+        wl1 = decompose(cfg, SHAPES["train_4k"], dp=4)
+        wl2 = decompose(cfg, SHAPES["train_4k"], dp=2, ep=2)
+        assert wl2.per_replica_batch == wl1.per_replica_batch
+
+    def test_microbatch_resolution_order(self):
+        cfg = get_config("smollm-135m")
+        shape = SHAPES["train_4k"]
+        auto = decompose(cfg, shape, pp=2)
+        assert auto.num_microbatches == 8                    # 4 * pp
+        explicit = decompose(cfg, shape, pp=2, num_microbatches=5)
+        assert explicit.num_microbatches == 5
+        import dataclasses
+        shaped = dataclasses.replace(shape, num_microbatches=6)
+        assert decompose(cfg, shaped, pp=2).num_microbatches == 6
+        # capped at the per-replica batch
+        capped = decompose(cfg, shape, dp=64, pp=2, num_microbatches=999)
+        assert capped.num_microbatches == capped.per_replica_batch
+
+    def test_invalid_schedule_and_degrees_raise(self):
+        cfg = get_config("smollm-135m")
+        with pytest.raises(ValueError, match="schedule"):
+            decompose(cfg, SHAPES["train_4k"], pp=2, schedule="pipedream")
+        with pytest.raises(ValueError, match="pp"):
+            decompose(cfg, SHAPES["train_4k"], pp=0)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        goldens = _build_all()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(goldens, f, indent=1, sort_keys=True)
+        print(f"wrote {GOLDEN_PATH} ({len(goldens)} fingerprints)")
+    else:
+        print(__doc__)

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config, get_dlrm_config
 from repro.configs.base import ShapeConfig
 from repro.core import dse
-from repro.core.cluster import BASELINE_DGX_A100
+from repro.core.cluster import BASELINE_DGX_A100, get_cluster
 from repro.core.simulator import simulate_iteration
 from repro.core.workload import decompose
 
@@ -137,6 +137,46 @@ class TestFig13:
                                        em_bandwidths_gbs=(2000,),
                                        nodes_per_instance_opts=(64, 8))
         assert me[8][2000] < me[64][2000]  # 8-node instances win at high bw
+
+
+class TestPipelineParallel:
+    """ISSUE 3: PP claims from Megatron-LM (PAPERS.md), locked onto the
+    COMET design space the paper's §V sweeps."""
+
+    def test_gpipe_bubble_matches_analytical_form(self, tcfg):
+        """GPipe bubble fraction is exactly (pp - 1) / (m + pp - 1)
+        (Megatron-LM §2.1 / GPipe §3)."""
+        for pp, m in ((2, 4), (4, 8), (8, 8), (8, 64)):
+            wl = decompose(tcfg, SHAPE, mp=8, dp=16, pp=pp,
+                           num_microbatches=m, schedule="gpipe")
+            br = simulate_iteration(wl, BASELINE_DGX_A100)
+            assert br.bubble_fraction == pytest.approx((pp - 1) / (m + pp - 1))
+
+    def test_more_microbatches_shrink_the_bubble(self, tcfg):
+        wl_few = decompose(tcfg, SHAPE, mp=8, dp=16, pp=8,
+                           num_microbatches=8)
+        wl_many = decompose(tcfg, SHAPE, mp=8, dp=16, pp=8,
+                            num_microbatches=64)
+        few = simulate_iteration(wl_few, BASELINE_DGX_A100)
+        many = simulate_iteration(wl_many, BASELINE_DGX_A100)
+        assert many.bubble_fraction < few.bubble_fraction
+        assert many.total < few.total
+
+    def test_pp_beats_pure_mp_on_bandwidth_starved_cluster(self, tcfg):
+        """Directional: on Table III's A0 (6.25 GB/s inter-pod), trading
+        cross-pod MP degree for pipeline stages wins — tiny p2p boundary
+        transfers replace giant inter-pod all-reduces (Megatron-LM's
+        'PP across nodes, TP within a node' rule)."""
+        a0 = get_cluster("A0")
+        pure_mp = simulate_iteration(
+            decompose(tcfg, SHAPE, mp=64, dp=16), a0)
+        pp_heavy = simulate_iteration(
+            decompose(tcfg, SHAPE, mp=8, dp=16, pp=8), a0)
+        assert pp_heavy.total < pure_mp.total
+
+    def test_flat_iteration_has_no_bubble(self, tcfg):
+        wl = decompose(tcfg, SHAPE, mp=8, dp=128)
+        assert simulate_iteration(wl, BASELINE_DGX_A100).bubble_fraction == 0.0
 
 
 class TestFig15:

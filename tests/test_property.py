@@ -16,11 +16,20 @@ from repro.core.cluster import (
     NodeConfig,
     PodSpec,
 )
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
 from repro.core.collectives import CollectiveModel
+from repro.core.simulator import simulate_iteration
 from repro.core.topology import HierarchicalSwitch
 from repro.core.gemm import Gemm, PhaseCost, gemm_traffic_bytes
-from repro.core.memory import hybrid_bandwidth, model_state_bytes
+from repro.core.memory import (
+    hybrid_bandwidth,
+    model_state_bytes,
+    per_node_footprint,
+    stage_footprints,
+)
 from repro.core.roofline import compute_delay
+from repro.core.workload import decompose
 from repro.parallel.compression import dequantize_int8, quantize_int8
 from repro.train.optimizer import AdamWConfig, lr_schedule
 
@@ -133,6 +142,71 @@ class TestCostModelProperties:
         assert one.num_nodes == two.num_nodes
         assert cost.capex(one) == pytest.approx(cost.capex(two))
         assert cost.tco(one) == pytest.approx(cost.tco(two))
+
+
+class TestPpEpDecompositionProperties:
+    """ISSUE 3 satellites: invariants of the native PP/EP decomposition."""
+
+    SHAPE = ShapeConfig("prop", 512, 64, "train")
+    CLUSTER = BASELINE_DGX_A100
+
+    @classmethod
+    def _cfg(cls):
+        return get_config("smollm-135m")
+
+    @given(mp=st.sampled_from([1, 2, 4]),
+           dp_ep=st.sampled_from([(8, 1), (4, 2), (2, 4), (1, 8)]),
+           pp=st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_total_flops_conserved_across_factorizations(self, mp, dp_ep,
+                                                         pp):
+        """Cluster FLOPs (per-node flops x dp x ep) are invariant across
+        every (dp, pp, ep) factorization of a fixed data degree, for any
+        MP shard of a dense model: PP only partitions layers, EP only
+        re-slices the batch."""
+        dp, ep = dp_ep
+        cfg = self._cfg()
+        ref = decompose(cfg, self.SHAPE, mp=mp, dp=8)   # dp*ep == 8 baseline
+        wl = decompose(cfg, self.SHAPE, mp=mp, dp=dp, pp=pp, ep=ep)
+        assert wl.total_flops() * dp * ep == ref.total_flops() * 8
+
+    @given(pp=st.integers(2, 6), m_lo=st.integers(1, 15),
+           m_hi=st.integers(16, 32))
+    @settings(max_examples=20, deadline=None)
+    def test_iteration_time_monotone_in_microbatches_1f1b(self, pp, m_lo,
+                                                          m_hi):
+        """More microbatches never slow a 1F1B pipeline: the bubble term
+        (m + pp - 1)/m shrinks and per-stage activation stashing only
+        drops."""
+        cfg = self._cfg()
+        t = {}
+        for m in (m_lo, m_hi):
+            wl = decompose(cfg, self.SHAPE, mp=2, dp=2, pp=pp,
+                           num_microbatches=m, schedule="1f1b")
+            t[m] = simulate_iteration(wl, self.CLUSTER).total
+        assert t[m_hi] <= t[m_lo] * (1 + 1e-12)
+
+    @given(mp=st.sampled_from([1, 2, 4]), pp=st.integers(2, 6),
+           schedule=st.sampled_from(["gpipe", "1f1b"]))
+    @settings(max_examples=25, deadline=None)
+    def test_stage_footprint_sum_equals_unpartitioned(self, mp, pp,
+                                                      schedule):
+        """Partitioning layers into stages conserves the model-state bytes:
+        per-stage footprints sum to the flat (pp=1) footprint."""
+        cfg = self._cfg()
+        flat = per_node_footprint(
+            decompose(cfg, self.SHAPE, mp=mp, dp=4), node=None)
+        wl = decompose(cfg, self.SHAPE, mp=mp, dp=4, pp=pp,
+                       schedule=schedule)
+        reps = stage_footprints(wl, node=None)
+        assert len(reps) == pp
+        assert sum(r.model_states for r in reps) == \
+            pytest.approx(flat.model_states, rel=1e-9)
+        # GPipe stashes all m microbatches: per-stage activation working
+        # memory never exceeds the flat workload's.
+        if schedule == "gpipe":
+            assert max(r.activation_working for r in reps) <= \
+                flat.activation_working * (1 + 1e-12)
 
 
 class TestNumericsProperties:

@@ -69,6 +69,18 @@ class TestParallelSpec:
         with pytest.raises(ValueError):
             ParallelSpec(zero_stage=4)
 
+    def test_microbatches_normalized_away_without_pp(self):
+        """The microbatch knob is pipeline-only: pp=1 specs coerce it to 0
+        so a grid over num_microbatches never emits duplicate-physics
+        cells."""
+        s = ParallelSpec(mp=2, dp=4, num_microbatches=8)
+        assert s.num_microbatches == 0 and s.label == "MP2_DP4"
+        specs = GridSpace(mp=(2,), dp=(4,), pp=(1, 2),
+                          num_microbatches=(0, 4, 8),
+                          fill_cluster=False).specs(0)
+        assert [x.label for x in specs] == [
+            "MP2_DP4", "MP2_DP4_PP2", "MP2_DP4_PP2_MB4", "MP2_DP4_PP2_MB8"]
+
 
 # ===================================================================== #
 # StrategySpace enumeration
@@ -203,12 +215,54 @@ class TestRunStudy:
         # ZeRO-3 shards model states across DP -> strictly smaller footprint
         assert z3.record["footprint_bytes"] < z0.record["footprint_bytes"]
 
-    def test_pp_ep_need_custom_workload(self, small_cfg, small_cluster):
-        spec = StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
-                         cluster=small_cluster,
-                         strategies=ParallelSpec(mp=2, dp=2, pp=2))
-        with pytest.raises(ValueError, match="MP x DP only"):
-            run_study(spec)
+    def test_pp_ep_run_through_default_builder(self, small_cfg,
+                                               small_cluster):
+        """ISSUE 3 tentpole: PP/EP strategies no longer need a custom
+        StudySpec.workload — decompose models them natively."""
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster,
+            strategies=ParallelSpec(mp=2, dp=2, pp=2)))
+        rec = res.cells[0].record
+        assert rec["pp"] == 2
+        assert 0.0 < rec["bubble_fraction"] < 1.0
+        assert rec["total"] > 0
+
+    def test_grid_space_pp_ep_default_builder(self, small_cluster):
+        """Acceptance: a GridSpace with pp=(1,2,4), ep=(1,2) completes on
+        the default workload builder (MoE model, 8-node cluster)."""
+        cfg = get_config("granite-moe-3b-a800m")
+        res = run_study(StudySpec(
+            name="t", model=cfg, shape=SMALL_SHAPE, cluster=small_cluster,
+            strategies=GridSpace(mp=(1, 2), dp=(1, 2, 4, 8),
+                                 pp=(1, 2, 4), ep=(1, 2))))
+        assert len(res) > 4
+        assert {r["pp"] for r in res.records} >= {1, 2, 4}
+        assert {r["ep"] for r in res.records} == {1, 2}
+        assert all(r["total"] > 0 for r in res.records)
+        # PP cells carry the analytical bubble; flat cells don't.
+        for r in res.records:
+            if r["pp"] > 1:
+                assert r["bubble_fraction"] > 0
+            else:
+                assert r["bubble_fraction"] == 0.0
+
+    def test_infeasible_strategy_cell_does_not_abort_sweep(self,
+                                                           small_cluster):
+        """A swept degree the model cannot realize (ep not dividing the
+        experts) yields an infeasible record, not an aborted study."""
+        cfg = get_config("granite-moe-3b-a800m")   # 40 experts: 3 divides no
+        res = run_study(StudySpec(
+            name="t", model=cfg, shape=SMALL_SHAPE, cluster=small_cluster,
+            strategies=GridSpace(mp=(1,), dp=(1, 2, 4, 8), pp=(1,),
+                                 ep=(1, 3), fill_cluster=False)))
+        bad = [r for r in res.records if r["ep"] == 3]
+        good = [r for r in res.records if r["ep"] == 1]
+        assert bad and good
+        assert all(not r["feasible"] and r["total"] == float("inf")
+                   and "divisible" in r["infeasible_reason"] for r in bad)
+        assert all(r["feasible"] for r in good)
+        assert res.best().record["ep"] == 1   # inf never wins
 
     def test_mem_bw_override_local(self, small_cfg, small_cluster):
         res = run_study(StudySpec(
