@@ -29,8 +29,23 @@ from repro.core.memory import (  # noqa: F401
     model_state_bytes,
     per_node_footprint,
 )
+from repro.core.placement import (  # noqa: F401
+    EMAwarePlacement,
+    ExplicitPlacement,
+    JobSpec,
+    PaperPlacement,
+    Placement,
+    Schedule,
+    ScheduleModel,
+    get_placement,
+    list_placements,
+)
 from repro.core.roofline import attainable_perf, compute_delay  # noqa: F401
-from repro.core.simulator import IterationBreakdown, simulate_iteration  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    IterationBreakdown,
+    group_breakdowns,
+    simulate_iteration,
+)
 from repro.core.strategy import best_strategy, sweep_strategies  # noqa: F401
 from repro.core.study import (  # noqa: F401
     Axis,
@@ -43,6 +58,7 @@ from repro.core.study import (  # noqa: F401
     StudyResult,
     StudySpec,
     get_by_path,
+    placement_axis,
     run_study,
     set_by_path,
 )

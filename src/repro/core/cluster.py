@@ -202,6 +202,13 @@ class ClusterSpec:
     def is_heterogeneous(self) -> bool:
         return len(self.node_groups) > 1
 
+    @property
+    def min_node_cap(self) -> float:
+        """Least-capable group's per-node capacity (bytes) — the
+        synchronous-training feasibility bound under the default
+        replicate-everywhere placement."""
+        return min(g.node.total_cap for g in self.node_groups)
+
     # -- functional updates (ClusterConfig-shim parity) ------------------ #
     def with_node(self, node: NodeConfig) -> "ClusterSpec":
         """Replace every pod group's node (legacy axis-lambda parity)."""
@@ -266,6 +273,10 @@ class ClusterConfig:
     @property
     def is_heterogeneous(self) -> bool:
         return False
+
+    @property
+    def min_node_cap(self) -> float:
+        return self.node.total_cap
 
     @property
     def pods(self) -> Tuple[PodSpec, ...]:

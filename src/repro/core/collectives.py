@@ -41,8 +41,11 @@ class CollectiveModel:
     ``"pp"`` carries the stage-boundary ``"p2p"`` transfers)."""
 
     def __init__(self, cluster: "ClusterLike | Topology", mp: int, dp: int,
-                 pp: int = 1, ep: int = 1):
+                 pp: int = 1, ep: int = 1, placement=None):
         self.cluster = cluster
+        # Optional repro.core.placement.Placement overriding the paper rank
+        # order for hop resolution; None keeps the fixed MP→EP→DP→PP order.
+        self.placement = placement
         # Use the node groups' topology (agreeing with the simulator when a
         # per-pod fabric overrides the interconnect); mixed fabrics need one
         # model per group, so refuse to pick one silently.
@@ -68,5 +71,10 @@ class CollectiveModel:
             raise TypeError(
                 f"{type(self.topo).__name__} does not implement the "
                 "Topology protocol (missing collective_time)")
+        if self.placement is None:
+            # Keep the PR-2 protocol signature working for downstream
+            # Topology implementations that predate the placement kwarg.
+            return time_fn(collective, size, scope, self.mp, self.dp,
+                           pp=self.pp, ep=self.ep)
         return time_fn(collective, size, scope, self.mp, self.dp,
-                       pp=self.pp, ep=self.ep)
+                       pp=self.pp, ep=self.ep, placement=self.placement)

@@ -15,11 +15,14 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import (
     ClusterConfig,
+    ClusterLike,
     ClusterSpec,
     HierarchicalSwitch,
+    NodeConfig,
     PodSpec,
     TABLE_III_CLUSTERS,
 )
+from repro.core.placement import JobSpec
 from repro.core.strategy import StrategyResult
 from repro.core.study import (
     Axis,
@@ -29,6 +32,7 @@ from repro.core.study import (
     StudyResult,
     StudySpec,
     as_strategy_space,
+    placement_axis,
     run_study,
 )
 from repro.core.workload import decompose_dlrm
@@ -249,19 +253,21 @@ def dlrm_memory_expansion_study(
     em_bandwidths_gbs: Sequence[float] = (250, 500, 800, 1000, 1500, 2000),
     nodes_per_instance_opts: Sequence[int] = (64, 32, 16, 8),
 ) -> StudySpec:
-    def waves(n: int) -> int:
-        return -(-num_instances // max(1, total_nodes // n))
-
+    """N concurrent DLRM instances on a ``total_nodes`` fleet: the waves /
+    turnaround bookkeeping is the study-native :class:`JobSpec` layer (the
+    engine schedules instances over the fleet's node groups and writes the
+    ``turnaround``/``waves`` columns the legacy lambdas used to compute)."""
+    fleet = dataclasses.replace(cluster, num_nodes=total_nodes)
     return StudySpec(
-        name="fig13b-dlrm-memory-expansion", cluster=cluster,
-        axes=[Axis("nodes_per_inst", tuple(nodes_per_instance_opts),
-                   path="num_nodes"),
+        name="fig13b-dlrm-memory-expansion", cluster=fleet,
+        axes=[Axis("nodes_per_inst", tuple(nodes_per_instance_opts)),
               _expand_axis(em_bandwidths_gbs)],
         workload=lambda ctx: decompose_dlrm(dlrm_cfg, global_batch,
                                             ctx.point["nodes_per_inst"]),
         workload_deps=("nodes_per_inst",),
-        metrics={"turnaround": lambda ctx: ctx.breakdown.total
-                 * waves(ctx.point["nodes_per_inst"])})
+        job=lambda ctx: JobSpec(
+            instances=num_instances,
+            nodes_per_instance=ctx.point["nodes_per_inst"]))
 
 
 def dlrm_memory_expansion(
@@ -290,21 +296,11 @@ def dlrm_memory_expansion(
 # model explicitly — this study does both over a mixed A100+EM fleet).
 # --------------------------------------------------------------------- #
 
-def hetero_cost_study(
-    cfg: ModelConfig, shape: ShapeConfig,
-    em_pod_fractions: Sequence[float] = (0.0, 0.25, 0.5, 1.0),
-    plain: str = "B0", expanded: str = "B1",
-    strategies=None,
-) -> StudySpec:
-    """Fig.-8-style sweep over clusters mixing plain and memory-expanded
-    pods, with ``cost_usd``/``tco``/``perf_per_dollar`` columns.
-
-    Each ``em_pod_frac`` value builds a :class:`ClusterSpec` whose pods mix
-    the ``plain`` cluster's node with the ``expanded`` cluster's node (same
-    interconnect and pod size).  Synchronous-training semantics apply: a
-    strategy is feasible only if its shard fits the *plain* pods too, so
-    the ranking quantifies when partial EM deployment is money wasted and
-    when full EM wins perf-per-dollar (Fig. 15's B0-vs-B1 story)."""
+def _em_pod_mix(plain: str = "B0", expanded: str = "B1"):
+    """``apply(cluster, frac) -> ClusterSpec`` mixing the ``plain``
+    cluster's pods with the ``expanded`` cluster's memory-expanded pods
+    (same interconnect / pod size / fleet size), priced by the expanded
+    cluster's cost model so the EM pods carry their $/GB premium."""
     base, em = TABLE_III_CLUSTERS[plain], TABLE_III_CLUSTERS[expanded]
     pod = base.topology.pod_size
     num_pods = base.num_nodes // pod
@@ -323,6 +319,24 @@ def hetero_cost_study(
             pods=pods, interconnect=base.topology, cost=em.cost,
             notes=f"{num_pods - n_em} plain + {n_em} memory-expanded pods.")
 
+    return mix
+
+def hetero_cost_study(
+    cfg: ModelConfig, shape: ShapeConfig,
+    em_pod_fractions: Sequence[float] = (0.0, 0.25, 0.5, 1.0),
+    plain: str = "B0", expanded: str = "B1",
+    strategies=None,
+) -> StudySpec:
+    """Fig.-8-style sweep over clusters mixing plain and memory-expanded
+    pods, with ``cost_usd``/``tco``/``perf_per_dollar`` columns.
+
+    Each ``em_pod_frac`` value builds a :class:`ClusterSpec` whose pods mix
+    the ``plain`` cluster's node with the ``expanded`` cluster's node (same
+    interconnect and pod size).  Synchronous-training semantics apply: a
+    strategy is feasible only if its shard fits the *plain* pods too, so
+    the ranking quantifies when partial EM deployment is money wasted and
+    when full EM wins perf-per-dollar (Fig. 15's B0-vs-B1 story)."""
+    mix = _em_pod_mix(plain, expanded)
     return StudySpec(
         name="hetero-em-tco", model=cfg, shape=shape,
         strategies=as_strategy_space(strategies) or PowerOfTwoSpace(min_mp=8),
@@ -391,17 +405,26 @@ def pp_ep_ranking(processes: Optional[int] = None,
 # §V-D / Fig. 15: comparative training across 11 clusters
 # --------------------------------------------------------------------- #
 
-def _dlrm_nodes_per_instance(cl: ClusterConfig) -> int:
-    """Paper §V-D placement rule: mem0 -> 64, mem1 -> 16, mem2 -> 8."""
-    if cl.node.exp_cap > 0.75 * cl.node.local_cap:
-        return 16 if cl.node.exp_bw <= 500 * GB else 8
-    return min(64, cl.num_nodes)
+def _dlrm_group_nodes_per_instance(node: NodeConfig, fleet_nodes: int) -> int:
+    """Paper §V-D placement rule for one node type:
+    mem0 -> 64, mem1 -> 16, mem2 -> 8."""
+    if node.exp_cap > 0.75 * node.local_cap:
+        return 16 if node.exp_bw <= 500 * GB else 8
+    return min(64, fleet_nodes)
+
+
+def _dlrm_nodes_per_instance(cl: ClusterLike) -> int:
+    """§V-D rule routed through ``node_groups`` so heterogeneous
+    ``ClusterSpec`` inputs work (``cl.node`` raises on >1 node types):
+    the largest group's node type sizes the instance."""
+    g = max(cl.node_groups, key=lambda g: g.num_nodes)
+    return _dlrm_group_nodes_per_instance(g.node, cl.num_nodes)
 
 
 def cluster_comparison_studies(
     transformer_cfg: ModelConfig, transformer_shape: ShapeConfig,
     dlrm_cfg, dlrm_batch: int = 4096,
-    clusters: Optional[Dict[str, ClusterConfig]] = None,
+    clusters: Optional[Dict[str, ClusterLike]] = None,
 ):
     """(transformer study, dlrm study) over a cluster-valued axis."""
     clusters = clusters or TABLE_III_CLUSTERS
@@ -414,23 +437,19 @@ def cluster_comparison_studies(
                    apply=lambda _, name: clusters[name])],
         strategies=PowerOfTwoSpace())
 
-    def waves(cl: ClusterConfig) -> int:
-        concurrent = max(1, min(cl.num_nodes, 64)
-                         // _dlrm_nodes_per_instance(cl))
-        return -(-8 // concurrent)
-
+    # 8 DLRM instances on (at most) 64 fleet nodes: the waves/turnaround
+    # bookkeeping is the study-native JobSpec layer now.
     dlrm = StudySpec(
         name="fig15-dlrm",
         axes=[Axis("cluster", tuple(clusters),
-                   apply=lambda _, name: dataclasses.replace(
-                       clusters[name],
-                       num_nodes=_dlrm_nodes_per_instance(clusters[name])))],
+                   apply=lambda _, name: clusters[name])],
         workload=lambda ctx: decompose_dlrm(
             dlrm_cfg, dlrm_batch,
             _dlrm_nodes_per_instance(clusters[ctx.point["cluster"]])),
         workload_deps=("cluster",),
-        metrics={"turnaround": lambda ctx: ctx.breakdown.total
-                 * waves(clusters[ctx.point["cluster"]])})
+        job=lambda ctx: JobSpec(
+            instances=8, max_nodes=64,
+            nodes_per_instance=_dlrm_nodes_per_instance(ctx.cluster)))
     return transformer, dlrm
 
 
@@ -439,12 +458,13 @@ def cluster_comparison(
     transformer_shape: ShapeConfig,
     dlrm_cfg,
     dlrm_batch: int = 4096,
-    clusters: Optional[Dict[str, ClusterConfig]] = None,
+    clusters: Optional[Dict[str, ClusterLike]] = None,
     processes: Optional[int] = None,
 ) -> Dict[str, Dict[str, float]]:
     """runtime[cluster][workload] for Transformer-1T + 8 DLRM instances.
 
-    Transformer: best feasible (MP, DP) per cluster (capacity-constrained).
+    Transformer: best feasible (MP, DP) per cluster (capacity-constrained;
+    heterogeneous specs gate on the least-capable group).
     DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8).
     ``processes`` fans study cells over a fork pool (§V-E)."""
     clusters = clusters or TABLE_III_CLUSTERS
@@ -456,7 +476,7 @@ def cluster_comparison(
     for name, cl in clusters.items():
         per = t_res.select(cluster=name)
         fit = [c for c in per
-               if c.record["footprint_bytes"] <= cl.node.total_cap
+               if c.record["footprint_bytes"] <= cl.min_node_cap
                and c.breakdown.feasible]
         out[name] = {
             "transformer-1t": (min(c.record["total"] for c in fit) if fit
@@ -464,3 +484,123 @@ def cluster_comparison(
             "dlrm": d_res.select(cluster=name).cells[0].record["turnaround"],
         }
     return out
+
+
+# --------------------------------------------------------------------- #
+# ISSUE 4 tentpole: placement as a swept study axis.
+# (a) placement_study — EM-aware stage placement on a partial-EM fleet
+#     (ROADMAP: "a placement model that puts memory-hungry shards on the
+#     EM pods would let mixed fleets actually win");
+# (b) multi_tenant_study — the Fig. 13b waves metric generalized to a
+#     heterogeneous fleet through the JobSpec/ScheduleModel layer.
+# --------------------------------------------------------------------- #
+
+PLACEMENT_SHAPE = ShapeConfig("placement", 4096, 2048, "train")
+
+
+def placement_study(
+    cfg: Optional[ModelConfig] = None,
+    shape: Optional[ShapeConfig] = None,
+    em_pod_fractions: Sequence[float] = (0.0, 0.25, 0.5, 1.0),
+    plain: str = "B0", expanded: str = "B1",
+    strategies=None,
+    placements: Sequence[str] = ("paper", "em-aware"),
+) -> StudySpec:
+    """Transformer-1T pipeline-stage placement over (EM-pod fraction) x
+    (placement) x pipeline strategies.
+
+    The placement lever exists only for ``pp > 1`` — a flat job has one
+    stage and nothing to place (``hetero_cost_study`` covers that slice:
+    all-or-nothing EM) — so the default strategy grid sweeps the pipeline
+    cells.  Under the default ``PaperPlacement`` every pod group must
+    hold every stage, so a partial-EM fleet is gated by its plain pods
+    and the EM money is wasted (the PR-2 result).  ``EMAwarePlacement``
+    assigns the memory-hungry stages to the EM pods (1F1B stashes
+    ``pp - s`` microbatches at stage ``s``, so early stages are the fat
+    ones): a half-EM fleet then runs ZeRO-heavy low-MP pipelines the
+    plain fleet cannot fit at nearly the all-EM iteration time but well
+    below the all-EM TCO — and tops ``perf_per_dollar`` over both
+    all-plain and all-EM (see ``placement_ranking`` and the
+    ``--only placement`` bench row)."""
+    cfg = cfg or _default_transformer()
+    shape = shape or PLACEMENT_SHAPE
+    strategies = as_strategy_space(strategies) or GridSpace(
+        mp=(4, 8, 16, 32), dp=(4, 8, 16, 32, 64, 128), pp=(2, 4, 8))
+    return StudySpec(
+        name="placement-em-aware", model=cfg, shape=shape,
+        strategies=strategies,
+        axes=[Axis("em_pod_frac", tuple(em_pod_fractions),
+                   apply=_em_pod_mix(plain, expanded)),
+              placement_axis(tuple(placements))])
+
+
+def placement_ranking(processes: Optional[int] = None,
+                      **kwargs) -> List[Dict[str, float]]:
+    """Feasible (em_pod_frac, placement, strategy) cells, best
+    perf-per-dollar first."""
+    res = run_study(placement_study(**kwargs), processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["perf_per_dollar"],
+                  reverse=True)
+
+
+def _default_transformer() -> ModelConfig:
+    from repro.configs import get_config
+    return get_config("transformer-1t")
+
+
+def mixed_dlrm_fleet(plain: str = "B0", expanded: str = "B1",
+                     pods_each: int = 2) -> ClusterSpec:
+    """A small two-type fleet for multi-tenant studies: ``pods_each``
+    plain pods + ``pods_each`` memory-expanded pods (16-node Table III
+    pods; the default is the Fig. 13b 64-node fleet, half-expanded)."""
+    base, em = TABLE_III_CLUSTERS[plain], TABLE_III_CLUSTERS[expanded]
+    pod = base.topology.pod_size
+    return ClusterSpec(
+        name=f"{plain}+{expanded}-fleet",
+        pods=(PodSpec(base.node, count=pods_each, nodes_per_pod=pod),
+              PodSpec(em.node, count=pods_each, nodes_per_pod=pod)),
+        interconnect=base.topology, cost=em.cost,
+        notes=f"{pods_each} plain + {pods_each} EM pods x {pod} nodes.")
+
+
+def multi_tenant_study(
+    dlrm_cfg=None,
+    fleet: Optional[ClusterLike] = None,
+    global_batch: int = 4096,
+    num_instances: int = 8,
+    nodes_per_instance_opts: Sequence[int] = (64, 32, 16, 8),
+    placements: Sequence[str] = ("paper", "em-aware"),
+) -> StudySpec:
+    """Fig. 13b generalized: N DLRM instances on a (possibly mixed) fleet.
+
+    Each cell sweeps the per-instance node count and the placement; the
+    engine's JobSpec/ScheduleModel layer places the instances over the
+    fleet's pod groups and emits native ``concurrent_instances`` /
+    ``waves`` / ``turnaround`` / ``makespan`` columns.  On the default
+    half-EM fleet, small (memory-hungry) instances only fit the EM pods:
+    ``EMAwarePlacement`` schedules them there (more waves, but feasible),
+    while the paper placement spreads them fleet-wide and reports the
+    cell infeasible — the §V-C turnaround story, now placement-aware."""
+    if dlrm_cfg is None:
+        from repro.configs import get_dlrm_config
+        dlrm_cfg = get_dlrm_config()
+    fleet = fleet if fleet is not None else mixed_dlrm_fleet()
+    return StudySpec(
+        name="multi-tenant-dlrm", cluster=fleet,
+        axes=[Axis("nodes_per_inst", tuple(nodes_per_instance_opts)),
+              placement_axis(tuple(placements))],
+        workload=lambda ctx: decompose_dlrm(dlrm_cfg, global_batch,
+                                            ctx.point["nodes_per_inst"]),
+        workload_deps=("nodes_per_inst",),
+        job=lambda ctx: JobSpec(
+            instances=num_instances,
+            nodes_per_instance=ctx.point["nodes_per_inst"]))
+
+
+def multi_tenant_ranking(processes: Optional[int] = None,
+                         **kwargs) -> List[Dict[str, float]]:
+    """Feasible (nodes_per_inst, placement) cells, best turnaround first."""
+    res = run_study(multi_tenant_study(**kwargs), processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["turnaround"])

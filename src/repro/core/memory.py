@@ -84,6 +84,7 @@ def stage_footprints(
     workload: Workload,
     node: Optional[NodeConfig] = None,
     zero_stage: int = 2,
+    nodes: Optional[list] = None,
 ) -> list:
     """Per-pipeline-stage footprint reports (one entry when pp == 1).
 
@@ -91,23 +92,40 @@ def stage_footprints(
     memory is per-microbatch (1/m of the full-batch intermediates) times
     the schedule's stash depth: GPipe stashes all ``m`` in-flight
     microbatches; 1F1B at stage ``s`` stashes at most ``pp - s``
-    (Megatron-LM §2.2), so early stages pay more."""
+    (Megatron-LM §2.2), so early stages pay more; the interleaved
+    schedule pays the 1F1B stash scaled by ``1 + (pp-1)/(pp*v)``
+    (Megatron-LM §2.2.2: ``v`` in-flight virtual-stage chunks).
+
+    ``nodes`` (one :class:`NodeConfig` per stage) gates each stage
+    against *its own* node — the EM-aware heterogeneous placement path;
+    ``node`` gates every stage against the same node (the paper's
+    replicate-everywhere semantics)."""
     m = max(1, getattr(workload, "num_microbatches", 1))
     schedule = getattr(workload, "schedule", "1f1b")
+    v = max(1, getattr(workload, "virtual_stages", 1))
     pp = max(1, getattr(workload, "pp", 1))
+    if nodes is not None and len(nodes) != pp:
+        raise ValueError(f"nodes must have one entry per stage "
+                         f"({pp}), got {len(nodes)}")
     dways = _data_ways(workload)
     reps = []
     for s, layers in enumerate(workload.stage_layers()):
         states = _layer_states(layers, dways, max(1, workload.dp),
                                zero_stage)
         max_act = max((l.act_out_bytes for l in layers), default=0)
-        stash = m if schedule == "gpipe" else min(m, pp - s)
+        if schedule == "gpipe":
+            stash = m
+        else:
+            stash = min(m, pp - s)
+            if schedule == "interleaved":
+                stash *= 1 + (pp - 1) / (pp * v)
         awm = max_act / m * stash
         total = states + awm
+        gate = nodes[s] if nodes is not None else node
         fits_local = fits_total = True
-        if node is not None:
-            fits_local = total <= node.local_cap
-            fits_total = total <= node.total_cap
+        if gate is not None:
+            fits_local = total <= gate.local_cap
+            fits_total = total <= gate.total_cap
         reps.append(FootprintReport(states, awm, total, fits_local,
                                     fits_total))
     return reps

@@ -13,9 +13,13 @@ semantics:
     placement (MP fills pods, DP strides), so they get independent network
     streams (documented simplification of ASTRA-SIM's link-level model);
   * heterogeneous clusters (ClusterSpec with several pod groups) follow
-    synchronous-training semantics: every group holds the same shard, the
-    slowest / least-capable group gates the iteration, and the cluster is
-    feasible only if the shard fits every group's nodes;
+    the active :class:`~repro.core.placement.Placement`: the default
+    ``PaperPlacement`` keeps synchronous replicate-everywhere semantics —
+    every group holds the same shard, the slowest / least-capable group
+    gates the iteration, and the cluster is feasible only if the shard
+    fits every group's nodes; ``EMAwarePlacement`` instead *assigns*
+    pipeline stages to node groups (hungry stages to EM pods), each stage
+    simulated on and gated by its own group;
   * pipeline workloads (``Workload.pp > 1``) run a microbatch schedule
     model: each stage's full-batch time ``T_s`` (compute + blocking comm +
     exposed residue, including the stage-boundary p2p transfers) is split
@@ -26,8 +30,11 @@ semantics:
 
     i.e. bubble fraction (pp - 1) / (m + pp - 1) — identical for GPipe and
     1F1B (they differ in activation stashing, handled by
-    ``repro.core.memory.stage_footprints``).  Feasibility requires every
-    stage to fit its nodes.
+    ``repro.core.memory.stage_footprints``).  Megatron-LM's interleaved
+    schedule (``schedule="interleaved"``, ``v`` virtual stages per node)
+    shrinks the bubble to (pp - 1) / (v*m + pp - 1) at v-fold p2p volume
+    (charged by ``decompose``).  Feasibility requires every stage to fit
+    its nodes.
 
 Outputs the per-phase compute/exposed-communication breakdown of Fig. 8a.
 """
@@ -113,22 +120,40 @@ def simulate_iteration(
     zero_stage: int = 2,
     mem_bw_override: "Optional[float | str]" = None,
     require_fit: bool = False,
+    placement=None,
 ) -> IterationBreakdown:
     """One training iteration of ``workload`` on ``cluster``.
 
     Accepts the homogeneous ``ClusterConfig`` shim or a composable
-    ``ClusterSpec``; a heterogeneous spec simulates each node group and is
-    gated by the slowest one (synchronous training), with feasibility
-    requiring the shard to fit every group.  ``mem_bw_override`` may be a
-    float or the string ``"local"``, which resolves to each group's own
-    ``node.local_bw`` (§V-B1's infinite-capacity assumption)."""
+    ``ClusterSpec``.  ``placement`` (a
+    :class:`repro.core.placement.Placement`; None = ``PaperPlacement``)
+    decides how the workload maps onto a heterogeneous spec: the paper
+    default simulates each node group and is gated by the slowest one
+    (synchronous training, feasibility = the shard fits every group);
+    a placement that *assigns* pipeline stages to groups (EM-aware,
+    explicit) simulates each stage on its own group and gates it there.
+    ``mem_bw_override`` may be a float or the string ``"local"``, which
+    resolves to each group's own ``node.local_bw`` (§V-B1's
+    infinite-capacity assumption)."""
     groups = cluster.node_groups
     if len(groups) == 1:
         g = groups[0]
         return _simulate_group(workload, g.node, g.topology, zero_stage,
-                               mem_bw_override, require_fit)
+                               mem_bw_override, require_fit, placement)
+    if placement is not None and getattr(workload, "pp", 1) > 1:
+        stage_bytes = [r.total for r in
+                       stage_footprints(workload, None, zero_stage)]
+        nodes_per_stage = workload.mp * workload.dp * workload.ep
+        assign = placement.assign_stages(stage_bytes, groups,
+                                         nodes_per_stage)
+        if assign is not None:
+            envs = [(groups[i].node, groups[i].topology) for i in assign]
+            return _simulate_pipeline(workload, envs, zero_stage,
+                                      mem_bw_override, require_fit,
+                                      placement)
     per = [_simulate_group(workload, g.node, g.topology, zero_stage,
-                           mem_bw_override, require_fit) for g in groups]
+                           mem_bw_override, require_fit, placement)
+           for g in groups]
     # Footprint totals are node-independent; only the fits flags differ.
     worst_rep = worst_report([b.footprint for b in per])
     feasible = all(b.feasible for b in per)
@@ -140,6 +165,22 @@ def simulate_iteration(
     return IterationBreakdown(worst.fp, worst.ig, worst.wg, worst.optimizer,
                               worst_rep, worst.mem_bw, feasible,
                               bubble_fraction=worst.bubble_fraction)
+
+
+def group_breakdowns(
+    workload: Workload,
+    cluster: ClusterLike,
+    zero_stage: int = 2,
+    mem_bw_override: "Optional[float | str]" = None,
+    placement=None,
+) -> List[IterationBreakdown]:
+    """One breakdown per node group, in ``cluster.node_groups`` order —
+    how one *instance* of ``workload`` runs on each group alone.  The
+    multi-tenant :class:`~repro.core.placement.ScheduleModel` consumes
+    this to place concurrent instances on a mixed fleet."""
+    return [_simulate_group(workload, g.node, g.topology, zero_stage,
+                            mem_bw_override, False, placement)
+            for g in cluster.node_groups]
 
 
 # --------------------------------------------------------------------- #
@@ -245,6 +286,16 @@ def _optimizer_time(layers: List[LayerSpec], dense_ways: int,
     return (shard * OPTIM_BYTES_PER_PARAM + sparse) / mem_bw
 
 
+def _schedule_factors(schedule: str, pp: int, m: int,
+                      v: int) -> Tuple[float, float]:
+    """(iteration scale over the gating stage, bubble fraction) for a
+    pipeline schedule.  GPipe / 1F1B: (m + pp - 1)/m; Megatron-LM
+    interleaved 1F1B with ``v`` virtual stages per node: the bubble
+    shrinks v-fold to (pp - 1)/(v*m + pp - 1)."""
+    slots = v * m if schedule == "interleaved" else m
+    return (slots + pp - 1) / slots, (pp - 1) / (slots + pp - 1)
+
+
 def _simulate_group(
     workload: Workload,
     node: NodeConfig,
@@ -252,13 +303,15 @@ def _simulate_group(
     zero_stage: int,
     mem_bw_override: "Optional[float | str]",
     require_fit: bool,
+    placement=None,
 ) -> IterationBreakdown:
     """The ASTRA-lite timeline for one homogeneous node group."""
+    if getattr(workload, "pp", 1) > 1:
+        return _simulate_pipeline(workload, [(node, topology)] * workload.pp,
+                                  zero_stage, mem_bw_override, require_fit,
+                                  placement)
     if mem_bw_override == "local":
         mem_bw_override = node.local_bw
-    if getattr(workload, "pp", 1) > 1:
-        return _simulate_pipeline(workload, node, topology, zero_stage,
-                                  mem_bw_override, require_fit)
     ep = getattr(workload, "ep", 1)
     fp_rep = per_node_footprint(workload, node, zero_stage)
     mem_bw = (mem_bw_override if mem_bw_override is not None
@@ -266,7 +319,8 @@ def _simulate_group(
     feasible = fp_rep.fits_total
     if require_fit and not feasible:
         return _infeasible(fp_rep, mem_bw)
-    coll = CollectiveModel(topology, workload.mp, workload.dp, ep=ep)
+    coll = CollectiveModel(topology, workload.mp, workload.dp, ep=ep,
+                           placement=placement)
     delays = _layer_delays(workload.layers, node, mem_bw, coll,
                            node.sram_bytes)
     fp, ig, wg = _run_timeline(delays)
@@ -277,42 +331,54 @@ def _simulate_group(
 
 def _simulate_pipeline(
     workload: Workload,
-    node: NodeConfig,
-    topology: Topology,
+    stage_envs: "List[Tuple[NodeConfig, Topology]]",
     zero_stage: int,
-    mem_bw_override: Optional[float],
+    mem_bw_override: "Optional[float | str]",
     require_fit: bool,
+    placement=None,
 ) -> IterationBreakdown:
-    """Microbatch pipeline schedule over the slowest stage (GPipe / 1F1B).
+    """Microbatch pipeline schedule over the slowest stage.
 
-    Per-stage full-batch times come from the same timeline machinery as the
-    flat path (boundary p2p transfers are blocking events on the boundary
-    layers); the reported phase breakdown is the gating stage's, scaled by
-    the schedule factor (m + pp - 1) / m so ``total`` is the pipeline
-    iteration time.  The optimizer step runs concurrently on every stage,
-    so its time is the max over stages."""
+    ``stage_envs`` holds the (node, topology) hosting each stage — all
+    identical on a homogeneous group, per-assignment under an EM-aware /
+    explicit placement on a mixed fleet.  Per-stage full-batch times come
+    from the same timeline machinery as the flat path (boundary p2p
+    transfers are blocking events on the boundary layers); the reported
+    phase breakdown is the gating stage's, scaled by the schedule factor
+    — (m + pp - 1)/m for GPipe/1F1B, (v*m + pp - 1)/(v*m) interleaved —
+    so ``total`` is the pipeline iteration time.  Each stage's footprint
+    gates against *its* node; the optimizer step runs concurrently on
+    every stage, so its time is the max over stages."""
     pp = workload.pp
     m = max(1, workload.num_microbatches)
+    v = max(1, getattr(workload, "virtual_stages", 1))
     stages = workload.stage_layers()
-    reps = stage_footprints(workload, node, zero_stage)
+    nodes = [node for node, _ in stage_envs]
+    reps = stage_footprints(workload, None, zero_stage, nodes=nodes)
     worst_rep = worst_report(reps)
-    mem_bws = [mem_bw_override if mem_bw_override is not None
-               else effective_memory_bw(node, r.total) for r in reps]
+    mem_bws = [node.local_bw if mem_bw_override == "local"
+               else mem_bw_override if mem_bw_override is not None
+               else effective_memory_bw(node, r.total)
+               for node, r in zip(nodes, reps)]
     feasible = worst_rep.fits_total
-    bubble = (pp - 1) / (m + pp - 1)
+    scale, bubble = _schedule_factors(workload.schedule, pp, m, v)
     if require_fit and not feasible:
         return _infeasible(worst_rep, min(mem_bws), bubble_fraction=bubble)
-    coll = CollectiveModel(topology, workload.mp, workload.dp,
-                           pp=pp, ep=workload.ep)
+    colls = {}
+    for _, topo in stage_envs:
+        if id(topo) not in colls:
+            colls[id(topo)] = CollectiveModel(
+                topo, workload.mp, workload.dp, pp=pp, ep=workload.ep,
+                placement=placement)
     data_ways = workload.dp * workload.ep
     per_stage = []
-    for layers, bw in zip(stages, mem_bws):
-        delays = _layer_delays(layers, node, bw, coll, node.sram_bytes)
+    for layers, (node, topo), bw in zip(stages, stage_envs, mem_bws):
+        delays = _layer_delays(layers, node, bw, colls[id(topo)],
+                               node.sram_bytes)
         fp, ig, wg = _run_timeline(delays)
         per_stage.append((fp, ig, wg, fp.total + ig.total + wg.total))
     k = max(range(pp), key=lambda s: per_stage[s][3])
     fp, ig, wg, _ = per_stage[k]
-    scale = (m + pp - 1) / m
     optim = max(_optimizer_time(layers, data_ways, workload.dp, zero_stage,
                                 bw)
                 for layers, bw in zip(stages, mem_bws))

@@ -50,9 +50,18 @@ from typing import (
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig, ClusterLike
 from repro.core.memory import FootprintReport
+from repro.core.placement import (
+    JobSpec,
+    Placement,
+    PlacementLike,
+    Schedule,
+    ScheduleModel,
+    get_placement,
+)
 from repro.core.simulator import (
     IterationBreakdown,
     PhaseBreakdown,
+    group_breakdowns,
     simulate_iteration,
 )
 from repro.core.workload import InfeasibleStrategyError, Workload, decompose
@@ -82,6 +91,8 @@ class ParallelSpec:
     ep: int = 1
     zero_stage: int = DEFAULT_ZERO_STAGE
     num_microbatches: int = 0          # 0 = auto (shape knob or 4 * pp)
+    schedule: str = "1f1b"             # "gpipe" | "1f1b" | "interleaved"
+    virtual_stages: int = 0            # 0 = auto (2 when interleaved)
 
     def __post_init__(self):
         for f in ("mp", "dp", "pp", "ep"):
@@ -92,11 +103,21 @@ class ParallelSpec:
         if self.num_microbatches < 0:
             raise ValueError(
                 f"num_microbatches must be >= 0, got {self.num_microbatches}")
-        if self.pp == 1 and self.num_microbatches:
-            # Microbatching is a pipeline knob: without PP it has no effect
-            # on the decomposition, so normalize it away — distinct specs
-            # must mean distinct physics (labels, memo keys, grid dedupe).
+        if self.schedule not in ("gpipe", "1f1b", "interleaved"):
+            raise ValueError(f"schedule must be 'gpipe', '1f1b' or "
+                             f"'interleaved', got {self.schedule!r}")
+        if self.virtual_stages < 0:
+            raise ValueError(
+                f"virtual_stages must be >= 0, got {self.virtual_stages}")
+        # Pipeline-only knobs normalize away off the pipeline so distinct
+        # specs mean distinct physics (labels, memo keys, grid dedupe):
+        # microbatches/schedule do nothing at pp == 1, virtual stages do
+        # nothing off the interleaved schedule.
+        if self.pp == 1:
             object.__setattr__(self, "num_microbatches", 0)
+            object.__setattr__(self, "schedule", "1f1b")
+        if self.schedule != "interleaved" and self.virtual_stages:
+            object.__setattr__(self, "virtual_stages", 0)
 
     @property
     def num_nodes(self) -> int:
@@ -113,6 +134,10 @@ class ParallelSpec:
             parts.append(f"Z{self.zero_stage}")
         if self.num_microbatches:
             parts.append(f"MB{self.num_microbatches}")
+        if self.schedule == "gpipe":
+            parts.append("GPIPE")
+        elif self.schedule == "interleaved":
+            parts.append(f"INT{self.virtual_stages or 2}")
         return "_".join(parts)
 
 
@@ -194,19 +219,22 @@ class GridSpace(StrategySpace):
     ep: Sequence[int] = (1,)
     zero_stages: Sequence[int] = (DEFAULT_ZERO_STAGE,)
     num_microbatches: Sequence[int] = (0,)
+    schedules: Sequence[str] = ("1f1b",)
+    virtual_stages: Sequence[int] = (0,)
     fill_cluster: bool = True
 
     def specs(self, num_nodes: int) -> List[ParallelSpec]:
         out = []
         seen = set()
-        for mp, dp, pp, ep, z, mb in itertools.product(
+        for mp, dp, pp, ep, z, mb, sched, v in itertools.product(
                 self.mp, self.dp, self.pp, self.ep, self.zero_stages,
-                self.num_microbatches):
+                self.num_microbatches, self.schedules, self.virtual_stages):
             s = ParallelSpec(mp=mp, dp=dp, pp=pp, ep=ep, zero_stage=z,
-                             num_microbatches=mb)
+                             num_microbatches=mb, schedule=sched,
+                             virtual_stages=v)
             if self.fill_cluster and s.num_nodes != num_nodes:
                 continue
-            if s in seen:   # pp=1 normalizes the microbatch knob away
+            if s in seen:   # pp=1 normalizes the pipeline knobs away
                 continue
             seen.add(s)
             out.append(s)
@@ -285,27 +313,46 @@ class Axis:
     """One swept knob: a name, its values, and how a value rewrites the
     cluster — a dotted ``path`` (optionally ``mode="scale"``) or a custom
     ``apply(cluster, value) -> cluster``. An axis with neither is a pure
-    label axis (it only parameterizes the workload builder or metrics)."""
+    label axis (it only parameterizes the workload builder or metrics).
+
+    ``kind="placement"`` sweeps the cell's
+    :class:`~repro.core.placement.Placement` instead of the cluster: the
+    values are placement names (``"paper"``, ``"em-aware"``) or Placement
+    instances, and the record column holds the placement label.  The
+    helper :func:`placement_axis` builds one."""
 
     name: str
     values: Sequence[Any]
     path: Optional[str] = None
     mode: str = "set"                                  # "set" | "scale"
     apply: Optional[Callable[[ClusterLike, Any], ClusterLike]] = None
+    kind: str = "cluster"                              # "cluster" | "placement"
 
     def __post_init__(self):
         if self.mode not in ("set", "scale"):
             raise ValueError(f"mode must be 'set' or 'scale', got {self.mode!r}")
+        if self.kind not in ("cluster", "placement"):
+            raise ValueError(
+                f"kind must be 'cluster' or 'placement', got {self.kind!r}")
         if self.path is not None and self.apply is not None:
             raise ValueError("give either path or apply, not both")
+        if self.kind == "placement" and (self.path or self.apply):
+            raise ValueError("a placement axis takes neither path nor apply")
 
     def override(self, cluster: ClusterLike, value: Any) -> ClusterLike:
+        if self.kind == "placement" or self.apply is None and self.path is None:
+            return cluster
         if self.apply is not None:
             return self.apply(cluster, value)
-        if self.path is None:
-            return cluster
         return set_by_path(cluster, self.path, value,
                            scale=(self.mode == "scale"))
+
+
+def placement_axis(values: Sequence[PlacementLike] = ("paper", "em-aware"),
+                   name: str = "placement") -> Axis:
+    """A sweepable placement axis; values are names from
+    :func:`repro.core.placement.list_placements` or Placement instances."""
+    return Axis(name, tuple(values), kind="placement")
 
 
 # ===================================================================== #
@@ -322,9 +369,11 @@ class StudyContext:
     strategy: Optional[ParallelSpec]
     point: Dict[str, Any]                      # axis name -> swept value
     cluster: Optional[ClusterLike]             # None only in evaluate studies
+    placement: Optional[Placement] = None
     workload: Optional[Workload] = None
     breakdown: Optional[IterationBreakdown] = None
     footprint: Optional[FootprintReport] = None
+    schedule: Optional[Schedule] = None        # set when the spec has a job
 
 
 @dataclasses.dataclass
@@ -337,7 +386,18 @@ class StudySpec:
     ``workload_deps`` so the engine's memoizer keys decompositions
     correctly. ``metrics`` adds derived record columns. ``evaluate``
     replaces the simulator entirely (for studies over measured frontends —
-    see experiments/hillclimb_run.py)."""
+    see experiments/hillclimb_run.py).
+
+    ``placement`` (a :class:`~repro.core.placement.Placement` or its
+    registry name) fixes how cells map onto the cluster; a
+    ``kind="placement"`` axis sweeps it per cell instead.  ``job`` (a
+    :class:`~repro.core.placement.JobSpec`, or ``ctx -> JobSpec`` when it
+    depends on the swept point) turns every cell multi-tenant: the engine
+    schedules ``job.instances`` concurrent instances over the cluster's
+    node groups through ``schedule_model`` (default
+    :class:`~repro.core.placement.ScheduleModel`) and writes native
+    ``concurrent_instances`` / ``waves`` / ``turnaround`` / ``makespan``
+    record columns (the Fig. 13b / Fig. 15 metrics)."""
 
     name: str
     cluster: Optional[ClusterLike] = None
@@ -349,26 +409,34 @@ class StudySpec:
     workload_deps: Sequence[str] = ()
     mem_bw_override: Union[float, str, None] = None    # float | "local" | None
     require_fit: bool = False
+    placement: PlacementLike = None
+    job: Union[JobSpec, Callable[[StudyContext], JobSpec], None] = None
+    schedule_model: Optional[ScheduleModel] = None
     metrics: Dict[str, Callable[[StudyContext], Any]] = \
         dataclasses.field(default_factory=dict)
     evaluate: Optional[Callable[[StudyContext], Dict[str, Any]]] = None
 
     # Record columns the engine itself writes; an axis shadowing one would
-    # silently corrupt select()/pivot()/best().
+    # silently corrupt select()/pivot()/best().  (A kind="placement" axis
+    # *owns* the "placement" column, so it is exempt from the check.)
     RESERVED_COLUMNS = frozenset({
         "study", "strategy", "mp", "dp", "pp", "ep", "zero_stage",
-        "num_microbatches", "bubble_fraction", "infeasible_reason",
+        "num_microbatches", "schedule", "virtual_stages", "placement",
+        "bubble_fraction", "infeasible_reason",
         "fp_compute", "fp_exposed_comm", "ig_compute", "ig_exposed_comm",
         "wg_compute", "wg_exposed_comm", "optimizer", "total",
         "feasible", "footprint_bytes", "mem_bw",
         "cost_usd", "tco", "perf_per_dollar",
+        "concurrent_instances", "waves", "turnaround", "makespan",
     })
 
     def __post_init__(self):
         axis_names = [a.name for a in self.axes]
         if len(set(axis_names)) != len(axis_names):
             raise ValueError(f"duplicate axis names: {axis_names}")
-        reserved = set(axis_names) & self.RESERVED_COLUMNS
+        reserved = {a.name for a in self.axes
+                    if not (a.kind == "placement" and a.name == "placement")} \
+            & self.RESERVED_COLUMNS
         if reserved:
             raise ValueError(
                 f"axis names shadow engine record columns: {sorted(reserved)}")
@@ -379,6 +447,7 @@ class StudySpec:
                 and self.mem_bw_override != "local":
             raise ValueError("mem_bw_override must be a float, None, "
                              "or the string 'local'")
+        get_placement(self.placement)   # fail fast on unknown names
 
 
 @dataclasses.dataclass
@@ -399,29 +468,37 @@ class CellResult:
 # ===================================================================== #
 
 def _cells(spec: StudySpec) -> List[Tuple[Optional[ParallelSpec],
-                                          Dict[str, Any], ClusterLike]]:
+                                          Dict[str, Any], ClusterLike,
+                                          Optional[Placement]]]:
     """Axis-product-major enumeration; strategies are resolved against each
     cell's *overridden* cluster so a cluster-valued axis (Fig. 15) gets the
-    right per-cluster strategy list."""
+    right per-cluster strategy list.  A ``kind="placement"`` axis rewrites
+    the cell's placement instead of the cluster (the point keeps the
+    placement's label so records stay tidy)."""
     space = as_strategy_space(spec.strategies)
     names = [a.name for a in spec.axes]
     out = []
     for combo in itertools.product(*(a.values for a in spec.axes)):
         point = dict(zip(names, combo))
         cluster = spec.cluster
+        pl = get_placement(spec.placement)
         for axis, value in zip(spec.axes, combo):
-            cluster = axis.override(cluster, value)
+            if axis.kind == "placement":
+                pl = get_placement(value)
+                point[axis.name] = pl.label if pl is not None else None
+            else:
+                cluster = axis.override(cluster, value)
         if cluster is None and spec.evaluate is None:
             raise ValueError(
                 f"study {spec.name!r}: no cluster — set StudySpec.cluster "
                 "or provide it via an axis apply() (only evaluate-based "
                 "studies may run clusterless)")
         if space is None:
-            out.append((None, point, cluster))
+            out.append((None, point, cluster, pl))
         else:
             n = cluster.num_nodes if cluster is not None else 0
             for strategy in space.specs(n):
-                out.append((strategy, point, cluster))
+                out.append((strategy, point, cluster, pl))
     return out
 
 
@@ -432,7 +509,9 @@ def _default_workload(ctx: StudyContext) -> Workload:
                          "provide a workload builder")
     return decompose(ctx.spec.model, ctx.spec.shape, mp=s.mp, dp=s.dp,
                      pp=s.pp, ep=s.ep,
-                     num_microbatches=s.num_microbatches or None)
+                     num_microbatches=s.num_microbatches or None,
+                     schedule=s.schedule,
+                     virtual_stages=s.virtual_stages or None)
 
 
 def _workload_key(spec: StudySpec, strategy: Optional[ParallelSpec],
@@ -462,17 +541,61 @@ def _cost_columns(record: Dict[str, Any], cluster: ClusterLike) -> None:
         record["perf_per_dollar"] = 0.0
 
 
+_DEFAULT_SCHEDULER = ScheduleModel()
+
+
+def _job_columns(spec: StudySpec, ctx: StudyContext,
+                 record: Dict[str, Any], sim_memo: dict,
+                 skey: tuple) -> None:
+    """Schedule ``spec.job``'s instances over the cell's node groups and
+    attach the multi-tenant columns (Fig. 13b / Fig. 15 metrics).  The
+    per-group breakdowns are memoized alongside the simulator calls (the
+    same physics repeats across placement/job-only axis values)."""
+    job = spec.job(ctx) if callable(spec.job) else spec.job
+    if job.nodes_per_instance == 0:
+        if ctx.strategy is None:
+            raise ValueError(
+                f"study {spec.name!r}: JobSpec.nodes_per_instance is 0 and "
+                "the study has no strategy to derive it from")
+        job = dataclasses.replace(job,
+                                  nodes_per_instance=ctx.strategy.num_nodes)
+    gkey = ("groups",) + skey
+    if gkey not in sim_memo:
+        sim_memo[gkey] = group_breakdowns(
+            ctx.workload, ctx.cluster,
+            zero_stage=(ctx.strategy.zero_stage
+                        if ctx.strategy is not None else DEFAULT_ZERO_STAGE),
+            mem_bw_override=spec.mem_bw_override,
+            placement=ctx.placement)
+    per = sim_memo[gkey]
+    sched = (spec.schedule_model or _DEFAULT_SCHEDULER).schedule(
+        job, ctx.cluster.node_groups, [b.total for b in per],
+        fits=[b.feasible for b in per], placement=ctx.placement)
+    ctx.schedule = sched
+    record.update(concurrent_instances=sched.concurrent, waves=sched.waves,
+                  turnaround=sched.turnaround, makespan=sched.makespan)
+    # Multi-tenant semantics supersede the synchronous single-job gate:
+    # the cell is feasible iff every *hosting* group fits its instances
+    # (identical on a homogeneous fleet; on a mixed fleet an EM-aware
+    # schedule confined to the EM pods is feasible even though the
+    # replicate-everywhere gate is not).
+    record["feasible"] = sched.feasible
+
+
 def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
                point: Dict[str, Any], cluster: ClusterLike,
+               placement: Optional[Placement],
                wl_memo: dict, sim_memo: dict) -> CellResult:
     ctx = StudyContext(spec=spec, strategy=strategy, point=dict(point),
-                       cluster=cluster)
+                       cluster=cluster, placement=placement)
     base: Dict[str, Any] = {"study": spec.name}
     if strategy is not None:
         base.update(strategy=strategy.label, mp=strategy.mp, dp=strategy.dp,
                     pp=strategy.pp, ep=strategy.ep,
                     zero_stage=strategy.zero_stage,
                     num_microbatches=strategy.num_microbatches)
+    if placement is not None and "placement" not in point:
+        base["placement"] = placement.label
     base.update(point)
 
     if spec.evaluate is not None:
@@ -505,6 +628,9 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
                   "feasible": False, "footprint_bytes": float("inf"),
                   "mem_bw": 0.0, "bubble_fraction": 0.0,
                   "infeasible_reason": str(wl)}
+        if spec.job is not None:
+            record.update(concurrent_instances=0, waves=0,
+                          turnaround=float("inf"), makespan=float("inf"))
         if cluster is not None:
             _cost_columns(record, cluster)
         for mname, fn in spec.metrics.items():
@@ -515,9 +641,13 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
         return CellResult(strategy, ctx.point, cluster, None, None, record)
     ctx.workload = wl
     if strategy is not None and hasattr(ctx.workload, "num_microbatches"):
-        # Surface the workload's *resolved* microbatch count (the strategy
+        # Surface the workload's *resolved* pipeline knobs (the strategy
         # may have asked for 0 = auto; pp == 1 resolves to 1).
         base["num_microbatches"] = ctx.workload.num_microbatches
+        base["schedule"] = getattr(ctx.workload, "schedule",
+                                   strategy.schedule)
+        base["virtual_stages"] = getattr(ctx.workload, "virtual_stages",
+                                         strategy.virtual_stages)
 
     # "local" resolves per node group inside the simulator, so it works on
     # heterogeneous ClusterSpecs too (each group's own node.local_bw).
@@ -530,11 +660,12 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
     if dataclasses.is_dataclass(cluster) \
             and getattr(cluster, "cost", None) is not None:
         sim_cluster = dataclasses.replace(cluster, cost=None)
-    skey = (wkey, sim_cluster, zero, override, spec.require_fit)
+    skey = (wkey, sim_cluster, zero, override, spec.require_fit, placement)
     if skey not in sim_memo:
         sim_memo[skey] = simulate_iteration(
             ctx.workload, cluster, zero_stage=zero,
-            mem_bw_override=override, require_fit=spec.require_fit)
+            mem_bw_override=override, require_fit=spec.require_fit,
+            placement=placement)
     br = sim_memo[skey]
     ctx.breakdown = br
     ctx.footprint = br.footprint
@@ -544,6 +675,8 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
               "footprint_bytes": br.footprint.total,
               "mem_bw": br.mem_bw,
               "bubble_fraction": br.bubble_fraction}
+    if spec.job is not None:
+        _job_columns(spec, ctx, record, sim_memo, skey)
     _cost_columns(record, cluster)
     for mname, fn in spec.metrics.items():
         record[mname] = fn(ctx)
@@ -563,8 +696,8 @@ _FORK_SIM_MEMO: dict = {}
 
 
 def _eval_cell_by_index(i: int) -> CellResult:
-    strategy, point, cluster = _FORK_CELLS[i]
-    return _eval_cell(_FORK_SPEC, strategy, point, cluster,
+    strategy, point, cluster, placement = _FORK_CELLS[i]
+    return _eval_cell(_FORK_SPEC, strategy, point, cluster, placement,
                       _FORK_WL_MEMO, _FORK_SIM_MEMO)
 
 
@@ -595,8 +728,8 @@ def run_study(spec: StudySpec, processes: Optional[int] = None) -> "StudyResult"
             _FORK_SPEC, _FORK_CELLS = None, []
     wl_memo: dict = {}
     sim_memo: dict = {}
-    results = [_eval_cell(spec, s, p, cl, wl_memo, sim_memo)
-               for s, p, cl in cells]
+    results = [_eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo)
+               for s, p, cl, pl in cells]
     return StudyResult(spec=spec, cells=results)
 
 

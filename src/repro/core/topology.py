@@ -11,10 +11,13 @@ bandwidth/latency (:attr:`Topology.hops`), functional updates
 fabric is one frozen dataclass implementing the protocol; no isinstance
 ladder anywhere downstream needs to grow.
 
-Rank placement follows the paper throughout: MP groups fill consecutive
-ranks (pods first), DP groups stride by MP.  All times are seconds for one
-collective of ``size`` bytes issued by every member of the group (the
-usual symmetric-collective convention).
+Rank placement defaults to the paper's order — MP groups fill consecutive
+ranks (pods first), DP groups stride by MP — but is *pluggable*: every
+``collective_time`` accepts an optional ``placement`` object (see
+:mod:`repro.core.placement`) whose ``group_placement``/``p2p_crosses_pod``
+resolve which hops a rank group crosses; ``None`` means the paper order.
+All times are seconds for one collective of ``size`` bytes issued by every
+member of the group (the usual symmetric-collective convention).
 """
 
 from __future__ import annotations
@@ -125,6 +128,25 @@ def placement(scope: str, mp: int, dp: int, pod_size: int,
     return _strided(dp * ep, mp, pod_size)
 
 
+class _PaperOrder:
+    """Default hop resolution: the module-level paper rank order.  Stands
+    in whenever ``collective_time`` is called without a placement, so the
+    families have exactly one code path."""
+
+    @staticmethod
+    def group_placement(scope: str, mp: int, dp: int, pod_size: int,
+                        pp: int = 1, ep: int = 1) -> "GroupPlacement":
+        return placement(scope, mp, dp, pod_size, pp, ep)
+
+    @staticmethod
+    def p2p_crosses_pod(mp: int, dp: int, pod_size: int,
+                        pp: int = 1, ep: int = 1) -> bool:
+        return mp * ep * dp * pp > pod_size
+
+
+_PAPER_ORDER = _PaperOrder()
+
+
 # --------------------------------------------------------------------- #
 # The protocol
 # --------------------------------------------------------------------- #
@@ -157,8 +179,8 @@ class Topology(Protocol):
     def links_per_node(self) -> int: ...
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int, pp: int = 1, ep: int = 1
-                        ) -> float: ...
+                        mp: int, dp: int, pp: int = 1, ep: int = 1,
+                        placement=None) -> float: ...
 
     def with_(self, **updates): ...
 
@@ -206,7 +228,9 @@ class HierarchicalSwitch(TopologyBase):
         return 2                   # one intra-pod link + one inter-pod uplink
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+                        mp: int, dp: int, pp: int = 1, ep: int = 1,
+                        placement=None) -> float:
+        order = placement if placement is not None else _PAPER_ORDER
         if _group_size(scope, mp, dp, pp, ep) <= 1 or size <= 0:
             return 0.0
         if collective == "p2p":
@@ -214,10 +238,10 @@ class HierarchicalSwitch(TopologyBase):
             # pp-stage mesh fits inside one pod, some stage boundary
             # crosses pods — and the simulator gates on the slowest stage,
             # so bill the inter-pod hop.
-            if mp * ep * dp * pp <= self.pod_size:
+            if not order.p2p_crosses_pod(mp, dp, self.pod_size, pp, ep):
                 return size / self.intra_bw + self.intra_latency
             return size / self.inter_bw + self.inter_latency
-        pl = placement(scope, mp, dp, self.pod_size, pp, ep)
+        pl = order.group_placement(scope, mp, dp, self.pod_size, pp, ep)
         p, q = pl.intra, pl.inter
         if q <= 1:  # fully intra-pod
             return flat_time(collective, size, p, self.intra_bw,
@@ -280,14 +304,17 @@ class Torus(TopologyBase):
         return 2 * len(self.dims) + (1 if self.dcn_bw else 0)
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+                        mp: int, dp: int, pp: int = 1, ep: int = 1,
+                        placement=None) -> float:
+        order = placement if placement is not None else _PAPER_ORDER
         group = _group_size(scope, mp, dp, pp, ep)
         if group <= 1 or size <= 0:
             return 0.0
         if collective == "p2p":
             # One hop to the neighbouring stage; DCN when the pp-stage mesh
             # spills past one torus pod (worst boundary gates, as above).
-            if self.dcn_bw and mp * ep * dp * pp > self.pod_size:
+            if self.dcn_bw and order.p2p_crosses_pod(mp, dp, self.pod_size,
+                                                     pp, ep):
                 return size / self.dcn_bw + self.dcn_latency
             return size / self.link_bw + self.latency
         return self._time(collective, size, group)
@@ -368,7 +395,8 @@ class SingleSwitch(TopologyBase):
         return 1
 
     def collective_time(self, collective: str, size: float, scope: str,
-                        mp: int, dp: int, pp: int = 1, ep: int = 1) -> float:
+                        mp: int, dp: int, pp: int = 1, ep: int = 1,
+                        placement=None) -> float:
         group = _group_size(scope, mp, dp, pp, ep)
         if group <= 1 or size <= 0:
             return 0.0

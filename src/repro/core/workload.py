@@ -125,7 +125,8 @@ class Workload:
     pp: int = 1
     ep: int = 1
     num_microbatches: int = 1      # pipeline microbatches (1 when pp == 1)
-    schedule: str = "1f1b"         # "gpipe" | "1f1b" (activation stashing)
+    schedule: str = "1f1b"         # "gpipe" | "1f1b" | "interleaved"
+    virtual_stages: int = 1        # v chunks per node (interleaved only)
 
     # ------------------------------------------------------------------ #
     def stage_layers(self) -> List[List[LayerSpec]]:
@@ -518,16 +519,30 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
               override_batch: Optional[int] = None,
               override_seq: Optional[int] = None,
               num_microbatches: Optional[int] = None,
-              schedule: str = "1f1b") -> Workload:
+              schedule: str = "1f1b",
+              virtual_stages: Optional[int] = None) -> Workload:
     """ModelConfig + shape + (MP, DP, PP, EP) -> per-node Workload.
 
     ``pp=1, ep=1`` (the defaults) reproduce the pre-PP/EP decomposition
-    bit-for-bit; see the module docstring for the four-axis semantics."""
+    bit-for-bit; see the module docstring for the four-axis semantics.
+    ``schedule="interleaved"`` models Megatron-LM's interleaved 1F1B:
+    each node runs ``virtual_stages`` (default 2) non-contiguous model
+    chunks, shrinking the pipeline bubble to (pp-1)/(v*m + pp-1) at the
+    price of v-fold stage-boundary p2p volume (charged here)."""
     for axis, v in (("mp", mp), ("dp", dp), ("pp", pp), ("ep", ep)):
         if v < 1:
             raise ValueError(f"{axis} must be >= 1, got {v}")
-    if schedule not in ("gpipe", "1f1b"):
-        raise ValueError(f"schedule must be 'gpipe' or '1f1b', got {schedule!r}")
+    if schedule not in ("gpipe", "1f1b", "interleaved"):
+        raise ValueError(f"schedule must be 'gpipe', '1f1b' or "
+                         f"'interleaved', got {schedule!r}")
+    if virtual_stages is not None and virtual_stages < 1:
+        raise ValueError(f"virtual_stages must be >= 1, got {virtual_stages}")
+    if schedule == "interleaved":
+        vstages = virtual_stages if virtual_stages is not None else 2
+    else:
+        vstages = 1                # the knob is interleaved-only
+    if pp <= 1:                    # no pipeline: schedule has no effect
+        schedule, vstages = "1f1b", 1
     batch = override_batch if override_batch is not None else shape.global_batch
     seq = override_seq if override_seq is not None else shape.seq_len
     # Non-expert layers see the EP group as extra data parallelism.
@@ -615,8 +630,10 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
                 assert cfg.vision is not None
                 boundary_tokens = b_local * (
                     1 if decode else seq + cfg.vision.num_patches)
+        # Interleaved 1F1B: every microbatch crosses each node boundary
+        # once per virtual-stage chunk -> v-fold p2p volume.
         layers = _partition_stages(
-            layers, pp, boundary_tokens * cfg.d_model * BYTES)
+            layers, pp, boundary_tokens * cfg.d_model * BYTES * vstages)
     _dp_grad_events(layers, dp, ep)
     suffix = f"_pp{pp}_ep{ep}" if (pp > 1 or ep > 1) else ""
     return Workload(
@@ -624,7 +641,7 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
         layers=layers, mp=mp, dp=dp, pp=pp, ep=ep,
         num_microbatches=_resolve_microbatches(num_microbatches, shape,
                                                pp, b_local),
-        schedule=schedule,
+        schedule=schedule, virtual_stages=vstages,
         per_replica_batch=b_local, seq_len=seq,
     )
 

@@ -1,0 +1,502 @@
+"""Tests for the first-class Placement & Scheduling API (ISSUE 4).
+
+Lockdown: ``PaperPlacement`` is bit-for-bit the default mapping
+(explicitly passing it changes nothing, anywhere: collectives, simulator,
+studies).  New behavior: EM-aware stage assignment on heterogeneous
+clusters, the JobSpec/ScheduleModel multi-tenant layer (golden-equivalent
+to the legacy waves lambdas), the interleaved pipeline schedule, and the
+heterogeneous-cluster dse regressions.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config, get_dlrm_config
+from repro.configs.base import ShapeConfig
+from repro.core import dse
+from repro.core.cluster import (
+    B_HYBRID_EM,
+    BASELINE_DGX_A100,
+    NodeConfig,
+    TABLE_III_CLUSTERS,
+)
+from repro.core.cluster import NodeGroup
+from repro.core.collectives import CollectiveModel
+from repro.core.memory import stage_footprints
+from repro.core.placement import (
+    EMAwarePlacement,
+    ExplicitPlacement,
+    JobSpec,
+    PaperPlacement,
+    Schedule,
+    ScheduleModel,
+    get_placement,
+    list_placements,
+)
+from repro.core.simulator import group_breakdowns, simulate_iteration
+from repro.core.study import (
+    Axis,
+    GridSpace,
+    ParallelSpec,
+    StudySpec,
+    placement_axis,
+    run_study,
+)
+from repro.core.workload import decompose, decompose_dlrm
+
+GB = 1e9
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+PAPER = PaperPlacement()
+EM_AWARE = EMAwarePlacement()
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return get_config("transformer-1t")
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("smollm-135m")
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    return dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+
+
+# ===================================================================== #
+# PaperPlacement == the default mapping, bit-for-bit
+# ===================================================================== #
+
+class TestPaperPlacementGoldens:
+    @pytest.mark.parametrize("cluster", ["dgx-a100-1k", "A0", "tpu-v4",
+                                         "dojo"])
+    def test_collective_times_unchanged_across_families(self, cluster):
+        """Passing PaperPlacement must not move a single collective time,
+        for every topology family / scope / collective."""
+        from repro.core.cluster import get_cluster
+        cl = get_cluster(cluster)
+        base = CollectiveModel(cl, mp=8, dp=16, pp=2, ep=4)
+        paper = CollectiveModel(cl, mp=8, dp=16, pp=2, ep=4, placement=PAPER)
+        for coll in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all"):
+            for scope in ("mp", "dp", "ep", "edp"):
+                assert paper.time(coll, 1e9, scope) == \
+                    base.time(coll, 1e9, scope)
+        assert paper.time("p2p", 1e9, "pp") == base.time("p2p", 1e9, "pp")
+
+    @pytest.mark.parametrize("mp,dp,pp,ep", [(8, 128, 1, 1), (64, 16, 1, 1),
+                                             (8, 16, 8, 1), (4, 32, 4, 2)])
+    def test_simulated_iteration_unchanged(self, tcfg, mp, dp, pp, ep):
+        cfg = tcfg if ep == 1 else get_config("granite-moe-3b-a800m")
+        wl = decompose(cfg, SHAPE, mp=mp, dp=dp, pp=pp, ep=ep)
+        base = simulate_iteration(wl, BASELINE_DGX_A100)
+        paper = simulate_iteration(wl, BASELINE_DGX_A100, placement=PAPER)
+        assert paper.as_dict() == base.as_dict()
+        assert paper.feasible == base.feasible
+        assert paper.bubble_fraction == base.bubble_fraction
+
+    def test_heterogeneous_gating_unchanged(self, tcfg):
+        """On a mixed cluster the paper placement keeps PR-2's
+        replicate-everywhere slowest-group gating bit-for-bit."""
+        wl = decompose(tcfg, SHAPE, mp=8, dp=64, pp=2)
+        base = simulate_iteration(wl, B_HYBRID_EM)
+        paper = simulate_iteration(wl, B_HYBRID_EM, placement=PAPER)
+        assert paper.as_dict() == base.as_dict()
+        assert paper.feasible == base.feasible
+
+    def test_dlrm_unchanged(self):
+        wl = decompose_dlrm(get_dlrm_config(), 65536, 16)
+        b1 = TABLE_III_CLUSTERS["B1"]
+        assert simulate_iteration(wl, b1, placement=PAPER).as_dict() == \
+            simulate_iteration(wl, b1).as_dict()
+
+    def test_study_with_explicit_paper_placement_is_identity(
+            self, small_cfg, small_cluster):
+        spec = dict(model=small_cfg, shape=SMALL_SHAPE,
+                    cluster=small_cluster,
+                    strategies=GridSpace(mp=(2,), dp=(2,), pp=(1, 2)))
+        base = run_study(StudySpec(name="t", **spec))
+        paper = run_study(StudySpec(name="t", placement="paper", **spec))
+        for b, p in zip(base.records, paper.records):
+            assert {k: v for k, v in p.items() if k != "placement"} == b
+            assert p["placement"] == "paper"
+
+    def test_registry(self):
+        assert set(list_placements()) == {"paper", "em-aware"}
+        assert get_placement("paper") is PAPER or \
+            isinstance(get_placement("paper"), PaperPlacement)
+        assert get_placement(None) is None
+        assert get_placement(EM_AWARE) is EM_AWARE
+        with pytest.raises(KeyError, match="unknown placement"):
+            get_placement("nope")
+        with pytest.raises(TypeError):
+            get_placement(42)
+
+
+# ===================================================================== #
+# EM-aware stage assignment
+# ===================================================================== #
+
+def _groups(*caps_nodes):
+    """[(total_cap_gb, num_nodes), ...] -> NodeGroup list."""
+    out = []
+    for i, (cap, n) in enumerate(caps_nodes):
+        node = NodeConfig(f"n{i}", 1e12, cap * GB, 1e12, 1e6)
+        out.append(NodeGroup(node, n, BASELINE_DGX_A100.topology))
+    return out
+
+
+class TestEMAwareAssignment:
+    def test_hungry_stages_go_to_roomy_groups(self):
+        groups = _groups((80, 2), (560, 2))
+        assign = EM_AWARE.assign_stages([100 * GB, 70 * GB, 120 * GB,
+                                         50 * GB], groups, 1)
+        # Stages sorted by bytes: 2, 0 -> EM group (index 1); 1, 3 -> plain.
+        assert assign == (1, 0, 1, 0)
+
+    def test_none_when_capacity_insufficient(self):
+        groups = _groups((80, 1), (560, 1))
+        assert EM_AWARE.assign_stages([1, 2, 3], groups, 1) is None
+
+    def test_none_for_single_group_or_flat(self):
+        groups = _groups((80, 4))
+        assert EM_AWARE.assign_stages([1, 2], groups, 1) is None
+        assert EM_AWARE.assign_stages([1], _groups((80, 2), (560, 2)),
+                                      1) is None
+
+    def test_em_aware_unlocks_partial_em_fleet(self, tcfg):
+        """ROADMAP: a placement that puts memory-hungry stages on the EM
+        pods makes a mixed fleet feasible where the paper placement is
+        gated by the plain pods."""
+        half = dse._em_pod_mix("B0", "B1")(None, 0.5)
+        wl = decompose(tcfg, dse.PLACEMENT_SHAPE, mp=16, dp=32, pp=2)
+        paper = simulate_iteration(wl, half, placement=PAPER)
+        aware = simulate_iteration(wl, half, placement=EM_AWARE)
+        assert not paper.feasible
+        assert aware.feasible
+        assert aware.total <= paper.total
+        # The hungry stage sits on the EM pods: per-stage gating holds.
+        reps = stage_footprints(wl, None, 2)
+        assert max(r.total for r in reps) > 80 * GB  # needs EM somewhere
+        assert min(r.total for r in reps) <= 80 * GB  # plain can host one
+
+    def test_explicit_placement_validates(self, tcfg):
+        wl = decompose(tcfg, SHAPE, mp=8, dp=64, pp=2)
+        half = dse._em_pod_mix("B0", "B1")(None, 0.5)
+        ok = simulate_iteration(wl, half,
+                                placement=ExplicitPlacement((1, 0)))
+        assert ok.total > 0
+        with pytest.raises(ValueError, match="stages"):
+            simulate_iteration(wl, half,
+                               placement=ExplicitPlacement((0, 1, 0)))
+        with pytest.raises(ValueError, match="node groups"):
+            simulate_iteration(wl, half,
+                               placement=ExplicitPlacement((0, 7)))
+
+    def test_explicit_placement_capacity_check(self, tcfg):
+        wl = decompose(tcfg, SHAPE, mp=8, dp=64, pp=2)  # 512-node stages
+        half = dse._em_pod_mix("B0", "B1")(None, 0.5)   # 512 + 512
+        with pytest.raises(ValueError, match="nodes"):
+            simulate_iteration(wl, half,
+                               placement=ExplicitPlacement((0, 0)))
+
+
+# ===================================================================== #
+# JobSpec / ScheduleModel: the legacy waves lambdas, first-class
+# ===================================================================== #
+
+class TestScheduleModel:
+    MODEL = ScheduleModel()
+
+    def test_matches_legacy_waves_formula_homogeneous(self):
+        """waves = ceil(instances / max(1, fleet // n)); turnaround =
+        waves * iter_time — the Fig. 13b lambda, exactly."""
+        groups = _groups((80, 64))
+        for n in (64, 32, 16, 8):
+            for instances in (1, 5, 8):
+                sched = self.MODEL.schedule(
+                    JobSpec(instances=instances, nodes_per_instance=n),
+                    groups, [0.5])
+                concurrent = max(1, 64 // n)
+                waves = -(-instances // concurrent)
+                assert sched.concurrent == concurrent
+                assert sched.waves == waves
+                assert sched.turnaround == waves * 0.5
+
+    def test_max_nodes_caps_fleet(self):
+        """Fig. 15's 64-node DLRM fleet constraint."""
+        groups = _groups((80, 4096))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=8, nodes_per_instance=8, max_nodes=64),
+            groups, [1.0])
+        assert sched.concurrent == 8 and sched.waves == 1
+
+    def test_greedy_balances_two_groups(self):
+        """Earliest-finish greedy: the fast group absorbs more instances."""
+        groups = _groups((80, 32), (560, 32))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=8, nodes_per_instance=16),
+            groups, [1.0, 3.0])
+        by_group = {g.group: g for g in sched.groups}
+        assert by_group[0].instances > by_group[1].instances
+        assert sched.makespan == max(g.finish_time for g in sched.groups)
+
+    def test_em_aware_confines_to_fitting_groups(self):
+        groups = _groups((80, 32), (560, 32))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=8, nodes_per_instance=16),
+            groups, [1.0, 1.0], fits=[False, True], placement=EM_AWARE)
+        assert [g.group for g in sched.groups] == [1]
+        assert sched.feasible
+        paper = self.MODEL.schedule(
+            JobSpec(instances=8, nodes_per_instance=16),
+            groups, [1.0, 1.0], fits=[False, True], placement=PAPER)
+        assert not paper.feasible      # spread over a group that can't host
+
+    def test_max_nodes_budget_goes_to_eligible_groups(self):
+        """An ineligible group must not eat the fleet cap: with the EM
+        pods listed second, the EM-aware schedule still gets the full
+        ``max_nodes`` budget there."""
+        groups = _groups((80, 512), (560, 512))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=8, nodes_per_instance=8, max_nodes=64),
+            groups, [1.0, 1.0], fits=[False, True], placement=EM_AWARE)
+        assert sched.feasible
+        assert sched.concurrent == 8 and sched.waves == 1
+        assert [g.group for g in sched.groups] == [1]
+
+    def test_forced_fallback_respects_max_nodes(self):
+        """An instance wider than the fleet cap cannot be placed even by
+        the one-at-a-time fallback."""
+        sched = self.MODEL.schedule(
+            JobSpec(instances=2, nodes_per_instance=8, max_nodes=4),
+            _groups((80, 64)), [1.0])
+        assert sched.waves == 2 and not sched.feasible
+
+    def test_oversubscribed_instance_is_infeasible(self):
+        """An instance wider than every group gets the legacy one-at-a-time
+        number but cannot actually be placed."""
+        groups = _groups((80, 32), (560, 32))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=2, nodes_per_instance=64), groups, [1.0, 1.0])
+        assert sched.waves == 2 and not sched.feasible
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            JobSpec(instances=0)
+        with pytest.raises(ValueError):
+            JobSpec(nodes_per_instance=-1)
+        with pytest.raises(ValueError, match="per node group"):
+            self.MODEL.schedule(JobSpec(instances=1, nodes_per_instance=1),
+                                _groups((80, 4)), [1.0, 2.0])
+        with pytest.raises(ValueError, match="nodes_per_instance"):
+            self.MODEL.schedule(JobSpec(instances=1), _groups((80, 4)),
+                                [1.0])
+
+    def test_empty_schedule_properties(self):
+        s = Schedule(JobSpec(), (), True)
+        assert s.waves == 0 and s.makespan == 0.0 and s.concurrent == 0
+
+
+class TestStudyNativeScheduling:
+    def test_job_columns_native(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=2, dp=2),
+            job=JobSpec(instances=6, nodes_per_instance=4)))
+        r = res.cells[0].record
+        assert r["concurrent_instances"] == 2       # 8 nodes // 4
+        assert r["waves"] == 3
+        assert r["turnaround"] == pytest.approx(3 * r["total"])
+        assert r["makespan"] == r["turnaround"]
+
+    def test_job_defaults_to_strategy_nodes(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=2, dp=2),
+            job=JobSpec(instances=4)))
+        r = res.cells[0].record
+        assert r["concurrent_instances"] == 2       # 8 // (2*2)
+        assert r["waves"] == 2
+
+    def test_turnaround_axis_name_still_reserved(self, small_cfg):
+        with pytest.raises(ValueError, match="shadow"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      axes=[Axis("turnaround", (1,))])
+
+    def test_placement_axis_sweeps(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster, strategies=ParallelSpec(mp=2, dp=2, pp=2),
+            axes=[placement_axis(("paper", "em-aware"))]))
+        assert res.column("placement") == ["paper", "em-aware"]
+        # Homogeneous cluster: both placements identical physics.
+        a, b = res.cells
+        assert a.record["total"] == b.record["total"]
+
+    def test_unknown_placement_fails_fast(self, small_cfg):
+        with pytest.raises(KeyError, match="unknown placement"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      placement="typo")
+
+    def test_placement_axis_takes_no_apply(self):
+        with pytest.raises(ValueError, match="placement axis"):
+            Axis("placement", ("paper",), kind="placement",
+                 apply=lambda cl, v: cl)
+
+    def test_placement_axis_cannot_shadow_other_engine_columns(
+            self, small_cfg):
+        """Only the 'placement' column is the axis's to write: a placement
+        axis named after any other engine column must fail fast."""
+        with pytest.raises(ValueError, match="shadow"):
+            StudySpec(name="t", model=small_cfg, shape=SMALL_SHAPE,
+                      axes=[placement_axis(("paper",), name="total")])
+
+
+# ===================================================================== #
+# Interleaved pipeline schedule (ROADMAP open item 1)
+# ===================================================================== #
+
+class TestInterleavedSchedule:
+    def test_bubble_matches_analytical_form(self, tcfg):
+        """Interleaved 1F1B bubble == (pp-1) / (v*m + pp-1)
+        (Megatron-LM §2.2.2)."""
+        for pp, m, v in ((2, 4, 2), (4, 8, 2), (8, 8, 4)):
+            wl = decompose(tcfg, SHAPE, mp=8, dp=16, pp=pp,
+                           num_microbatches=m, schedule="interleaved",
+                           virtual_stages=v)
+            br = simulate_iteration(wl, BASELINE_DGX_A100)
+            assert br.bubble_fraction == \
+                pytest.approx((pp - 1) / (v * m + pp - 1))
+
+    def test_interleaving_beats_1f1b_bubble_at_extra_p2p(self, tcfg):
+        wl_1f1b = decompose(tcfg, SHAPE, mp=8, dp=16, pp=8,
+                            num_microbatches=8)
+        wl_int = decompose(tcfg, SHAPE, mp=8, dp=16, pp=8,
+                           num_microbatches=8, schedule="interleaved")
+        a = simulate_iteration(wl_1f1b, BASELINE_DGX_A100)
+        b = simulate_iteration(wl_int, BASELINE_DGX_A100)
+        assert b.bubble_fraction < a.bubble_fraction
+        # v-fold p2p volume on every stage boundary:
+        p2p = lambda wl: sum(e.size_bytes for l in wl.layers  # noqa: E731
+                             for e in l.comm_fwd if e.collective == "p2p")
+        assert p2p(wl_int) == 2 * p2p(wl_1f1b)
+
+    def test_interleaved_stash_exceeds_1f1b(self, tcfg):
+        """Megatron §2.2.2: interleaving pays (1 + (pp-1)/(pp*v)) more
+        activation stash than plain 1F1B."""
+        kw = dict(mp=8, dp=16, pp=4, num_microbatches=8)
+        flat = stage_footprints(decompose(tcfg, SHAPE, **kw))
+        inter = stage_footprints(decompose(tcfg, SHAPE,
+                                           schedule="interleaved", **kw))
+        for a, b in zip(flat, inter):
+            assert b.activation_working == \
+                pytest.approx(a.activation_working * (1 + 3 / 8))
+
+    def test_parallel_spec_knobs(self):
+        s = ParallelSpec(mp=2, dp=2, pp=2, schedule="interleaved",
+                         virtual_stages=3)
+        assert s.label == "MP2_DP2_PP2_INT3"
+        assert ParallelSpec(mp=2, dp=2, pp=2,
+                            schedule="gpipe").label == "MP2_DP2_PP2_GPIPE"
+        # pp == 1 normalizes the pipeline knobs away.
+        flat = ParallelSpec(mp=2, dp=2, schedule="interleaved",
+                            virtual_stages=4)
+        assert flat.schedule == "1f1b" and flat.virtual_stages == 0
+        with pytest.raises(ValueError):
+            ParallelSpec(schedule="zigzag")
+        with pytest.raises(ValueError):
+            decompose(get_config("smollm-135m"), SMALL_SHAPE, pp=2,
+                      schedule="zigzag")
+
+    def test_grid_space_schedules_dedupe(self):
+        specs = GridSpace(mp=(2,), dp=(4,), pp=(1, 2),
+                          schedules=("1f1b", "interleaved"),
+                          fill_cluster=False).specs(0)
+        assert [s.label for s in specs] == \
+            ["MP2_DP4", "MP2_DP4_PP2", "MP2_DP4_PP2_INT2"]
+
+    def test_study_records_resolved_schedule(self, small_cfg, small_cluster):
+        res = run_study(StudySpec(
+            name="t", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster,
+            strategies=ParallelSpec(mp=2, dp=2, pp=2,
+                                    schedule="interleaved")))
+        r = res.cells[0].record
+        assert r["schedule"] == "interleaved" and r["virtual_stages"] == 2
+
+
+# ===================================================================== #
+# dse heterogeneous regressions (satellite 1) + the tentpole demos
+# ===================================================================== #
+
+class TestHeteroDseRegression:
+    def test_dlrm_nodes_per_instance_heterogeneous(self):
+        """`cl.node` raises on >1 node types; the §V-D rule must route
+        through node_groups instead of crashing."""
+        assert dse._dlrm_nodes_per_instance(B_HYBRID_EM) == 64
+        assert dse._dlrm_nodes_per_instance(TABLE_III_CLUSTERS["B1"]) == 16
+        assert dse._dlrm_nodes_per_instance(TABLE_III_CLUSTERS["B2"]) == 8
+
+    def test_cluster_comparison_accepts_cluster_spec(self, tcfg):
+        cmp = dse.cluster_comparison(
+            tcfg, SHAPE, get_dlrm_config(), dlrm_batch=65536,
+            clusters={"b-hybrid-em": B_HYBRID_EM})
+        assert cmp["b-hybrid-em"]["dlrm"] > 0
+        assert cmp["b-hybrid-em"]["transformer-1t"] > 0
+
+
+class TestPlacementStudyDemo:
+    """Acceptance: a partial-EM fleet wins perf-per-dollar under
+    EMAwarePlacement where the PR-2 model wasted partial EM."""
+
+    @pytest.fixture(scope="class")
+    def ranked(self):
+        return dse.placement_ranking(
+            em_pod_fractions=(0.0, 0.5, 1.0),
+            strategies=GridSpace(mp=(4, 8, 16), dp=(16, 32, 128),
+                                 pp=(2, 8)))
+
+    def test_mixed_fleet_tops_perf_per_dollar(self, ranked):
+        top = ranked[0]
+        assert 0.0 < top["em_pod_frac"] < 1.0
+        assert top["placement"] == "em-aware"
+
+    def test_mixed_beats_both_endpoints(self, ranked):
+        def best(frac):
+            return max(r["perf_per_dollar"] for r in ranked
+                       if r["em_pod_frac"] == frac)
+        mixed = best(0.5)
+        assert mixed > best(0.0)
+        assert mixed > best(1.0)
+
+    def test_partial_em_wasted_under_paper_placement(self, ranked):
+        """PR-2 semantics: at 50% EM the paper placement can only run the
+        plain-feasible strategies, so its perf/$ is strictly worse than
+        not buying the EM at all."""
+        paper_mixed = max(r["perf_per_dollar"] for r in ranked
+                          if r["em_pod_frac"] == 0.5
+                          and r["placement"] == "paper")
+        paper_plain = max(r["perf_per_dollar"] for r in ranked
+                          if r["em_pod_frac"] == 0.0
+                          and r["placement"] == "paper")
+        em_mixed = max(r["perf_per_dollar"] for r in ranked
+                       if r["em_pod_frac"] == 0.5
+                       and r["placement"] == "em-aware")
+        assert paper_mixed < paper_plain
+        assert em_mixed > paper_mixed
+
+    def test_multi_tenant_em_aware_unlocks_mixed_fleet(self):
+        res = run_study(dse.multi_tenant_study(
+            nodes_per_instance_opts=(32, 16)))
+        by = {(r["nodes_per_inst"], r["placement"]): r for r in res.records}
+        assert not by[(16, "paper")]["feasible"]
+        assert by[(16, "em-aware")]["feasible"]
+        # EM-aware runs on the EM pods only: half the concurrency.
+        assert by[(16, "em-aware")]["concurrent_instances"] == 2
+        assert by[(16, "em-aware")]["waves"] == 4

@@ -28,6 +28,12 @@ from repro.core.memory import (
     per_node_footprint,
     stage_footprints,
 )
+from repro.core.placement import (
+    EMAwarePlacement,
+    JobSpec,
+    PaperPlacement,
+    ScheduleModel,
+)
 from repro.core.roofline import compute_delay
 from repro.core.workload import decompose
 from repro.parallel.compression import dequantize_int8, quantize_int8
@@ -207,6 +213,50 @@ class TestPpEpDecompositionProperties:
         if schedule == "gpipe":
             assert max(r.activation_working for r in reps) <= \
                 flat.activation_working * (1 + 1e-12)
+
+
+class TestPlacementProperties:
+    """ISSUE 4 satellites: invariants of the placement/scheduling layer."""
+
+    @given(instances=st.integers(1, 64), npi=st.integers(1, 32),
+           nodes_lo=st.integers(1, 256), extra=st.integers(1, 256),
+           t=st.floats(1e-3, 1e3))
+    @settings(max_examples=100, deadline=None)
+    def test_turnaround_monotone_in_concurrency(self, instances, npi,
+                                                nodes_lo, extra, t):
+        """More fleet capacity (hence concurrent instances) never worsens
+        the turnaround of a fixed job."""
+        from repro.core.cluster import NodeGroup, NodeConfig
+        topo = BASELINE_DGX_A100.topology
+        node = NodeConfig("n", 1e12, 80e9, 1e12, 1e6)
+        model = ScheduleModel()
+        job = JobSpec(instances=instances, nodes_per_instance=npi)
+        small = model.schedule(job, [NodeGroup(node, nodes_lo, topo)], [t])
+        big = model.schedule(job,
+                             [NodeGroup(node, nodes_lo + extra, topo)], [t])
+        assert big.concurrent >= small.concurrent
+        assert big.turnaround <= small.turnaround * (1 + 1e-12)
+
+    @given(mp=st.sampled_from([4, 8, 16]),
+           pp=st.sampled_from([2, 4, 8]),
+           m=st.sampled_from([0, 4, 16]))
+    @settings(max_examples=12, deadline=None)
+    def test_em_aware_no_worse_than_paper_on_mixed_fleet(self, mp, pp, m):
+        """On a heterogeneous fleet, EM-aware stage assignment (a) never
+        loses feasibility the paper placement had, and (b) is never slower
+        — in particular on footprint-infeasible cells, where per-stage
+        assignment is what makes the cell run at all."""
+        from repro.core.dse import PLACEMENT_SHAPE, _em_pod_mix
+        cfg = get_config("transformer-1t")
+        half = _em_pod_mix("B0", "B1")(None, 0.5)
+        dp = 1024 // (mp * pp)
+        wl = decompose(cfg, PLACEMENT_SHAPE, mp=mp, dp=dp, pp=pp,
+                       num_microbatches=m or None)
+        paper = simulate_iteration(wl, half, placement=PaperPlacement())
+        aware = simulate_iteration(wl, half, placement=EMAwarePlacement())
+        if paper.feasible:
+            assert aware.feasible
+        assert aware.total <= paper.total * (1 + 1e-12)
 
 
 class TestNumericsProperties:
