@@ -2,9 +2,16 @@
 
 Each ``bench_*`` reproduces one COMET case study through the analytical
 pipeline and prints CSV rows (figure, key, metric, value, paper_claim).
-``python -m benchmarks.run [--only figN] [--processes N]`` — ``--processes``
-fans study cells over a fork pool (§V-E) and, on fig15, also reports the
-measured fork-pool speedup.
+``python -m benchmarks.run [--only figN] [--processes N] [--engine E]`` —
+``--processes`` fans study cells over a fork pool (§V-E) and, on fig15,
+also reports the measured fork-pool speedup; ``--engine compiled`` runs
+every study through the vectorized compiled evaluator (same numbers within
+1e-9, several times faster — docs/perf.md).
+
+``--json PATH`` writes the machine-readable engine perf trajectory (the
+fig15 transformer study timed serial vs compiled vs compiled + fork pool,
+with an equivalence check) instead of the CSV benches; ``--smoke`` shrinks
+it to a small grid for CI.
 
 The §Roofline table from the measured dry-run lives in
 ``benchmarks/roofline_table.py`` (reads experiments/dryrun/*.json).
@@ -13,6 +20,8 @@ The §Roofline table from the measured dry-run lives in
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import time
 from typing import List
 
@@ -28,15 +37,16 @@ from repro.core.workload import decompose
 SHAPE_1T = ShapeConfig("paper", 2048, 1024, "train")
 GB = 1e9
 
-# Set by main() from --processes; every study in this harness runs through
-# _run() so the fork pool applies uniformly.
+# Set by main() from --processes / --engine; every study in this harness
+# runs through _run() so the fork pool and engine apply uniformly.
 PROCESSES = None
+ENGINE = "reference"
 
 Row = tuple
 
 
 def _run(spec):
-    return run_study(spec, processes=PROCESSES)
+    return run_study(spec, processes=PROCESSES, engine=ENGINE)
 
 
 def _rows_fig6() -> List[Row]:
@@ -186,17 +196,18 @@ def _rows_fig15() -> List[Row]:
     when --processes is given)."""
     tcfg = get_config("transformer-1t")
     cmp = dse.cluster_comparison(tcfg, SHAPE_1T, get_dlrm_config(),
-                                 dlrm_batch=65536, processes=PROCESSES)
+                                 dlrm_batch=65536, processes=PROCESSES,
+                                 engine=ENGINE)
     a0 = cmp["A0"]
     rows = []
     if PROCESSES and PROCESSES > 1:
         t_study, _ = dse.cluster_comparison_studies(
             tcfg, SHAPE_1T, get_dlrm_config(), 65536)
         t0 = time.monotonic()
-        run_study(t_study)
+        run_study(t_study, engine=ENGINE)
         t_serial = time.monotonic() - t0
         t0 = time.monotonic()
-        run_study(t_study, processes=PROCESSES)
+        run_study(t_study, processes=PROCESSES, engine=ENGINE)
         t_par = time.monotonic() - t0
         rows.append(("fig15", "engine", "fork_speedup",
                      round(t_serial / t_par, 2),
@@ -225,7 +236,7 @@ def _rows_pp_ep() -> List[Row]:
     product on a bandwidth-starved (A0) and a memory-expanded (B1) cluster
     (ISSUE 3 tentpole: PP stages + EP expert sharding in the default
     workload builder)."""
-    ranked = dse.pp_ep_ranking(processes=PROCESSES)
+    ranked = dse.pp_ep_ranking(processes=PROCESSES, engine=ENGINE)
     rows = []
     for cl in ("A0", "B1"):
         per = [r for r in ranked if r["cluster"] == cl]
@@ -274,7 +285,7 @@ def _rows_placement() -> List[Row]:
     A100+EM fleets — perf-per-TCO-dollar of the best cell per (EM-pod
     fraction, placement), plus the study's wall-clock."""
     t0 = time.monotonic()
-    ranked = dse.placement_ranking(processes=PROCESSES)
+    ranked = dse.placement_ranking(processes=PROCESSES, engine=ENGINE)
     dt = time.monotonic() - t0
     best: dict = {}
     for r in ranked:   # ranked best-first: first hit per key wins
@@ -308,7 +319,7 @@ def _rows_tco() -> List[Row]:
     (§V-D's qualitative perf/$ argument, quantified)."""
     tcfg = get_config("transformer-1t")
     ranked = dse.hetero_cost_ranking(
-        tcfg, SHAPE_1T, processes=PROCESSES,
+        tcfg, SHAPE_1T, processes=PROCESSES, engine=ENGINE,
         em_pod_fractions=(0.0, 0.5, 1.0),
         strategies=[(64, 16), (16, 64), (8, 128)])
     rows = []
@@ -339,14 +350,110 @@ BENCHES = {
 }
 
 
+# --------------------------------------------------------------------- #
+# Engine perf trajectory (--json): fig15 transformer study, reference vs
+# compiled, serial vs fork pool, with a record-equivalence check.  The
+# CI bench smoke runs the --smoke grid and fails if the compiled engine
+# is not at least as fast as the reference on it.
+# --------------------------------------------------------------------- #
+
+SMOKE_CLUSTERS = ("A0", "B0", "B1", "C2")
+
+
+def _max_rel_err(ref, comp) -> float:
+    worst = 0.0
+    for ra, rb in zip(ref.records, comp.records):
+        for k, va in ra.items():
+            vb = rb[k]
+            if isinstance(va, float) and isinstance(vb, float):
+                if not (math.isfinite(va) and math.isfinite(vb)):
+                    # inf/nan must agree exactly (infeasible markers);
+                    # one-sided nan/inf is a divergence, not a skip.
+                    if str(va) != str(vb):
+                        return float("inf")
+                    continue
+                worst = max(worst,
+                            abs(va - vb) / max(abs(va), abs(vb), 1e-30))
+            elif va != vb:
+                raise AssertionError(
+                    f"engines disagree on non-float column {k!r}: "
+                    f"{va!r} vs {vb!r}")
+    return worst
+
+
+def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
+    """Wall-clock the fig15 transformer study through both engines.
+
+    Returns the BENCH_5-format dict: seconds per (engine, processes) leg,
+    derived speedups, and the compiled-vs-reference max relative record
+    error.  ``smoke`` restricts the cluster axis to a 4-entry grid so the
+    CI job finishes in seconds."""
+    from repro.core.cluster import TABLE_III_CLUSTERS
+    tcfg = get_config("transformer-1t")
+    clusters = ({k: TABLE_III_CLUSTERS[k] for k in SMOKE_CLUSTERS}
+                if smoke else None)
+    study, _ = dse.cluster_comparison_studies(
+        tcfg, SHAPE_1T, get_dlrm_config(), 65536, clusters=clusters)
+
+    def best_of(n, **kw):
+        best, result = float("inf"), None
+        for _ in range(n):
+            t0 = time.monotonic()
+            result = run_study(study, **kw)
+            best = min(best, time.monotonic() - t0)
+        return best, result
+
+    run_study(study, engine="compiled")        # warm imports / caches
+    reps = 1 if smoke else 2
+    t_ref, ref = best_of(reps, engine="reference")
+    t_comp, comp = best_of(reps, engine="compiled")
+    t_ref_p, _ = best_of(reps, engine="reference", processes=processes)
+    t_comp_p, comp_p = best_of(reps, engine="compiled", processes=processes)
+    assert comp.records == comp_p.records, \
+        "compiled engine: fork and serial records differ"
+    return {
+        "bench": "fig15-transformer" + ("-smoke" if smoke else ""),
+        "cells": len(ref),
+        "processes": processes,
+        "reference_serial_s": round(t_ref, 3),
+        "compiled_serial_s": round(t_comp, 3),
+        "reference_procs_s": round(t_ref_p, 3),
+        "compiled_procs_s": round(t_comp_p, 3),
+        "compiled_serial_speedup": round(t_ref / t_comp, 2),
+        "compiled_procs_speedup_vs_reference_serial":
+            round(t_ref / t_comp_p, 2),
+        "compiled_procs_speedup_vs_reference_procs":
+            round(t_ref_p / t_comp_p, 2),
+        "max_rel_err": _max_rel_err(ref, comp),
+    }
+
+
 def main() -> None:
-    global PROCESSES
+    global PROCESSES, ENGINE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--processes", type=int, default=None,
                     help="fan study cells over a fork pool (POSIX)")
+    ap.add_argument("--engine", default="reference",
+                    choices=("reference", "compiled"),
+                    help="study evaluator for every bench (docs/perf.md)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the engine perf trajectory (fig15 serial "
+                         "vs compiled vs compiled+fork) to PATH and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --json: small 4-cluster grid for CI")
     args = ap.parse_args()
     PROCESSES = args.processes
+    ENGINE = args.engine
+    if args.json:
+        out = perf_trajectory(processes=args.processes or 8,
+                              smoke=args.smoke)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        for k, v in out.items():
+            print(f"{k}: {v}")
+        return
     print("figure,key,metric,value,paper_claim,bench_ms")
     for name, fn in BENCHES.items():
         if args.only and args.only != name:

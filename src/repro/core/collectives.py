@@ -78,3 +78,34 @@ class CollectiveModel:
                            pp=self.pp, ep=self.ep)
         return time_fn(collective, size, scope, self.mp, self.dp,
                        pp=self.pp, ep=self.ep, placement=self.placement)
+
+    def time_batch(self, collectives, sizes, scopes) -> "np.ndarray":
+        """Times for a whole event table at once (compiled study engine).
+
+        ``collectives`` / ``sizes`` / ``scopes`` are parallel sequences —
+        one entry per communication event.  Events are grouped by
+        (collective, scope) and dispatched to the topology's
+        ``collective_time_batch`` (one vectorized call per group); a
+        downstream family without the batched method falls back to
+        per-event :meth:`time` calls, so correctness never depends on it.
+        """
+        import numpy as np
+        out = np.zeros(len(sizes))
+        if not len(sizes):
+            return out
+        sizes = np.asarray(sizes, dtype=float)
+        groups: "dict[tuple, list]" = {}
+        for i, (c, s) in enumerate(zip(collectives, scopes)):
+            groups.setdefault((c, s), []).append(i)
+        batch_fn = getattr(self.topo, "collective_time_batch", None)
+        for (c, scope), idx in groups.items():
+            if _group_size(scope, self.mp, self.dp, self.pp, self.ep) <= 1:
+                continue                       # stays 0.0, as in time()
+            if batch_fn is not None:
+                out[idx] = batch_fn(c, sizes[idx], scope, self.mp, self.dp,
+                                    pp=self.pp, ep=self.ep,
+                                    placement=self.placement)
+            else:
+                out[idx] = [self.time(c, float(s), scope)
+                            for s in sizes[idx]]
+        return out

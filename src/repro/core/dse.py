@@ -345,10 +345,11 @@ def hetero_cost_study(
 
 def hetero_cost_ranking(cfg: ModelConfig, shape: ShapeConfig,
                         processes: Optional[int] = None,
+                        engine: str = "reference",
                         **kwargs) -> List[Dict[str, float]]:
     """Feasible (em_pod_frac, strategy) cells, best perf-per-dollar first."""
     res: StudyResult = run_study(hetero_cost_study(cfg, shape, **kwargs),
-                                 processes=processes)
+                                 processes=processes, engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["perf_per_dollar"], reverse=True)
 
@@ -393,10 +394,12 @@ def pp_ep_study(
 
 
 def pp_ep_ranking(processes: Optional[int] = None,
+                  engine: str = "reference",
                   **kwargs) -> List[Dict[str, float]]:
     """Feasible four-axis cells, fastest first (per-cluster ranking is a
     ``select(cluster=...)`` away)."""
-    res = run_study(pp_ep_study(**kwargs), processes=processes)
+    res = run_study(pp_ep_study(**kwargs), processes=processes,
+                    engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["total"])
 
@@ -460,18 +463,20 @@ def cluster_comparison(
     dlrm_batch: int = 4096,
     clusters: Optional[Dict[str, ClusterLike]] = None,
     processes: Optional[int] = None,
+    engine: str = "reference",
 ) -> Dict[str, Dict[str, float]]:
     """runtime[cluster][workload] for Transformer-1T + 8 DLRM instances.
 
     Transformer: best feasible (MP, DP) per cluster (capacity-constrained;
     heterogeneous specs gate on the least-capable group).
     DLRM: nodes-per-instance per the paper (mem0: 64, mem1: 16, mem2: 8).
-    ``processes`` fans study cells over a fork pool (§V-E)."""
+    ``processes`` fans study cells over a fork pool (§V-E); ``engine``
+    selects the evaluator (``"compiled"`` for the vectorized fast path)."""
     clusters = clusters or TABLE_III_CLUSTERS
     t_study, d_study = cluster_comparison_studies(
         transformer_cfg, transformer_shape, dlrm_cfg, dlrm_batch, clusters)
-    t_res = run_study(t_study, processes=processes)
-    d_res = run_study(d_study, processes=processes)
+    t_res = run_study(t_study, processes=processes, engine=engine)
+    d_res = run_study(d_study, processes=processes, engine=engine)
     out: Dict[str, Dict[str, float]] = {}
     for name, cl in clusters.items():
         per = t_res.select(cluster=name)
@@ -535,10 +540,12 @@ def placement_study(
 
 
 def placement_ranking(processes: Optional[int] = None,
+                      engine: str = "reference",
                       **kwargs) -> List[Dict[str, float]]:
     """Feasible (em_pod_frac, placement, strategy) cells, best
     perf-per-dollar first."""
-    res = run_study(placement_study(**kwargs), processes=processes)
+    res = run_study(placement_study(**kwargs), processes=processes,
+                    engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["perf_per_dollar"],
                   reverse=True)
@@ -599,8 +606,10 @@ def multi_tenant_study(
 
 
 def multi_tenant_ranking(processes: Optional[int] = None,
+                         engine: str = "reference",
                          **kwargs) -> List[Dict[str, float]]:
     """Feasible (nodes_per_inst, placement) cells, best turnaround first."""
-    res = run_study(multi_tenant_study(**kwargs), processes=processes)
+    res = run_study(multi_tenant_study(**kwargs), processes=processes,
+                    engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["turnaround"])

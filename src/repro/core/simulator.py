@@ -277,13 +277,8 @@ def _optimizer_time(layers: List[LayerSpec], dense_ways: int,
                    if l.optim_bytes is None)
     sparse = sum(l.optim_bytes * l.repeat for l in layers
                  if l.optim_bytes is not None)
-    params = dense_w / 2
-    shard = params / max(1, dense_ways) if zero_stage >= 1 else params
-    if expert_w:
-        ep_params = expert_w / 2
-        shard += (ep_params / max(1, expert_ways) if zero_stage >= 1
-                  else ep_params)
-    return (shard * OPTIM_BYTES_PER_PARAM + sparse) / mem_bw
+    return _optimizer_numer(dense_w, expert_w, sparse, dense_ways,
+                            expert_ways, zero_stage) / mem_bw
 
 
 def _schedule_factors(schedule: str, pp: int, m: int,
@@ -294,6 +289,21 @@ def _schedule_factors(schedule: str, pp: int, m: int,
     shrinks v-fold to (pp - 1)/(v*m + pp - 1)."""
     slots = v * m if schedule == "interleaved" else m
     return (slots + pp - 1) / slots, (pp - 1) / (slots + pp - 1)
+
+
+def _optimizer_numer(dense_w: float, expert_w: float, sparse: float,
+                     dense_ways: int, expert_ways: int,
+                     zero_stage: int) -> float:
+    """Optimizer-update bytes before the ``/ mem_bw`` division — the
+    environment-independent half of :func:`_optimizer_time`, shared with
+    the compiled path so the two cannot drift."""
+    params = dense_w / 2
+    shard = params / max(1, dense_ways) if zero_stage >= 1 else params
+    if expert_w:
+        ep_params = expert_w / 2
+        shard += (ep_params / max(1, expert_ways) if zero_stage >= 1
+                  else ep_params)
+    return shard * OPTIM_BYTES_PER_PARAM + sparse
 
 
 def _simulate_group(
@@ -386,3 +396,301 @@ def _simulate_pipeline(
                               wg.scaled(scale), optim, worst_rep,
                               mem_bws[k], feasible,
                               bubble_fraction=bubble)
+
+
+# --------------------------------------------------------------------- #
+# Compiled (vectorized) evaluation — phase 2 of the two-phase engine
+# --------------------------------------------------------------------- #
+# Phase 1 (repro.core.compiled) lowers a decomposed Workload into flat
+# arrays once per strategy; the functions below time that CompiledWorkload
+# against a whole batch of (node, topology) environments in NumPy array
+# ops, reproducing _simulate_group / simulate_iteration within float
+# round-off (<= 1e-9 relative, tests/test_compiled.py).  The event-loop
+# path above stays untouched as the bit-for-bit reference engine.
+
+def _compiled_delays(stage, nodes, mem_bw) -> "np.ndarray":
+    """Roofline compute delays, ``(n_lp, nenv)``: Eqns (1)/(2) over every
+    (layer, phase) row and environment at once."""
+    import numpy as np
+
+    from repro.core.compiled import stage_traffic
+    sram = np.array([max(int(n.sram_bytes), 1) for n in nodes], dtype=float)
+    peak = np.array([n.peak_flops for n in nodes], dtype=float)
+    traffic = stage_traffic(stage, sram)
+    flops = stage.flops[:, None]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        oi = flops / traffic                       # inf when traffic == 0
+        perf = np.minimum(peak[None, :], oi * mem_bw[None, :])
+        delays = flops / perf
+    zero_flop = stage.flops == 0
+    if zero_flop.any():
+        # Pure data movement (embedding lookups): memory-bound transfer.
+        t = traffic[zero_flop]
+        delays[zero_flop] = np.where(t > 0, t / mem_bw[None, :], 0.0)
+    return delays
+
+
+def _compiled_comm(stage, envs, mp: int, dp: int, pp: int, ep: int,
+                   placement) -> "np.ndarray":
+    """Collective durations, ``(ncomm, nenv)``: one batched
+    CollectiveModel.time_batch call per distinct topology in the batch."""
+    import numpy as np
+    nenv = len(envs)
+    durations = np.zeros((len(stage.comm_kinds), nenv))
+    if not stage.comm_kinds:
+        return durations
+    columns = {}
+    for e, (_, topo) in enumerate(envs):
+        if topo not in columns:
+            coll = CollectiveModel(topo, mp, dp, pp=pp, ep=ep,
+                                   placement=placement)
+            columns[topo] = coll.time_batch(stage.comm_kinds,
+                                            stage.comm_sizes,
+                                            stage.comm_scopes)
+        durations[:, e] = columns[topo]
+    return durations
+
+
+def _compiled_scan(stage, delays, comm):
+    """The ASTRA-lite timeline (:func:`_run_timeline`) vectorized across
+    environments: compute totals are a counts x delays product; exposure
+    comes from walking the communication events once, with the compute
+    runs between events collapsed to cumulative-sum differences.
+
+    Returns ``(compute, exposed)``, each ``(3, nenv)`` (fp/ig/wg rows)."""
+    import numpy as np
+    nenv = delays.shape[1]
+    compute = stage.counts @ delays
+    exposed = np.zeros((3, nenv))
+    for is_bwd, p in ((False, stage.fwd), (True, stage.bwd)):
+        dseq = delays[p.seq]
+        csum = np.zeros((dseq.shape[0] + 1, nenv))
+        np.cumsum(dseq, axis=0, out=csum[1:])
+        tc = np.zeros(nenv)
+        tn = np.zeros((len(_SCOPES), nenv))
+        prev = 0
+        for j in range(p.ev_comm.size):
+            pos = p.ev_pos[j]
+            if pos != prev:
+                tc = tc + (csum[pos] - csum[prev])
+                prev = pos
+            dur = comm[p.ev_comm[j]]
+            sc = p.ev_scope[j]
+            start = np.maximum(tc, tn[sc])
+            if p.ev_blocking[j]:
+                end = start + dur
+                exposed[p.ev_phase[j]] += end - tc
+                tc = end
+                tn[sc] = end
+            else:
+                tn[sc] = start + dur
+        tc = tc + (csum[-1] - csum[prev])
+        if is_bwd:
+            # Non-blocking residue past the end of backward compute.
+            exposed[2] += np.maximum(0.0, tn.max(axis=0) - tc)
+    return compute, exposed
+
+
+def _compiled_mem_bws(nodes, total: float, mem_bw_override) -> "np.ndarray":
+    import numpy as np
+    return np.array([n.local_bw if mem_bw_override == "local"
+                     else mem_bw_override if mem_bw_override is not None
+                     else effective_memory_bw(n, total) for n in nodes])
+
+
+def _time_compiled_flat(cw, envs, zero_stage, mem_bw_override, require_fit,
+                        placement) -> List[IterationBreakdown]:
+    wl = cw.workload
+    stage = cw.stages[0]
+    nodes = [n for n, _ in envs]
+    rep0 = per_node_footprint(wl, None, zero_stage)
+    total = rep0.total
+    reps = [dataclasses.replace(rep0,
+                                fits_local=total <= n.local_cap,
+                                fits_total=total <= n.total_cap)
+            for n in nodes]
+    mem_bw = _compiled_mem_bws(nodes, total, mem_bw_override)
+    ep = getattr(wl, "ep", 1)
+    delays = _compiled_delays(stage, nodes, mem_bw)
+    comm = _compiled_comm(stage, envs, wl.mp, wl.dp, 1, ep, placement)
+    compute, exposed = _compiled_scan(stage, delays, comm)
+    numer = _optimizer_numer(stage.dense_w, stage.expert_w, stage.sparse,
+                             wl.dp * ep, wl.dp, zero_stage)
+    out = []
+    for e in range(len(nodes)):
+        if require_fit and not reps[e].fits_total:
+            out.append(_infeasible(reps[e], float(mem_bw[e])))
+            continue
+        out.append(IterationBreakdown(
+            PhaseBreakdown(float(compute[0, e]), float(exposed[0, e])),
+            PhaseBreakdown(float(compute[1, e]), float(exposed[1, e])),
+            PhaseBreakdown(float(compute[2, e]), float(exposed[2, e])),
+            numer / float(mem_bw[e]), reps[e], float(mem_bw[e]),
+            reps[e].fits_total))
+    return out
+
+
+def _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
+                            require_fit, placement) -> List[IterationBreakdown]:
+    import numpy as np
+    wl = cw.workload
+    pp = wl.pp
+    m = max(1, wl.num_microbatches)
+    v = max(1, getattr(wl, "virtual_stages", 1))
+    nodes = [n for n, _ in envs]
+    nenv = len(envs)
+    reps0 = stage_footprints(wl, None, zero_stage)
+    # worst_report picks the first maximal total; totals are
+    # environment-independent, so the gating report row is too.
+    k0 = max(range(pp), key=lambda s: reps0[s].total)
+    fits_local = [all(r.total <= n.local_cap for r in reps0) for n in nodes]
+    fits_total = [all(r.total <= n.total_cap for r in reps0) for n in nodes]
+    mem_bws = np.stack([_compiled_mem_bws(nodes, r.total, mem_bw_override)
+                        for r in reps0])                      # (pp, nenv)
+    scale, bubble = _schedule_factors(wl.schedule, pp, m, v)
+    data_ways = wl.dp * wl.ep
+    computes, exposeds = [], []
+    totals = np.zeros((pp, nenv))
+    numers = np.zeros(pp)
+    for s, stage in enumerate(cw.stages):
+        delays = _compiled_delays(stage, nodes, mem_bws[s])
+        comm = _compiled_comm(stage, envs, wl.mp, wl.dp, pp, wl.ep,
+                              placement)
+        compute, exposed = _compiled_scan(stage, delays, comm)
+        computes.append(compute)
+        exposeds.append(exposed)
+        totals[s] = compute.sum(axis=0) + exposed.sum(axis=0)
+        numers[s] = _optimizer_numer(stage.dense_w, stage.expert_w,
+                                     stage.sparse, data_ways, wl.dp,
+                                     zero_stage)
+    gating = np.argmax(totals, axis=0)           # first max, like max(key=)
+    optim = np.max(numers[:, None] / mem_bws, axis=0)
+    out = []
+    for e in range(nenv):
+        rep = dataclasses.replace(reps0[k0], fits_local=fits_local[e],
+                                  fits_total=fits_total[e])
+        if require_fit and not fits_total[e]:
+            out.append(_infeasible(rep, float(mem_bws[:, e].min()),
+                                   bubble_fraction=bubble))
+            continue
+        k = int(gating[e])
+        fp = PhaseBreakdown(float(computes[k][0, e]),
+                            float(exposeds[k][0, e])).scaled(scale)
+        ig = PhaseBreakdown(float(computes[k][1, e]),
+                            float(exposeds[k][1, e])).scaled(scale)
+        wg = PhaseBreakdown(float(computes[k][2, e]),
+                            float(exposeds[k][2, e])).scaled(scale)
+        out.append(IterationBreakdown(fp, ig, wg, float(optim[e]), rep,
+                                      float(mem_bws[k, e]), fits_total[e],
+                                      bubble_fraction=bubble))
+    return out
+
+
+def time_compiled(
+    cw,
+    envs: "List[Tuple[NodeConfig, Topology]]",
+    zero_stage: int = 2,
+    mem_bw_override: "Optional[float | str]" = None,
+    require_fit: bool = False,
+    placement=None,
+) -> List[IterationBreakdown]:
+    """Time one :class:`~repro.core.compiled.CompiledWorkload` on a batch
+    of (node, topology) environments at once.
+
+    Semantically one :func:`_simulate_group` call per environment — same
+    roofline, collective, timeline, optimizer and footprint models — but
+    the per-environment work is NumPy array ops over the pre-lowered
+    arrays, so a batch costs barely more than a single cell.  Results
+    match the reference event loop within 1e-9 relative."""
+    if not envs:
+        return []
+    if getattr(cw.workload, "pp", 1) > 1:
+        return _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
+                                       require_fit, placement)
+    return _time_compiled_flat(cw, envs, zero_stage, mem_bw_override,
+                               require_fit, placement)
+
+
+def _env_breakdowns(cw, envs, zero_stage, mem_bw_override, require_fit,
+                    placement, env_cache) -> List[IterationBreakdown]:
+    """Per-environment breakdowns through the optional cross-cell cache
+    (key: placement x environment x require_fit; the study engine prefills
+    it with one big batch per strategy group)."""
+    if env_cache is None:
+        return time_compiled(cw, envs, zero_stage, mem_bw_override,
+                             require_fit, placement)
+    missing = [env for env in dict.fromkeys(envs)
+               if (placement, env, require_fit) not in env_cache]
+    if missing:
+        for env, br in zip(missing,
+                           time_compiled(cw, missing, zero_stage,
+                                         mem_bw_override, require_fit,
+                                         placement)):
+            env_cache[(placement, env, require_fit)] = br
+    return [env_cache[(placement, env, require_fit)] for env in envs]
+
+
+def compiled_delegates_to_reference(workload: Workload,
+                                    cluster: ClusterLike,
+                                    placement) -> bool:
+    """True when a cell must run on the reference event loop instead of
+    the vectorized path: a mixed fleet + ``pp > 1`` + an explicit
+    placement may assign pipeline stages to *different* node groups
+    (``Placement.assign_stages``), which the batch evaluator does not
+    model.  Shared by :func:`simulate_iteration_compiled` and the study
+    engine's batch prefetch so the two cannot drift."""
+    return len(cluster.node_groups) > 1 and placement is not None \
+        and getattr(workload, "pp", 1) > 1
+
+
+def simulate_iteration_compiled(
+    cw,
+    cluster: ClusterLike,
+    zero_stage: int = 2,
+    mem_bw_override: "Optional[float | str]" = None,
+    require_fit: bool = False,
+    placement=None,
+    env_cache: "Optional[dict]" = None,
+) -> IterationBreakdown:
+    """:func:`simulate_iteration` over a pre-lowered workload.
+
+    Single-group clusters and heterogeneous flat / replicate-everywhere
+    cells run vectorized; the placement-assigned pipeline path
+    (:func:`compiled_delegates_to_reference`) delegates to the reference
+    event loop, which is bit-for-bit by construction."""
+    groups = cluster.node_groups
+    wl = cw.workload
+    if compiled_delegates_to_reference(wl, cluster, placement):
+        return simulate_iteration(wl, cluster, zero_stage, mem_bw_override,
+                                  require_fit, placement)
+    per = _env_breakdowns(cw, [(g.node, g.topology) for g in groups],
+                          zero_stage, mem_bw_override, require_fit,
+                          placement, env_cache)
+    if len(per) == 1:
+        return per[0]
+    worst_rep = worst_report([b.footprint for b in per])
+    feasible = all(b.feasible for b in per)
+    if require_fit and not feasible:
+        return _infeasible(worst_rep, min(b.mem_bw for b in per),
+                           bubble_fraction=max(b.bubble_fraction
+                                               for b in per))
+    worst = max(per, key=lambda b: b.total)
+    return IterationBreakdown(worst.fp, worst.ig, worst.wg, worst.optimizer,
+                              worst_rep, worst.mem_bw, feasible,
+                              bubble_fraction=worst.bubble_fraction)
+
+
+def group_breakdowns_compiled(
+    cw,
+    cluster: ClusterLike,
+    zero_stage: int = 2,
+    mem_bw_override: "Optional[float | str]" = None,
+    placement=None,
+    env_cache: "Optional[dict]" = None,
+) -> List[IterationBreakdown]:
+    """:func:`group_breakdowns` over a pre-lowered workload (the
+    multi-tenant ScheduleModel's per-group instance timings)."""
+    return _env_breakdowns(cw, [(g.node, g.topology)
+                                for g in cluster.node_groups],
+                           zero_stage, mem_bw_override, False, placement,
+                           env_cache)

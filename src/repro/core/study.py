@@ -546,11 +546,13 @@ _DEFAULT_SCHEDULER = ScheduleModel()
 
 def _job_columns(spec: StudySpec, ctx: StudyContext,
                  record: Dict[str, Any], sim_memo: dict,
-                 skey: tuple) -> None:
+                 skey: tuple, group_sim=None) -> None:
     """Schedule ``spec.job``'s instances over the cell's node groups and
     attach the multi-tenant columns (Fig. 13b / Fig. 15 metrics).  The
     per-group breakdowns are memoized alongside the simulator calls (the
-    same physics repeats across placement/job-only axis values)."""
+    same physics repeats across placement/job-only axis values).
+    ``group_sim`` is the per-group evaluator — :func:`group_breakdowns`
+    for the reference engine, its compiled twin otherwise."""
     job = spec.job(ctx) if callable(spec.job) else spec.job
     if job.nodes_per_instance == 0:
         if ctx.strategy is None:
@@ -559,9 +561,11 @@ def _job_columns(spec: StudySpec, ctx: StudyContext,
                 "the study has no strategy to derive it from")
         job = dataclasses.replace(job,
                                   nodes_per_instance=ctx.strategy.num_nodes)
+    if group_sim is None:
+        group_sim = group_breakdowns
     gkey = ("groups",) + skey
     if gkey not in sim_memo:
-        sim_memo[gkey] = group_breakdowns(
+        sim_memo[gkey] = group_sim(
             ctx.workload, ctx.cluster,
             zero_stage=(ctx.strategy.zero_stage
                         if ctx.strategy is not None else DEFAULT_ZERO_STAGE),
@@ -585,7 +589,14 @@ def _job_columns(spec: StudySpec, ctx: StudyContext,
 def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
                point: Dict[str, Any], cluster: ClusterLike,
                placement: Optional[Placement],
-               wl_memo: dict, sim_memo: dict) -> CellResult:
+               wl_memo: dict, sim_memo: dict,
+               simulate=None, group_sim=None) -> CellResult:
+    # None -> the module-level reference evaluators, resolved at call time
+    # so tests patching study.simulate_iteration keep intercepting them.
+    if simulate is None:
+        simulate = simulate_iteration
+    if group_sim is None:
+        group_sim = group_breakdowns
     ctx = StudyContext(spec=spec, strategy=strategy, point=dict(point),
                        cluster=cluster, placement=placement)
     base: Dict[str, Any] = {"study": spec.name}
@@ -662,7 +673,7 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
         sim_cluster = dataclasses.replace(cluster, cost=None)
     skey = (wkey, sim_cluster, zero, override, spec.require_fit, placement)
     if skey not in sim_memo:
-        sim_memo[skey] = simulate_iteration(
+        sim_memo[skey] = simulate(
             ctx.workload, cluster, zero_stage=zero,
             mem_bw_override=override, require_fit=spec.require_fit,
             placement=placement)
@@ -676,61 +687,208 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
               "mem_bw": br.mem_bw,
               "bubble_fraction": br.bubble_fraction}
     if spec.job is not None:
-        _job_columns(spec, ctx, record, sim_memo, skey)
+        _job_columns(spec, ctx, record, sim_memo, skey, group_sim=group_sim)
     _cost_columns(record, cluster)
     for mname, fn in spec.metrics.items():
         record[mname] = fn(ctx)
     return CellResult(strategy, ctx.point, cluster, br, br.footprint, record)
 
 
+# --- engines ----------------------------------------------------------- #
+
+ENGINES = ("reference", "compiled")
+
+
+def _run_cells(spec: StudySpec, cells: List[tuple],
+               engine: str) -> List[CellResult]:
+    """Evaluate ``cells`` in order with fresh memo dicts.
+
+    The memos live here — never in module globals — so an exception
+    anywhere (a raising metric fn, an infeasible builder) cannot leave
+    state behind that poisons a later run (serial or forked)."""
+    wl_memo: dict = {}
+    sim_memo: dict = {}
+    if engine == "compiled":
+        return _run_cells_compiled(spec, cells, wl_memo, sim_memo)
+    return [_eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo)
+            for s, p, cl, pl in cells]
+
+
+def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
+                        wl_memo: dict, sim_memo: dict) -> List[CellResult]:
+    """Strategy-major compiled evaluation.
+
+    Cells are grouped by workload key; each group resolves and lowers its
+    decomposition exactly once (``Workload.compiled()``), prefetches every
+    (placement, environment) this group's cells will need through *one*
+    vectorized :func:`repro.core.simulator.time_compiled` batch, then
+    assembles records through the same :func:`_eval_cell` path as the
+    reference engine — only the simulate callables differ, so the record
+    schema and every non-timing column are identical by construction."""
+    from repro.core.simulator import (
+        compiled_delegates_to_reference,
+        group_breakdowns_compiled,
+        simulate_iteration_compiled,
+        time_compiled,
+    )
+    results: List[Optional[CellResult]] = [None] * len(cells)
+    groups: Dict[tuple, List[int]] = {}
+    for i, (s, p, _, _) in enumerate(cells):
+        groups.setdefault(_workload_key(spec, s, p), []).append(i)
+    for wkey, idxs in groups.items():
+        s0, p0, cl0, pl0 = cells[idxs[0]]
+        simulate = group_sim = None          # reference fallbacks
+        if spec.evaluate is None:
+            if wkey not in wl_memo:
+                ctx0 = StudyContext(spec=spec, strategy=s0,
+                                    point=dict(p0), cluster=cl0,
+                                    placement=pl0)
+                try:
+                    wl_memo[wkey] = (spec.workload
+                                     or _default_workload)(ctx0)
+                except InfeasibleStrategyError as err:
+                    wl_memo[wkey] = err
+            wl = wl_memo[wkey]
+            if not isinstance(wl, InfeasibleStrategyError):
+                cw = wl.compiled()
+                zero = (s0.zero_stage if s0 is not None
+                        else DEFAULT_ZERO_STAGE)
+                env_cache: dict = {}
+                # Prefetch: one batched evaluation per (placement,
+                # require_fit) over every environment the group's cells
+                # touch.  Cells on the reference-fallback path (mixed
+                # fleet + pipeline + explicit placement) are skipped —
+                # simulate_iteration_compiled delegates those wholesale.
+                want: Dict[tuple, List[tuple]] = {}
+                for i in idxs:
+                    _, _, cl, pl = cells[i]
+                    if cl is None:
+                        continue
+                    if compiled_delegates_to_reference(wl, cl, pl):
+                        continue
+                    for g in cl.node_groups:
+                        env = (g.node, g.topology)
+                        want.setdefault((pl, spec.require_fit),
+                                        []).append(env)
+                        if spec.job is not None and spec.require_fit:
+                            want.setdefault((pl, False), []).append(env)
+                for (pl, rf), envs in want.items():
+                    batch = [env for env in dict.fromkeys(envs)
+                             if (pl, env, rf) not in env_cache]
+                    for env, br in zip(batch,
+                                       time_compiled(cw, batch, zero,
+                                                     spec.mem_bw_override,
+                                                     rf, pl)):
+                        env_cache[(pl, env, rf)] = br
+
+                def simulate(workload, cluster, zero_stage=2,
+                             mem_bw_override=None, require_fit=False,
+                             placement=None, _cw=cw, _cache=env_cache):
+                    return simulate_iteration_compiled(
+                        _cw, cluster, zero_stage, mem_bw_override,
+                        require_fit, placement, env_cache=_cache)
+
+                def group_sim(workload, cluster, zero_stage=2,
+                              mem_bw_override=None, placement=None,
+                              _cw=cw, _cache=env_cache):
+                    return group_breakdowns_compiled(
+                        _cw, cluster, zero_stage, mem_bw_override,
+                        placement, env_cache=_cache)
+        for i in idxs:
+            s, p, cl, pl = cells[i]
+            results[i] = _eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo,
+                                    simulate=simulate, group_sim=group_sim)
+    return results
+
+
 # --- optional process-parallel execution ------------------------------- #
 # Cells are embarrassingly parallel (§V-E). Closures in specs don't pickle,
-# so the spec travels to fork()ed workers via this module global and only
-# cell indices cross the pipe. The memo dicts are per-worker-process: each
-# fork inherits them empty and fills its own copy, so a worker still
-# decomposes each strategy once across the cells it is handed.
-_FORK_SPEC: Optional[StudySpec] = None
-_FORK_CELLS: List[tuple] = []
-_FORK_WL_MEMO: dict = {}
-_FORK_SIM_MEMO: dict = {}
+# so the spec travels to fork()ed workers via one module global and only
+# chunk indices cross the pipe.  Dispatch is strategy-major: one chunk per
+# workload key, so every strategy is decomposed (and compiled) exactly once
+# process-wide — pool.map's default interleaving used to hand the same
+# strategy to several workers and capped fig15 fork scaling at ~1.25x.
+# Worker memos are plain locals inside _run_cells (nothing to poison if a
+# chunk raises); _FORK_STATE is reset in a finally.
+_FORK_STATE: Optional[tuple] = None     # (spec, cells, chunks, engine)
 
 
-def _eval_cell_by_index(i: int) -> CellResult:
-    strategy, point, cluster, placement = _FORK_CELLS[i]
-    return _eval_cell(_FORK_SPEC, strategy, point, cluster, placement,
-                      _FORK_WL_MEMO, _FORK_SIM_MEMO)
+def _strategy_chunks(spec: StudySpec, cells: List[tuple],
+                     processes: int) -> List[List[int]]:
+    """Cell indices grouped by workload key.  When there are fewer groups
+    than workers, the biggest groups split in half (each sub-chunk then
+    re-decomposes once — still never per cell) until every worker has
+    something to do."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, (s, p, _, _) in enumerate(cells):
+        groups.setdefault(_workload_key(spec, s, p), []).append(i)
+    chunks = list(groups.values())
+    while chunks and len(chunks) < processes:
+        big = max(range(len(chunks)), key=lambda c: len(chunks[c]))
+        if len(chunks[big]) <= 1:
+            break
+        mid = len(chunks[big]) // 2
+        chunks.append(chunks[big][mid:])
+        chunks[big] = chunks[big][:mid]
+    return chunks
 
 
-def run_study(spec: StudySpec, processes: Optional[int] = None) -> "StudyResult":
+def _eval_chunk(ci: int) -> "Tuple[List[int], List[CellResult]]":
+    spec, cells, chunks, engine = _FORK_STATE
+    idxs = chunks[ci]
+    return idxs, _run_cells(spec, [cells[i] for i in idxs], engine)
+
+
+def run_study(spec: StudySpec, processes: Optional[int] = None,
+              engine: str = "reference") -> "StudyResult":
     """Evaluate every cell of ``spec``; memoizes workload decompositions
     (keyed by strategy + ``workload_deps``) and simulator calls (keyed by
     workload + overridden cluster + ZeRO stage + bandwidth override).
 
+    ``engine`` selects the evaluator:
+
+    * ``"reference"`` (default) — the event-loop simulator, bit-for-bit
+      the historical behavior;
+    * ``"compiled"`` — each decomposition is lowered once to flat NumPy
+      arrays (:mod:`repro.core.compiled`) and timed against whole batches
+      of cluster cells in array ops
+      (:func:`repro.core.simulator.time_compiled`).  Records match the
+      reference within 1e-9 relative (tests/test_compiled.py) at a
+      multiple of the throughput — see docs/perf.md.
+
     ``processes > 1`` fans cells out over a fork()-based process pool
-    (POSIX only; falls back to serial elsewhere)."""
-    global _FORK_SPEC, _FORK_CELLS
+    (POSIX only; falls back to serial elsewhere).  Dispatch is
+    strategy-major: one chunk per workload key via ``imap_unordered``,
+    results reassembled into cell order, so parallel and serial runs
+    return identical records."""
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    global _FORK_STATE
     cells = _cells(spec)
     if processes and processes > 1 and hasattr(os, "fork") \
-            and _FORK_SPEC is None:
-        # The globals make the fork path non-reentrant; a nested or
+            and _FORK_STATE is None:
+        # The global makes the fork path non-reentrant; a nested or
         # concurrent parallel run_study falls back to serial instead of
         # clobbering the in-flight study's state.
         import multiprocessing
-        _FORK_SPEC, _FORK_CELLS = spec, cells
-        _FORK_WL_MEMO.clear()
-        _FORK_SIM_MEMO.clear()
+        chunks = _strategy_chunks(spec, cells, processes)
+        # Workers beyond the chunk count or the core count only add fork
+        # and scheduling overhead to a CPU-bound pool, so cap at both.
+        workers = min(processes, len(chunks) or 1,
+                      multiprocessing.cpu_count())
+        _FORK_STATE = (spec, cells, chunks, engine)
         try:
             ctx = multiprocessing.get_context("fork")
-            with ctx.Pool(processes=min(processes, len(cells) or 1)) as pool:
-                results = pool.map(_eval_cell_by_index, range(len(cells)))
+            with ctx.Pool(processes=max(1, workers)) as pool:
+                results: List[Optional[CellResult]] = [None] * len(cells)
+                for idxs, rs in pool.imap_unordered(_eval_chunk,
+                                                    range(len(chunks))):
+                    for i, r in zip(idxs, rs):
+                        results[i] = r
             return StudyResult(spec=spec, cells=results)
         finally:
-            _FORK_SPEC, _FORK_CELLS = None, []
-    wl_memo: dict = {}
-    sim_memo: dict = {}
-    results = [_eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo)
-               for s, p, cl, pl in cells]
-    return StudyResult(spec=spec, cells=results)
+            _FORK_STATE = None
+    return StudyResult(spec=spec, cells=_run_cells(spec, cells, engine))
 
 
 # ===================================================================== #

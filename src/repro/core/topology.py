@@ -23,8 +23,11 @@ member of the group (the usual symmetric-collective convention).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Protocol, Tuple, runtime_checkable
+
+import numpy as np
 
 # --------------------------------------------------------------------- #
 # Ring / all-to-all primitives (shared by every topology family)
@@ -63,6 +66,50 @@ def flat_time(collective: str, size: float, n: int, bw: float,
         return all_to_all(size, n, bw, lat)
     if collective == "p2p":   # one point-to-point transfer (PP stage hop)
         return size / bw + lat if size > 0 else 0.0
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+# --- batched variants (same formulas over a size *array*) -------------- #
+# Consumed by the compiled study engine: one call times every event of a
+# (collective, scope) group at once.  The arithmetic mirrors the scalar
+# helpers term for term, so batch and scalar paths agree to float
+# round-off (tests/test_compiled.py locks the 1e-9 envelope).
+
+def ring_allreduce_batch(sizes: np.ndarray, n: int, bw: float,
+                         lat: float) -> np.ndarray:
+    if n <= 1:
+        return np.zeros(np.shape(sizes))
+    t = 2 * (n - 1) / n * sizes / bw + 2 * (n - 1) * lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def ring_allgather_batch(sizes: np.ndarray, n: int, bw: float,
+                         lat: float) -> np.ndarray:
+    if n <= 1:
+        return np.zeros(np.shape(sizes))
+    t = (n - 1) / n * sizes / bw + (n - 1) * lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def all_to_all_batch(sizes: np.ndarray, n: int, bw: float,
+                     lat: float) -> np.ndarray:
+    if n <= 1:
+        return np.zeros(np.shape(sizes))
+    t = (n - 1) / n * sizes / bw + lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def flat_time_batch(collective: str, sizes: np.ndarray, n: int, bw: float,
+                    lat: float) -> np.ndarray:
+    """Batched :func:`flat_time`: dispatch one (collective, scope) group."""
+    if collective == "all-reduce":
+        return ring_allreduce_batch(sizes, n, bw, lat)
+    if collective in ("all-gather", "reduce-scatter"):
+        return ring_allgather_batch(sizes, n, bw, lat)
+    if collective == "all-to-all":
+        return all_to_all_batch(sizes, n, bw, lat)
+    if collective == "p2p":
+        return np.where(sizes > 0, sizes / bw + lat, 0.0)
     raise ValueError(f"unknown collective {collective!r}")
 
 
@@ -109,10 +156,16 @@ def _strided(group: int, stride: int, pod_size: int) -> GroupPlacement:
     return GroupPlacement(intra=per_pod, inter=max(1, group // per_pod))
 
 
+@functools.lru_cache(maxsize=65536)
 def placement(scope: str, mp: int, dp: int, pod_size: int,
               pp: int = 1, ep: int = 1) -> GroupPlacement:
     """Paper's placement, extended to the four-axis mesh: MP consecutive
-    (fills pods first), then EP, then DP, with PP stages outermost."""
+    (fills pods first), then EP, then DP, with PP stages outermost.
+
+    Memoized: hop resolution is re-requested by every ``collective_time``
+    call (one per communication event per cell), but only ever depends on
+    this small integer tuple — the cache turns the per-event cost into a
+    dict probe.  ``GroupPlacement`` is frozen, so sharing is safe."""
     if scope == "mp" or (scope == "ep" and ep <= 1):
         # legacy: the EP group rode the MP group
         if mp <= pod_size:
@@ -181,6 +234,14 @@ class Topology(Protocol):
     def collective_time(self, collective: str, size: float, scope: str,
                         mp: int, dp: int, pp: int = 1, ep: int = 1,
                         placement=None) -> float: ...
+
+    # Families may additionally implement the batched form
+    #   collective_time_batch(collective, sizes, scope, mp, dp, pp, ep,
+    #                         placement) -> np.ndarray
+    # (one (collective, scope) group, a whole size array at once).  It is
+    # deliberately *not* part of the structural protocol: downstream
+    # families that predate it keep passing isinstance checks, and the
+    # compiled engine falls back to per-event scalar calls when absent.
 
     def with_(self, **updates): ...
 
@@ -273,6 +334,48 @@ class HierarchicalSwitch(TopologyBase):
             return max(t_inter, t_intra)
         raise ValueError(f"unknown collective {collective!r}")
 
+    def collective_time_batch(self, collective: str, sizes: np.ndarray,
+                              scope: str, mp: int, dp: int, pp: int = 1,
+                              ep: int = 1, placement=None) -> np.ndarray:
+        """Batched :meth:`collective_time`: same branches, a size array."""
+        order = placement if placement is not None else _PAPER_ORDER
+        sizes = np.asarray(sizes, dtype=float)
+        if _group_size(scope, mp, dp, pp, ep) <= 1:
+            return np.zeros(sizes.shape)
+        if collective == "p2p":
+            if not order.p2p_crosses_pod(mp, dp, self.pod_size, pp, ep):
+                return np.where(sizes > 0,
+                                sizes / self.intra_bw + self.intra_latency,
+                                0.0)
+            return np.where(sizes > 0,
+                            sizes / self.inter_bw + self.inter_latency, 0.0)
+        pl = order.group_placement(scope, mp, dp, self.pod_size, pp, ep)
+        p, q = pl.intra, pl.inter
+        if q <= 1:
+            return flat_time_batch(collective, sizes, p, self.intra_bw,
+                                   self.intra_latency)
+        if p <= 1:
+            return flat_time_batch(collective, sizes, q, self.inter_bw,
+                                   self.inter_latency)
+        if collective == "all-reduce":
+            return 2 * ring_allgather_batch(sizes, p, self.intra_bw,
+                                            self.intra_latency) \
+                + ring_allreduce_batch(sizes / p, q, self.inter_bw,
+                                       self.inter_latency)
+        if collective in ("all-gather", "reduce-scatter"):
+            return ring_allgather_batch(sizes, p, self.intra_bw,
+                                        self.intra_latency) \
+                + ring_allgather_batch(sizes / p, q, self.inter_bw,
+                                       self.inter_latency)
+        if collective == "all-to-all":
+            n = p * q
+            inter_frac = (n - p) / n
+            intra_frac = (p - 1) / n
+            t_inter = inter_frac * sizes / self.inter_bw + self.inter_latency
+            t_intra = intra_frac * sizes / self.intra_bw + self.intra_latency
+            return np.where(sizes > 0, np.maximum(t_inter, t_intra), 0.0)
+        raise ValueError(f"unknown collective {collective!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class Torus(TopologyBase):
@@ -319,6 +422,75 @@ class Torus(TopologyBase):
             return size / self.link_bw + self.latency
         return self._time(collective, size, group)
 
+    def collective_time_batch(self, collective: str, sizes: np.ndarray,
+                              scope: str, mp: int, dp: int, pp: int = 1,
+                              ep: int = 1, placement=None) -> np.ndarray:
+        """Batched :meth:`collective_time`: same branches, a size array."""
+        order = placement if placement is not None else _PAPER_ORDER
+        sizes = np.asarray(sizes, dtype=float)
+        group = _group_size(scope, mp, dp, pp, ep)
+        if group <= 1:
+            return np.zeros(sizes.shape)
+        if collective == "p2p":
+            if self.dcn_bw and order.p2p_crosses_pod(mp, dp, self.pod_size,
+                                                     pp, ep):
+                t = sizes / self.dcn_bw + self.dcn_latency
+            else:
+                t = sizes / self.link_bw + self.latency
+            return np.where(sizes > 0, t, 0.0)
+        return self._time_batch(collective, sizes, group)
+
+    def _time_batch(self, collective: str, sizes: np.ndarray,
+                    group: int) -> np.ndarray:
+        """Batched :meth:`_time`: the same per-dimension ring sweeps over a
+        size array (every size-independent decision — dims, DCN spill — is
+        identical across the batch)."""
+        pod = self.pod_size
+        bw = 2 * self.link_bw
+        if self.dcn_bw and group > pod:
+            q = math.ceil(group / pod)
+            if collective == "all-reduce":
+                t_in = self._time_batch("reduce-scatter", sizes, pod) \
+                     + self._time_batch("all-gather", sizes, pod)
+                t_out = ring_allreduce_batch(sizes / pod, q, self.dcn_bw,
+                                             self.dcn_latency)
+                return t_in + t_out
+            t_in = self._time_batch(collective, sizes, pod)
+            t_out = flat_time_batch(collective, sizes / pod, q, self.dcn_bw,
+                                    self.dcn_latency)
+            return t_in + t_out
+        dims = []
+        rem = min(group, pod)
+        for d in self.dims:
+            if rem <= 1:
+                break
+            use = min(d, rem)
+            dims.append(use)
+            rem = max(1, rem // use)
+        if not dims:
+            return np.zeros(sizes.shape)
+        if collective == "all-reduce":
+            t, s = np.zeros(sizes.shape), sizes
+            for d in dims:
+                t = t + ring_allgather_batch(s, d, bw, self.latency)
+                s = s / d
+            for d in reversed(dims):
+                s = s * d
+                t = t + ring_allgather_batch(s, d, bw, self.latency)
+            return t
+        if collective in ("all-gather", "reduce-scatter"):
+            t, s = np.zeros(sizes.shape), sizes
+            for d in dims:
+                t = t + ring_allgather_batch(s, d, bw, self.latency)
+                s = s / d
+            return t
+        if collective == "all-to-all":
+            n = 1
+            for d in dims:
+                n *= d
+            return all_to_all_batch(sizes, n, bw * len(dims), self.latency)
+        raise ValueError(f"unknown collective {collective!r}")
+
     def _time(self, collective: str, size: float, group: int) -> float:
         """Multi-dimensional bucket algorithm: per-dimension ring stages.
 
@@ -346,7 +518,6 @@ class Torus(TopologyBase):
         for d in self.dims:
             if rem <= 1:
                 break
-            use = math.gcd(rem, d) if rem % d else d
             use = min(d, rem)
             dims.append(use)
             rem = max(1, rem // use)
@@ -401,3 +572,14 @@ class SingleSwitch(TopologyBase):
         if group <= 1 or size <= 0:
             return 0.0
         return flat_time(collective, size, group, self.bw, self.latency)
+
+    def collective_time_batch(self, collective: str, sizes: np.ndarray,
+                              scope: str, mp: int, dp: int, pp: int = 1,
+                              ep: int = 1, placement=None) -> np.ndarray:
+        """Batched :meth:`collective_time`: flat network, a size array."""
+        sizes = np.asarray(sizes, dtype=float)
+        group = _group_size(scope, mp, dp, pp, ep)
+        if group <= 1:
+            return np.zeros(sizes.shape)
+        return flat_time_batch(collective, sizes, group, self.bw,
+                               self.latency)

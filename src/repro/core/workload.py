@@ -129,6 +129,21 @@ class Workload:
     virtual_stages: int = 1        # v chunks per node (interleaved only)
 
     # ------------------------------------------------------------------ #
+    def compiled(self):
+        """The lowered form of this workload (flat NumPy op/event arrays,
+        :class:`repro.core.compiled.CompiledWorkload`), built on first use
+        and memoized on the instance — the strategy-dependent half of a
+        study cell's cost, paid once per decomposition no matter how many
+        cluster cells it is timed against.  The layer list must not be
+        mutated after the first call."""
+        cw = getattr(self, "_compiled_cache", None)
+        if cw is None:
+            from repro.core.compiled import compile_workload
+            cw = compile_workload(self)
+            object.__setattr__(self, "_compiled_cache", cw)
+        return cw
+
+    # ------------------------------------------------------------------ #
     def stage_layers(self) -> List[List[LayerSpec]]:
         """Layers grouped by pipeline stage (one group when pp == 1)."""
         if self.pp <= 1:
@@ -413,6 +428,22 @@ def _embedding_layers(cfg: ModelConfig, tokens: int, mp: int):
     return inp, out
 
 
+def _clone_layer(template: LayerSpec, name: str) -> LayerSpec:
+    """A per-instance copy of a template layer.
+
+    ``decompose`` builds each *distinct* layer shape once per strategy and
+    stamps the repeated blocks out as clones: the op lists are immutable
+    after construction and stay shared (the compiled lowering dedupes on
+    exactly that identity), while the comm lists and the ``stage`` slot
+    are per-instance — later passes append stage-boundary p2p and DP-grad
+    events layer by layer."""
+    return dataclasses.replace(
+        template, name=name,
+        comm_fwd=list(template.comm_fwd),
+        comm_ig=list(template.comm_ig),
+        comm_wg=list(template.comm_wg))
+
+
 def _dp_grad_events(layers: Sequence[LayerSpec], dp: int, ep: int = 1) -> None:
     """Attach the WG-phase non-blocking DP gradient collectives (§III-C3).
 
@@ -588,34 +619,71 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
         tokens = b_local * eff_q
         inp, out = _embedding_layers(cfg, tokens, mp)
         layers.append(inp)
+        # The block stack repeats a handful of distinct layer shapes; build
+        # each shape once and stamp the stack out as clones (identical
+        # content — the decompose goldens fingerprint every op dim — at a
+        # fraction of the construction cost; this is the strategy-side
+        # half of a study cell, so it is squarely on the hot path).
+        templates: dict = {}
+
+        def stamp(key: str, name: str, build) -> LayerSpec:
+            t = templates.get(key)
+            if t is None:
+                t = templates[key] = build()
+            return _clone_layer(t, name)
+
         for i in range(cfg.num_layers):
             if cfg.family in ("ssm", "hybrid"):
-                layers.append(_norm_layer(f"norm_{i}", cfg, tokens))
-                layers.append(_ssm_layer(f"ssm_{i}", cfg, tokens, mp))
+                layers.append(stamp(
+                    "norm", f"norm_{i}",
+                    lambda: _norm_layer("norm", cfg, tokens)))
+                layers.append(stamp(
+                    "ssm", f"ssm_{i}",
+                    lambda: _ssm_layer("ssm", cfg, tokens, mp)))
                 if (cfg.family == "hybrid" and cfg.hybrid is not None
                         and (i + 1) % cfg.hybrid.attn_every == 0):
                     d_in = (2 * cfg.d_model
                             if cfg.hybrid.attn_concat_embedding else cfg.d_model)
-                    layers.append(_attention_layer(
-                        f"shared_attn_{i}", cfg, b_local, eff_q, eff_seq, mp,
-                        d_in=d_in, d_out=cfg.d_model))
+                    layers.append(stamp(
+                        "shared_attn", f"shared_attn_{i}",
+                        lambda: _attention_layer(
+                            "shared_attn", cfg, b_local, eff_q, eff_seq, mp,
+                            d_in=d_in, d_out=cfg.d_model)))
             elif cfg.family == "moe":
                 assert cfg.moe is not None
-                layers.append(_norm_layer(f"norm_attn_{i}", cfg, tokens))
-                layers.append(_attention_layer(
-                    f"attn_{i}", cfg, b_local, eff_q, eff_seq, mp))
-                layers.append(_norm_layer(f"norm_ffn_{i}", cfg, tokens))
+                layers.append(stamp(
+                    "norm", f"norm_attn_{i}",
+                    lambda: _norm_layer("norm", cfg, tokens)))
+                layers.append(stamp(
+                    "attn", f"attn_{i}",
+                    lambda: _attention_layer(
+                        "attn", cfg, b_local, eff_q, eff_seq, mp)))
+                layers.append(stamp(
+                    "norm", f"norm_ffn_{i}",
+                    lambda: _norm_layer("norm", cfg, tokens)))
                 is_moe = (i % cfg.moe.moe_every) == (cfg.moe.moe_every - 1)
                 if is_moe:
-                    layers.append(_moe_layer(f"moe_{i}", cfg, tokens, mp, ep))
+                    layers.append(stamp(
+                        "moe", f"moe_{i}",
+                        lambda: _moe_layer("moe", cfg, tokens, mp, ep)))
                 else:
-                    layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
+                    layers.append(stamp(
+                        "ffn", f"ffn_{i}",
+                        lambda: _ffn_layer("ffn", cfg, tokens, mp)))
             else:  # dense / vlm
-                layers.append(_norm_layer(f"norm_attn_{i}", cfg, tokens))
-                layers.append(_attention_layer(
-                    f"attn_{i}", cfg, b_local, eff_q, eff_seq, mp))
-                layers.append(_norm_layer(f"norm_ffn_{i}", cfg, tokens))
-                layers.append(_ffn_layer(f"ffn_{i}", cfg, tokens, mp))
+                layers.append(stamp(
+                    "norm", f"norm_attn_{i}",
+                    lambda: _norm_layer("norm", cfg, tokens)))
+                layers.append(stamp(
+                    "attn", f"attn_{i}",
+                    lambda: _attention_layer(
+                        "attn", cfg, b_local, eff_q, eff_seq, mp)))
+                layers.append(stamp(
+                    "norm", f"norm_ffn_{i}",
+                    lambda: _norm_layer("norm", cfg, tokens)))
+                layers.append(stamp(
+                    "ffn", f"ffn_{i}",
+                    lambda: _ffn_layer("ffn", cfg, tokens, mp)))
         layers.append(out)
 
     if pp > 1:

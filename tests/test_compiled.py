@@ -1,0 +1,463 @@
+"""Equivalence suite for the compiled study engine (ISSUE 5).
+
+``engine="compiled"`` lowers each decomposed workload to flat NumPy arrays
+and times it against whole batches of cluster cells; it must reproduce the
+reference event-loop engine within 1e-9 relative on every record of every
+study.  Locked here:
+
+  * goldens — all 7 figure studies plus the pp_ep / placement /
+    multi-tenant studies run under both engines, records compared
+    column by column;
+  * simulator-level equivalence across topology families, PP/EP
+    strategies, schedules, memory expansion, overrides and require_fit
+    (parametrized grid + a hypothesis property when available);
+  * the strategy-major fork path: serial == fork records for both
+    engines, chunks partition the cells, and a raising metric fn leaves
+    ``run_study`` reusable (the PR-5 fork-globals regression);
+  * the batched collective models against their scalar counterparts.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs import get_config, get_dlrm_config
+from repro.configs.base import ShapeConfig
+from repro.core import compiled as compiled_mod
+from repro.core import dse
+from repro.core.cluster import (
+    BASELINE_DGX_A100,
+    ClusterConfig,
+    HierarchicalSwitch,
+    NodeConfig,
+    SingleSwitch,
+    Torus,
+)
+from repro.core.collectives import CollectiveModel
+from repro.core.simulator import (
+    _SCOPES,
+    group_breakdowns,
+    group_breakdowns_compiled,
+    simulate_iteration,
+    simulate_iteration_compiled,
+)
+from repro.core.study import (
+    Axis,
+    GridSpace,
+    ParallelSpec,
+    StudySpec,
+    _strategy_chunks,
+    _workload_key,
+    run_study,
+)
+from repro.core.topology import placement as paper_placement
+from repro.core.workload import decompose
+
+GB = 1e9
+REL = 1e-9
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+
+def assert_close(a: float, b: float, rel: float = REL, ctx: str = "") -> None:
+    if isinstance(a, float) and (math.isnan(a) or math.isinf(a)):
+        assert str(a) == str(b), ctx
+        return
+    assert a == pytest.approx(b, rel=rel, abs=1e-12), ctx
+
+
+def assert_records_equivalent(ref, comp, rel: float = REL) -> None:
+    """Records equal: non-floats exactly, floats within ``rel``."""
+    assert len(ref) == len(comp)
+    for ra, rb in zip(ref.records, comp.records):
+        assert set(ra) == set(rb)
+        for k, va in ra.items():
+            vb = rb[k]
+            if isinstance(va, float) and isinstance(vb, float):
+                assert_close(va, vb, rel, ctx=f"{k}: {va} vs {vb}")
+            else:
+                assert va == vb, f"{k}: {va!r} vs {vb!r}"
+
+
+def both_engines(spec):
+    return run_study(spec), run_study(spec, engine="compiled")
+
+
+def assert_breakdowns_equivalent(a, b, rel: float = REL) -> None:
+    for k, va in a.as_dict().items():
+        assert_close(va, b.as_dict()[k], rel, ctx=k)
+    assert a.feasible == b.feasible
+    assert_close(a.mem_bw, b.mem_bw, rel, ctx="mem_bw")
+    assert_close(a.bubble_fraction, b.bubble_fraction, rel, ctx="bubble")
+    assert_close(a.footprint.total, b.footprint.total, rel, ctx="footprint")
+    assert a.footprint.fits_total == b.footprint.fits_total
+    assert a.footprint.fits_local == b.footprint.fits_local
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return get_config("transformer-1t")
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("smollm-135m")
+
+
+# ===================================================================== #
+# Figure-study goldens: compiled == reference on every record
+# ===================================================================== #
+
+class TestFigureStudyGoldens:
+    def test_fig8_mpdp(self, tcfg):
+        assert_records_equivalent(
+            *both_engines(dse.mpdp_study(tcfg, SHAPE, BASELINE_DGX_A100)))
+
+    def test_fig9_memory_expansion(self, tcfg):
+        spec = dse.memory_expansion_study(
+            tcfg, SHAPE, BASELINE_DGX_A100,
+            em_bandwidths_gbs=(100, 500, 2000),
+            strategies=[(32, 32), (8, 128)])
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig10_compute_scaling(self, tcfg):
+        spec = dse.compute_scaling_study(
+            tcfg, SHAPE, BASELINE_DGX_A100, 8, 128,
+            compute_factors=(0.5, 1.0, 4.0),
+            em_bandwidths_gbs=(500, 2000))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig11_network_scaling(self, tcfg):
+        spec = dse.network_scaling_study(
+            tcfg, SHAPE, BASELINE_DGX_A100, 64, 16,
+            intra_factors=(0.5, 2.0), inter_factors=(1.0, 4.0))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig12_bandwidth_rebalance(self, tcfg):
+        spec = dse.bandwidth_rebalance_study(
+            tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, ratios=(1, 4, 9.6))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig13a_dlrm_cluster_size(self):
+        spec = dse.dlrm_cluster_size_study(
+            get_dlrm_config(), BASELINE_DGX_A100, global_batch=65536)
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig13b_dlrm_memory_expansion(self):
+        spec = dse.dlrm_memory_expansion_study(
+            get_dlrm_config(), BASELINE_DGX_A100, global_batch=65536,
+            em_bandwidths_gbs=(500, 1500), nodes_per_instance_opts=(64, 8))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_fig15_cluster_comparison(self, tcfg):
+        t_study, d_study = dse.cluster_comparison_studies(
+            tcfg, SHAPE, get_dlrm_config(), 65536)
+        assert_records_equivalent(*both_engines(t_study))
+        assert_records_equivalent(*both_engines(d_study))
+
+
+class TestBeyondPaperStudyGoldens:
+    def test_pp_ep_study(self):
+        spec = dse.pp_ep_study(mp=(8, 16), dp=(4, 8, 16, 32), pp=(1, 2),
+                               ep=(1, 2), clusters=("A0", "B1"))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_placement_study(self, tcfg):
+        spec = dse.placement_study(
+            cfg=tcfg, em_pod_fractions=(0.0, 0.5),
+            strategies=GridSpace(mp=(16,), dp=(16, 32), pp=(2, 4)))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_multi_tenant_study(self):
+        spec = dse.multi_tenant_study(nodes_per_instance_opts=(64, 16))
+        assert_records_equivalent(*both_engines(spec))
+
+    def test_hetero_cost_study(self, tcfg):
+        spec = dse.hetero_cost_study(
+            tcfg, SHAPE, em_pod_fractions=(0.0, 0.5, 1.0),
+            strategies=[(64, 16), (8, 128)])
+        assert_records_equivalent(*both_engines(spec))
+
+
+# ===================================================================== #
+# Simulator-level equivalence grid
+# ===================================================================== #
+
+SMALL_NODE = NodeConfig("sim", peak_flops=100e12, local_cap=16 * GB,
+                        local_bw=1000 * GB, sram_bytes=20e6, tdp_watts=300)
+EM_NODE = dataclasses.replace(SMALL_NODE, local_cap=0.2 * GB,
+                              exp_cap=64 * GB, exp_bw=250 * GB)
+TINY_NODE = dataclasses.replace(SMALL_NODE, local_cap=0.05 * GB)
+
+TOPOLOGIES = {
+    "hier": HierarchicalSwitch(pod_size=4, intra_bw=200 * GB,
+                               inter_bw=25 * GB),
+    "torus": Torus(dims=(4, 4), link_bw=40 * GB),
+    "torus-dcn": Torus(dims=(2, 2), link_bw=40 * GB, dcn_bw=10 * GB),
+    "switch": SingleSwitch(bw=300 * GB),
+}
+
+SIM_CASES = [
+    # (model, topo key, node, mp, dp, pp, ep, schedule, override, req_fit)
+    ("smollm-135m", "hier", SMALL_NODE, 4, 4, 1, 1, "1f1b", None, False),
+    ("smollm-135m", "hier", SMALL_NODE, 2, 2, 4, 1, "gpipe", None, False),
+    ("smollm-135m", "hier", SMALL_NODE, 2, 2, 4, 1, "interleaved", None,
+     False),
+    ("smollm-135m", "torus", SMALL_NODE, 4, 4, 1, 1, "1f1b", "local",
+     False),
+    ("smollm-135m", "torus-dcn", SMALL_NODE, 2, 4, 2, 1, "1f1b", None,
+     False),
+    ("smollm-135m", "switch", SMALL_NODE, 8, 2, 1, 1, "1f1b", 500 * GB,
+     False),
+    ("smollm-135m", "hier", EM_NODE, 2, 8, 1, 1, "1f1b", None, False),
+    ("smollm-135m", "hier", TINY_NODE, 1, 16, 1, 1, "1f1b", None, True),
+    ("smollm-135m", "hier", TINY_NODE, 1, 8, 2, 1, "1f1b", None, True),
+    ("granite-moe-3b-a800m", "hier", SMALL_NODE, 2, 2, 1, 4, "1f1b", None,
+     False),
+    ("granite-moe-3b-a800m", "torus", SMALL_NODE, 2, 2, 2, 2, "gpipe",
+     None, False),
+    ("mamba2-780m", "hier", SMALL_NODE, 2, 8, 1, 1, "1f1b", None, False),
+]
+
+
+class TestSimulatorEquivalence:
+    @pytest.mark.parametrize("case", SIM_CASES,
+                             ids=[f"{c[0]}-{c[1]}-mp{c[3]}dp{c[4]}"
+                                  f"pp{c[5]}ep{c[6]}-{c[7]}"
+                                  for c in SIM_CASES])
+    def test_grid(self, case):
+        arch, topo_key, node, mp, dp, pp, ep, sched, override, req = case
+        wl = decompose(get_config(arch), SMALL_SHAPE, mp=mp, dp=dp, pp=pp,
+                       ep=ep, schedule=sched)
+        cluster = ClusterConfig("sim", node, mp * dp * pp * ep,
+                                TOPOLOGIES[topo_key])
+        ref = simulate_iteration(wl, cluster, mem_bw_override=override,
+                                 require_fit=req)
+        comp = simulate_iteration_compiled(
+            wl.compiled(), cluster, mem_bw_override=override,
+            require_fit=req)
+        assert_breakdowns_equivalent(ref, comp)
+
+    def test_zero_stages(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=8)
+        cluster = ClusterConfig("sim", SMALL_NODE, 16, TOPOLOGIES["hier"])
+        for z in (0, 1, 2, 3):
+            assert_breakdowns_equivalent(
+                simulate_iteration(wl, cluster, zero_stage=z),
+                simulate_iteration_compiled(wl.compiled(), cluster,
+                                            zero_stage=z))
+
+    def test_heterogeneous_flat_and_groups(self, small_cfg):
+        from repro.core.cluster import B_HYBRID_EM
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=4, dp=4)
+        assert_breakdowns_equivalent(
+            simulate_iteration(wl, B_HYBRID_EM),
+            simulate_iteration_compiled(wl.compiled(), B_HYBRID_EM))
+        for a, b in zip(group_breakdowns(wl, B_HYBRID_EM),
+                        group_breakdowns_compiled(wl.compiled(),
+                                                  B_HYBRID_EM)):
+            assert_breakdowns_equivalent(a, b)
+
+    def test_placement_assigned_pipeline_delegates(self, tcfg):
+        # Mixed fleet + pp>1 + explicit placement goes through the
+        # reference path wholesale — bit-for-bit, not just 1e-9.
+        from repro.core.cluster import B_HYBRID_EM
+        from repro.core.placement import EM_AWARE_PLACEMENT
+        wl = decompose(tcfg, SHAPE, mp=16, dp=16, pp=4)
+        ref = simulate_iteration(wl, B_HYBRID_EM,
+                                 placement=EM_AWARE_PLACEMENT)
+        comp = simulate_iteration_compiled(wl.compiled(), B_HYBRID_EM,
+                                           placement=EM_AWARE_PLACEMENT)
+        assert ref.as_dict() == comp.as_dict()
+
+    def test_scope_codes_agree(self):
+        assert compiled_mod.SCOPES == _SCOPES
+
+
+# ===================================================================== #
+# Batched collective models == scalar collective models
+# ===================================================================== #
+
+class TestCollectiveBatch:
+    @pytest.mark.parametrize("topo_key", sorted(TOPOLOGIES))
+    def test_time_batch_matches_scalar(self, topo_key):
+        topo = TOPOLOGIES[topo_key]
+        model = CollectiveModel(topo, mp=4, dp=4, pp=2, ep=2)
+        events = [(c, s, sc)
+                  for c in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "p2p")
+                  for s in (0.0, 1e6, 3e9)
+                  for sc in ("mp", "dp", "ep", "pp", "edp")]
+        kinds = [e[0] for e in events]
+        sizes = [e[1] for e in events]
+        scopes = [e[2] for e in events]
+        batch = model.time_batch(kinds, sizes, scopes)
+        for (c, s, sc), t in zip(events, batch):
+            assert t == pytest.approx(model.time(c, s, sc), rel=1e-12,
+                                      abs=0.0), (c, s, sc)
+
+    def test_fallback_without_batch_method(self):
+        class MinimalTopo:
+            pod_size = 4
+            links_per_node = 1
+
+            def collective_time(self, collective, size, scope, mp, dp,
+                                pp=1, ep=1, placement=None):
+                return 0.5 * size if size > 0 else 0.0
+
+        model = CollectiveModel(MinimalTopo(), mp=2, dp=2)
+        out = model.time_batch(["all-reduce", "all-reduce"], [2.0, 4.0],
+                               ["mp", "dp"])
+        assert list(out) == [1.0, 2.0]
+
+
+# ===================================================================== #
+# Strategy-major fork path
+# ===================================================================== #
+
+def _small_spec(small_cfg, metrics=None):
+    return StudySpec(
+        name="fork-equiv", model=small_cfg, shape=SMALL_SHAPE,
+        cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),
+        strategies=GridSpace(mp=(1, 2, 4, 8), dp=(1, 2, 4, 8)),
+        axes=[Axis("bw_x", (0.5, 1.0), path="node.local_bw",
+                   mode="scale")],
+        metrics=metrics or {})
+
+
+class TestForkPath:
+    def test_chunks_partition_cells_by_workload_key(self, small_cfg):
+        spec = _small_spec(small_cfg)
+        from repro.core.study import _cells
+        cells = _cells(spec)
+        chunks = _strategy_chunks(spec, cells, processes=3)
+        flat = sorted(i for ch in chunks for i in ch)
+        assert flat == list(range(len(cells)))
+        # No workload key is split while more chunks than workers exist.
+        keys_per_chunk = [{_workload_key(spec, *cells[i][:2])
+                           for i in ch} for ch in chunks]
+        assert all(len(ks) == 1 for ks in keys_per_chunk)
+
+    def test_chunks_split_when_fewer_groups_than_workers(self, small_cfg):
+        spec = StudySpec(name="one-strategy", model=small_cfg,
+                         shape=SMALL_SHAPE,
+                         cluster=dataclasses.replace(BASELINE_DGX_A100,
+                                                     num_nodes=8),
+                         strategies=ParallelSpec(mp=2, dp=4),
+                         axes=[Axis("bw_x", (0.5, 1.0, 2.0, 4.0),
+                                    path="node.local_bw", mode="scale")])
+        from repro.core.study import _cells
+        cells = _cells(spec)
+        chunks = _strategy_chunks(spec, cells, processes=4)
+        assert len(chunks) == 4
+        assert sorted(i for ch in chunks for i in ch) == \
+            list(range(len(cells)))
+
+    def test_empty_cell_list_with_processes(self, small_cfg):
+        # No strategy fills the 8-node cluster -> zero cells; the chunked
+        # fork path must return an empty result, not crash on max([]).
+        spec = StudySpec(
+            name="empty", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),
+            strategies=GridSpace(mp=(3,), dp=(3,)))
+        assert len(run_study(spec, processes=4)) == 0
+
+    @pytest.mark.parametrize("engine", ["reference", "compiled"])
+    def test_fork_equals_serial(self, small_cfg, engine):
+        spec = _small_spec(small_cfg)
+        serial = run_study(spec, engine=engine)
+        forked = run_study(spec, processes=2, engine=engine)
+        assert serial.records == forked.records
+
+    @pytest.mark.parametrize("engine", ["reference", "compiled"])
+    def test_raising_metric_leaves_run_study_reusable(self, small_cfg,
+                                                      engine):
+        # PR-5 regression: a worker raising mid-map must not poison
+        # module state for later serial or parallel runs.
+        import repro.core.study as study_mod
+
+        def boom(ctx):
+            raise RuntimeError("metric exploded")
+
+        bad = _small_spec(small_cfg, metrics={"boom": boom})
+        with pytest.raises(RuntimeError, match="metric exploded"):
+            run_study(bad, processes=2, engine=engine)
+        assert study_mod._FORK_STATE is None
+        good = _small_spec(small_cfg)
+        again = run_study(good, engine=engine)
+        assert run_study(good, processes=2, engine=engine).records == \
+            again.records
+
+
+# ===================================================================== #
+# Hop-resolution memo (satellite): placement() is cached and consistent
+# ===================================================================== #
+
+class TestPlacementMemo:
+    def test_cached_and_identical(self):
+        paper_placement.cache_clear()
+        a = paper_placement("dp", 8, 16, 8, 1, 1)
+        b = paper_placement("dp", 8, 16, 8, 1, 1)
+        assert a is b
+        info = paper_placement.cache_info()
+        assert info.hits >= 1 and info.misses >= 1
+
+    def test_values_unchanged(self):
+        for scope in ("mp", "dp", "ep", "pp", "edp"):
+            pl = paper_placement(scope, 4, 8, 8, 2, 2)
+            assert pl.intra >= 1 and pl.inter >= 1
+
+
+# ===================================================================== #
+# Hypothesis property: random strategies / topologies agree
+# ===================================================================== #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # dev container without hypothesis: the
+    HAVE_HYPOTHESIS = False       # parametrized grid above still runs.
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def sim_inputs(draw):
+        mp = draw(st.sampled_from([1, 2, 4]))
+        dp = draw(st.sampled_from([1, 2, 4]))
+        pp = draw(st.sampled_from([1, 2, 4]))
+        ep = 1
+        schedule = draw(st.sampled_from(["1f1b", "gpipe", "interleaved"]))
+        fam = draw(st.sampled_from(["hier", "torus", "switch"]))
+        if fam == "hier":
+            topo = HierarchicalSwitch(
+                pod_size=draw(st.sampled_from([2, 4, 8])),
+                intra_bw=draw(st.floats(50, 500)) * GB,
+                inter_bw=draw(st.floats(5, 50)) * GB)
+        elif fam == "torus":
+            topo = Torus(dims=(4, 4),
+                         link_bw=draw(st.floats(10, 100)) * GB)
+        else:
+            topo = SingleSwitch(bw=draw(st.floats(50, 500)) * GB)
+        node = dataclasses.replace(
+            SMALL_NODE,
+            peak_flops=draw(st.floats(20, 500)) * 1e12,
+            local_bw=draw(st.floats(200, 3000)) * GB,
+            local_cap=draw(st.floats(0.5, 64)) * GB,
+            exp_cap=draw(st.sampled_from([0.0, 64 * GB])),
+            exp_bw=draw(st.floats(100, 1000)) * GB)
+        zero = draw(st.sampled_from([0, 2, 3]))
+        return mp, dp, pp, ep, schedule, topo, node, zero
+
+    class TestHypothesisEquivalence:
+        @settings(max_examples=25, deadline=None)
+        @given(sim_inputs())
+        def test_compiled_matches_reference(self, inputs):
+            mp, dp, pp, ep, schedule, topo, node, zero = inputs
+            cfg = get_config("smollm-135m")
+            wl = decompose(cfg, SMALL_SHAPE, mp=mp, dp=dp, pp=pp, ep=ep,
+                           schedule=schedule)
+            cluster = ClusterConfig("h", node, mp * dp * pp * ep, topo)
+            ref = simulate_iteration(wl, cluster, zero_stage=zero)
+            comp = simulate_iteration_compiled(wl.compiled(), cluster,
+                                               zero_stage=zero)
+            assert_breakdowns_equivalent(ref, comp)
