@@ -28,7 +28,7 @@ from typing import List
 from repro.configs import get_config, get_dlrm_config
 from repro.configs.base import SHAPES, ShapeConfig
 from repro.core import dse
-from repro.core.cluster import BASELINE_DGX_A100, TPU_V5E_POD, get_cluster
+from repro.core.cluster import BASELINE_DGX_A100, TPU_V5E_POD
 from repro.core.simulator import simulate_iteration
 from repro.core.strategy import footprint_table
 from repro.core.study import ParallelSpec, StudySpec, run_study

@@ -1,0 +1,51 @@
+"""Static analysis over COMET IR: workloads, compiled workloads, studies,
+clusters — checked before anything is simulated.
+
+Four rule packs (codes grouped by hundreds digit):
+
+* ``W1xx`` (:mod:`repro.analysis.rules_workload`) — Workload invariants,
+* ``C1xx`` (:mod:`repro.analysis.rules_compiled`) — CompiledWorkload vs.
+  its source,
+* ``S1xx`` (:mod:`repro.analysis.rules_study`) — StudySpec executability,
+* ``K1xx`` (:mod:`repro.analysis.rules_cluster`) — cluster well-formedness.
+
+Entry points: the ``analyze_*`` helpers below, the ``validate=`` gate on
+:func:`repro.core.study.run_study`, and the registry sweep CLI
+(``python -m repro.analysis --all-registry``).  See docs/analysis_api.md.
+"""
+
+from repro.analysis.diagnostics import (
+    AnalysisError,
+    Diagnostic,
+    Rule,
+    RuleConfig,
+    SEVERITIES,
+    format_report,
+    has_errors,
+    list_rules,
+    max_severity,
+    rule,
+    run_pack,
+)
+from repro.analysis.rules_cluster import analyze_cluster
+from repro.analysis.rules_compiled import analyze_compiled
+from repro.analysis.rules_study import analyze_study
+from repro.analysis.rules_workload import analyze_workload
+
+__all__ = [
+    "AnalysisError",
+    "Diagnostic",
+    "Rule",
+    "RuleConfig",
+    "SEVERITIES",
+    "analyze_cluster",
+    "analyze_compiled",
+    "analyze_study",
+    "analyze_workload",
+    "format_report",
+    "has_errors",
+    "list_rules",
+    "max_severity",
+    "rule",
+    "run_pack",
+]

@@ -145,7 +145,7 @@ class Checkpointer:
         sh_flat = (_flatten(shardings) if shardings is not None
                    else [(k, None) for k, _ in flat])
         leaves = []
-        for (key, leaf), (_, sh) in zip(flat, sh_flat):
+        for (key, _leaf), (_, sh) in zip(flat, sh_flat):
             e = by_key[key]
             arr = _load(e)
             if sh is not None:

@@ -40,6 +40,12 @@ _ARCH_MODULES: Dict[str, str] = {
 ASSIGNED_ARCHS: List[str] = [a for a in _ARCH_MODULES if a != "transformer-1t"]
 
 
+def list_configs() -> List[str]:
+    """All registry arch ids (the sweep surface of ``python -m
+    repro.analysis``)."""
+    return sorted(_ARCH_MODULES)
+
+
 def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
     if arch_id not in _ARCH_MODULES:
         raise KeyError(

@@ -396,7 +396,7 @@ TPU_V4 = ClusterConfig(
 )
 
 TABLE_III_CLUSTERS = {
-    **{f"{l}{m}": _gpu_variant(l, m) for l in "ABC" for m in (0, 1, 2)},
+    **{f"{tier}{m}": _gpu_variant(tier, m) for tier in "ABC" for m in (0, 1, 2)},
     "dojo": DOJO,
     "tpu-v4": TPU_V4,
 }

@@ -222,12 +222,12 @@ def _compile_stage(layers: List[LayerSpec]) -> CompiledStage:
         starts = np.zeros(0, dtype=np.int64)
         seg_cls = np.zeros(0, dtype=np.int64)
     # Optimizer-update totals (mirrors simulator._optimizer_time's sums).
-    dense_w = sum((l.weight_bytes - l.expert_bytes) * l.repeat
-                  for l in layers if l.optim_bytes is None)
-    expert_w = sum(l.expert_bytes * l.repeat for l in layers
-                   if l.optim_bytes is None)
-    sparse = sum(l.optim_bytes * l.repeat for l in layers
-                 if l.optim_bytes is not None)
+    dense_w = sum((ly.weight_bytes - ly.expert_bytes) * ly.repeat
+                  for ly in layers if ly.optim_bytes is None)
+    expert_w = sum(ly.expert_bytes * ly.repeat for ly in layers
+                   if ly.optim_bytes is None)
+    sparse = sum(ly.optim_bytes * ly.repeat for ly in layers
+                 if ly.optim_bytes is not None)
     return CompiledStage(
         n_classes=ncls,
         flops=np.asarray(flops),
@@ -260,6 +260,23 @@ def compile_workload(workload: Workload) -> CompiledWorkload:
         workload=workload,
         stages=[_compile_stage(layers) for layers in workload.stage_layers()],
     )
+
+
+def pass_event_totals(stage: CompiledStage
+                      ) -> Dict[Tuple[str, str], Tuple[int, float]]:
+    """Occurrence counts and total bytes per (collective, scope) across a
+    stage's two execution streams — what the timeline will actually issue
+    per microbatch, with the (kind, bytes, scope) dedup expanded back out.
+    The static analyzer (C102/C103) compares this against the source
+    layer list."""
+    totals: Dict[Tuple[str, str], List[float]] = {}
+    for p in (stage.fwd, stage.bwd):
+        for row in p.ev_comm.tolist():
+            key = (stage.comm_kinds[row], stage.comm_scopes[row])
+            cell = totals.setdefault(key, [0, 0.0])
+            cell[0] += 1
+            cell[1] += float(stage.comm_sizes[row])
+    return {k: (int(c), b) for k, (c, b) in totals.items()}
 
 
 def stage_traffic(stage: CompiledStage, sram: np.ndarray) -> np.ndarray:

@@ -613,3 +613,38 @@ def multi_tenant_ranking(processes: Optional[int] = None,
                     engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["turnaround"])
+
+
+# --------------------------------------------------------------------- #
+# Figure-study registry
+# --------------------------------------------------------------------- #
+
+def figure_studies(cfg: Optional[ModelConfig] = None,
+                   shape: Optional[ShapeConfig] = None,
+                   dlrm_cfg=None,
+                   cluster: Optional[ClusterConfig] = None,
+                   ) -> Dict[str, StudySpec]:
+    """The seven paper-figure studies as StudySpecs with their defaults,
+    keyed ``fig8`` .. ``fig13b``.
+
+    This is the declarative surface the static analyzer sweeps
+    (``python -m repro.analysis``) and the validate-equivalence tests
+    iterate; the ``*_sweep`` / runner functions above stay the execution
+    entry points."""
+    from repro.core.cluster import BASELINE_DGX_A100
+    cfg = cfg if cfg is not None else _default_transformer()
+    shape = shape if shape is not None else ShapeConfig(
+        "paper", seq_len=2048, global_batch=1024, kind="train")
+    if dlrm_cfg is None:
+        from repro.configs import get_dlrm_config
+        dlrm_cfg = get_dlrm_config()
+    cluster = cluster if cluster is not None else BASELINE_DGX_A100
+    return {
+        "fig8": mpdp_study(cfg, shape, cluster),
+        "fig9": memory_expansion_study(cfg, shape, cluster),
+        "fig10": compute_scaling_study(cfg, shape, cluster, mp=8, dp=128),
+        "fig11": network_scaling_study(cfg, shape, cluster, mp=64, dp=16),
+        "fig12": bandwidth_rebalance_study(cfg, shape, cluster, mp=64, dp=16),
+        "fig13a": dlrm_cluster_size_study(dlrm_cfg, cluster),
+        "fig13b": dlrm_memory_expansion_study(dlrm_cfg, cluster),
+    }

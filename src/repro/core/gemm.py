@@ -18,8 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
-
 
 def gemm_traffic_bytes(u: int, v: int, w: int, sram_bytes: int) -> int:
     """Paper Eqn (traffic): min{Psi1, Psi2} + W for on-chip buffer S."""

@@ -71,9 +71,9 @@ def _layer_states(layers, dense_ways: int, expert_ways: int,
     """Model-state bytes for a layer list: dense params replicate (and ZeRO-
     shard) across DP x EP, expert params are EP-sharded already and only
     replicate across DP — mirroring the "dp" vs "edp" gradient scopes."""
-    dense = sum((l.weight_bytes - l.expert_bytes) * l.repeat
-                for l in layers) / FP16
-    expert = sum(l.expert_bytes * l.repeat for l in layers) / FP16
+    dense = sum((ly.weight_bytes - ly.expert_bytes) * ly.repeat
+                for ly in layers) / FP16
+    expert = sum(ly.expert_bytes * ly.repeat for ly in layers) / FP16
     states = model_state_bytes(dense, dense_ways, zero_stage)
     if expert:
         states += model_state_bytes(expert, expert_ways, zero_stage)
@@ -112,7 +112,7 @@ def stage_footprints(
     for s, layers in enumerate(workload.stage_layers()):
         states = _layer_states(layers, dways, max(1, workload.dp),
                                zero_stage)
-        max_act = max((l.act_out_bytes for l in layers), default=0)
+        max_act = max((ly.act_out_bytes for ly in layers), default=0)
         if schedule == "gpipe":
             stash = m
         else:

@@ -271,12 +271,12 @@ def _optimizer_time(layers: List[LayerSpec], dense_ways: int,
     """Optimizer-update memory time.  Dense params ZeRO-shard across the
     DP x EP data group; expert params are EP-sharded already and shard
     across DP only (matching ``memory._layer_states``)."""
-    dense_w = sum((l.weight_bytes - l.expert_bytes) * l.repeat
-                  for l in layers if l.optim_bytes is None)
-    expert_w = sum(l.expert_bytes * l.repeat for l in layers
-                   if l.optim_bytes is None)
-    sparse = sum(l.optim_bytes * l.repeat for l in layers
-                 if l.optim_bytes is not None)
+    dense_w = sum((ly.weight_bytes - ly.expert_bytes) * ly.repeat
+                  for ly in layers if ly.optim_bytes is None)
+    expert_w = sum(ly.expert_bytes * ly.repeat for ly in layers
+                   if ly.optim_bytes is None)
+    sparse = sum(ly.optim_bytes * ly.repeat for ly in layers
+                 if ly.optim_bytes is not None)
     return _optimizer_numer(dense_w, expert_w, sparse, dense_ways,
                             expert_ways, zero_stage) / mem_bw
 

@@ -35,6 +35,7 @@ import itertools
 import json
 import math
 import os
+import warnings
 from typing import (
     Any,
     Callable,
@@ -48,7 +49,7 @@ from typing import (
 )
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.cluster import ClusterConfig, ClusterLike
+from repro.core.cluster import ClusterLike
 from repro.core.memory import FootprintReport
 from repro.core.placement import (
     JobSpec,
@@ -287,13 +288,8 @@ def get_by_path(obj: Any, path: str) -> Any:
     return obj
 
 
-def set_by_path(obj: Any, path: str, value: Any, scale: bool = False) -> Any:
-    """Functionally update a nested frozen-dataclass field by dotted path.
-
-    ``set_by_path(cluster, "node.exp_bw", 1e12)`` returns a new cluster;
-    with ``scale=True`` the leaf is multiplied by ``value`` instead of
-    replaced (the paper's "2x intra-pod bandwidth" style knob)."""
-    head, _, rest = path.partition(".")
+def _check_field(obj: Any, head: str, path: str) -> None:
+    """The field check ``set_by_path`` applies at each path segment."""
     if not dataclasses.is_dataclass(obj):
         raise TypeError(f"cannot override {path!r} on non-dataclass "
                         f"{type(obj).__name__}")
@@ -301,6 +297,27 @@ def set_by_path(obj: Any, path: str, value: Any, scale: bool = False) -> Any:
         raise AttributeError(
             f"{type(obj).__name__} has no field {head!r} "
             f"(available: {sorted(f.name for f in dataclasses.fields(obj))})")
+
+
+def check_path(obj: Any, path: str) -> None:
+    """Walk a dotted path through nested dataclasses without mutating
+    anything, raising exactly what :func:`set_by_path` would raise on a
+    typo'd segment — lets StudySpec (and the S101 analysis rule) reject a
+    bad ``Axis.path`` at construction instead of mid-run in a worker."""
+    head, _, rest = path.partition(".")
+    _check_field(obj, head, path)
+    if rest:
+        check_path(getattr(obj, head), rest)
+
+
+def set_by_path(obj: Any, path: str, value: Any, scale: bool = False) -> Any:
+    """Functionally update a nested frozen-dataclass field by dotted path.
+
+    ``set_by_path(cluster, "node.exp_bw", 1e12)`` returns a new cluster;
+    with ``scale=True`` the leaf is multiplied by ``value`` instead of
+    replaced (the paper's "2x intra-pod bandwidth" style knob)."""
+    head, _, rest = path.partition(".")
+    _check_field(obj, head, path)
     if rest:
         new_child = set_by_path(getattr(obj, head), rest, value, scale)
         return dataclasses.replace(obj, **{head: new_child})
@@ -448,6 +465,20 @@ class StudySpec:
             raise ValueError("mem_bw_override must be a float, None, "
                              "or the string 'local'")
         get_placement(self.placement)   # fail fast on unknown names
+        # Fail fast on typo'd dotted paths too: resolve every path axis
+        # against the base cluster's schema now, instead of erroring on the
+        # first cell inside an imap_unordered worker.  An apply axis may
+        # rewrite the cluster arbitrarily (even change its type), so paths
+        # behind one can only be checked at run time.
+        if self.cluster is not None:
+            transformed = False
+            for axis in self.axes:
+                if axis.kind != "cluster":
+                    continue
+                if axis.apply is not None:
+                    transformed = True
+                elif axis.path is not None and not transformed:
+                    check_path(self.cluster, axis.path)
 
 
 @dataclasses.dataclass
@@ -839,8 +870,32 @@ def _eval_chunk(ci: int) -> "Tuple[List[int], List[CellResult]]":
     return idxs, _run_cells(spec, [cells[i] for i in idxs], engine)
 
 
+VALIDATE_MODES = ("off", "warn", "error")
+
+
+def _validate_spec(spec: StudySpec, mode: str) -> None:
+    """Static pre-flight (``repro.analysis``): S1xx rules on the spec plus
+    K1xx rules on the base cluster.  Pure inspection — it never touches
+    the cells or records, so results are identical across modes."""
+    from repro.analysis import (AnalysisError, analyze_cluster,
+                                analyze_study, format_report, has_errors)
+    diags = analyze_study(spec)
+    if spec.cluster is not None:
+        diags += analyze_cluster(spec.cluster)
+    # Advisory (info) findings don't warrant interrupting a run; they stay
+    # visible through the CLI and analyze_* helpers.
+    diags = [d for d in diags if d.severity != "info"]
+    if not diags:
+        return
+    if mode == "error" and has_errors(diags):
+        raise AnalysisError(diags)
+    warnings.warn(f"study {spec.name!r} pre-flight:\n{format_report(diags)}",
+                  stacklevel=3)
+
+
 def run_study(spec: StudySpec, processes: Optional[int] = None,
-              engine: str = "reference") -> "StudyResult":
+              engine: str = "reference",
+              validate: str = "warn") -> "StudyResult":
     """Evaluate every cell of ``spec``; memoizes workload decompositions
     (keyed by strategy + ``workload_deps``) and simulator calls (keyed by
     workload + overridden cluster + ZeRO stage + bandwidth override).
@@ -860,9 +915,21 @@ def run_study(spec: StudySpec, processes: Optional[int] = None,
     (POSIX only; falls back to serial elsewhere).  Dispatch is
     strategy-major: one chunk per workload key via ``imap_unordered``,
     results reassembled into cell order, so parallel and serial runs
-    return identical records."""
+    return identical records.
+
+    ``validate`` gates a static pre-flight over the spec (S1xx rules) and
+    its base cluster (K1xx rules) from :mod:`repro.analysis`: ``"warn"``
+    (default) reports findings as a warning, ``"error"`` raises
+    :class:`repro.analysis.AnalysisError` on error-severity findings,
+    ``"off"`` skips the pass.  Validation only inspects — records are
+    identical across all three modes."""
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if validate not in VALIDATE_MODES:
+        raise ValueError(f"validate must be one of {VALIDATE_MODES}, "
+                         f"got {validate!r}")
+    if validate != "off":
+        _validate_spec(spec, validate)
     global _FORK_STATE
     cells = _cells(spec)
     if processes and processes > 1 and hasattr(os, "fork") \

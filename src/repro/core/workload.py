@@ -37,7 +37,6 @@ Four-axis strategies (Megatron-LM / GSPMD style):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -149,26 +148,38 @@ class Workload:
         if self.pp <= 1:
             return [list(self.layers)]
         out: List[List[LayerSpec]] = [[] for _ in range(self.pp)]
-        for l in self.layers:
-            out[l.stage].append(l)
+        for ly in self.layers:
+            out[ly.stage].append(ly)
         return out
 
+    def comm_events(self):
+        """Iterate ``(layer_index, layer, phase, event)`` over every
+        communication event, in layer order — ``phase`` is ``"fp"`` /
+        ``"ig"`` / ``"wg"``.  The traversal the static analyzer
+        (:mod:`repro.analysis`) and the compiled lowering agree on."""
+        for i, layer in enumerate(self.layers):
+            for phase, events in (("fp", layer.comm_fwd),
+                                  ("ig", layer.comm_ig),
+                                  ("wg", layer.comm_wg)):
+                for ev in events:
+                    yield i, layer, phase, ev
+
     def total_weight_bytes(self) -> int:
-        return sum(l.weight_bytes * l.repeat for l in self.layers)
+        return sum(ly.weight_bytes * ly.repeat for ly in self.layers)
 
     def total_activation_bytes(self) -> int:
-        return sum(l.act_out_bytes * l.repeat for l in self.layers)
+        return sum(ly.act_out_bytes * ly.repeat for ly in self.layers)
 
     def activation_working_bytes(self) -> int:
         """Activation Working Memory (§IV-B): intermediates between two
         consecutive checkpoints ~= the largest single layer's activations."""
-        return max((l.act_out_bytes for l in self.layers), default=0)
+        return max((ly.act_out_bytes for ly in self.layers), default=0)
 
     def phase_cost(self, phase: str, sram_bytes: int) -> PhaseCost:
         total = PhaseCost()
-        for l in self.layers:
-            c = l.phase_cost(phase, sram_bytes)
-            total = total + PhaseCost(c.flops * l.repeat, c.traffic * l.repeat)
+        for ly in self.layers:
+            c = ly.phase_cost(phase, sram_bytes)
+            total = total + PhaseCost(c.flops * ly.repeat, c.traffic * ly.repeat)
         return total
 
     def total_flops(self, sram_bytes: int = 1 << 62) -> int:
@@ -364,7 +375,6 @@ def _ssm_layer(name: str, cfg: ModelConfig, tokens: int, mp: int) -> LayerSpec:
     ssm = cfg.ssm
     assert ssm is not None
     d = cfg.d_model
-    di = cfg.d_inner
     n = ssm.state_dim
     p = ssm.head_dim
     heads = cfg.ssm_heads
@@ -457,24 +467,24 @@ def _dp_grad_events(layers: Sequence[LayerSpec], dp: int, ep: int = 1) -> None:
     weights are already EP-sharded and sync across DP only (``"edp"``)."""
     if dp * max(ep, 1) <= 1:
         return
-    for l in layers:
-        dense = l.weight_bytes - l.expert_bytes
+    for ly in layers:
+        dense = ly.weight_bytes - ly.expert_bytes
         if dense > 0:
-            l.comm_wg.append(
+            ly.comm_wg.append(
                 CommEvent("all-reduce", dense, "dp", blocking=False))
-        if l.expert_bytes and dp > 1:
-            l.comm_wg.append(
-                CommEvent("all-reduce", l.expert_bytes, "edp", blocking=False))
+        if ly.expert_bytes and dp > 1:
+            ly.comm_wg.append(
+                CommEvent("all-reduce", ly.expert_bytes, "edp", blocking=False))
 
 
 # ====================================================================== #
 # Pipeline-stage partitioning
 # ====================================================================== #
 
-def _layer_flops(l: LayerSpec) -> int:
+def _layer_flops(ly: LayerSpec) -> int:
     """Stage-balancing cost: the layer's FLOPs through the same phase_cost
     accounting the simulator uses (sram irrelevant for the flops term)."""
-    return sum(l.phase_cost(p, 1 << 62).flops for p in ("fp", "ig", "wg"))
+    return sum(ly.phase_cost(p, 1 << 62).flops for p in ("fp", "ig", "wg"))
 
 
 def _partition_stages(layers: List[LayerSpec], pp: int,
@@ -488,19 +498,19 @@ def _partition_stages(layers: List[LayerSpec], pp: int,
     the activation gradient in IG (both on scope ``"pp"``).
     """
     expanded: List[LayerSpec] = []
-    for l in layers:
-        if l.repeat == 1:
-            expanded.append(l)
+    for ly in layers:
+        if ly.repeat == 1:
+            expanded.append(ly)
         else:
-            for _ in range(l.repeat):
+            for _ in range(ly.repeat):
                 expanded.append(dataclasses.replace(
-                    l, repeat=1,
-                    comm_fwd=list(l.comm_fwd), comm_ig=list(l.comm_ig),
-                    comm_wg=list(l.comm_wg)))
+                    ly, repeat=1,
+                    comm_fwd=list(ly.comm_fwd), comm_ig=list(ly.comm_ig),
+                    comm_wg=list(ly.comm_wg)))
     if pp > len(expanded):
         raise InfeasibleStrategyError(
             f"pp={pp} exceeds the {len(expanded)} partitionable layers")
-    costs = [_layer_flops(l) for l in expanded]
+    costs = [_layer_flops(ly) for ly in expanded]
     remaining = sum(costs)
     n = len(expanded)
     idx = 0
@@ -522,7 +532,7 @@ def _partition_stages(layers: List[LayerSpec], pp: int,
         idx = j
     for k in range(idx, n):              # numerical-edge leftovers
         expanded[k].stage = pp - 1
-    stages = [[l for l in expanded if l.stage == s] for s in range(pp)]
+    stages = [[ly for ly in expanded if ly.stage == s] for s in range(pp)]
     for s in range(pp - 1):
         stages[s][-1].comm_fwd.append(
             CommEvent("p2p", boundary_bytes, "pp", blocking=True))
@@ -597,8 +607,8 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
                 _attention_layer("enc_self_attn", cfg, b_local, src, src, mp),
                 _ffn_layer("enc_ffn", cfg, t_src, mp),
             ]
-            for l in enc:
-                l.repeat = cfg.encdec.encoder_layers
+            for ly in enc:
+                ly.repeat = cfg.encdec.encoder_layers
             layers += enc
         dec = [
             _norm_layer("dec_norm", cfg, t_tgt),
@@ -606,8 +616,8 @@ def decompose(cfg: ModelConfig, shape: ShapeConfig, mp: int = 1, dp: int = 1,
             _attention_layer("dec_cross_attn", cfg, b_local, tgt_q, src, mp),
             _ffn_layer("dec_ffn", cfg, t_tgt, mp),
         ]
-        for l in dec:
-            l.repeat = cfg.encdec.decoder_layers
+        for ly in dec:
+            ly.repeat = cfg.encdec.decoder_layers
         layers += dec
         layers.append(out)
     else:
@@ -764,9 +774,9 @@ def decompose_dlrm(dlrm_cfg, global_batch: int, nodes: int) -> Workload:
     _mlp("top_mlp", (top_in,) + dlrm_cfg.top_mlp)
 
     # DP all-reduce for MLP grads only (tables update locally).
-    for l in layers:
-        if l.weight_bytes and not l.name.startswith("embedding"):
-            l.comm_wg.append(CommEvent("all-reduce", l.weight_bytes, "mp", False))
+    for ly in layers:
+        if ly.weight_bytes and not ly.name.startswith("embedding"):
+            ly.comm_wg.append(CommEvent("all-reduce", ly.weight_bytes, "mp", False))
 
     return Workload(name=f"{dlrm_cfg.arch_id}[n{nodes}]", layers=layers,
                     mp=nodes, dp=nodes, per_replica_batch=b_local,

@@ -11,11 +11,10 @@ structure so the LM loss is learnable (quickstart shows it dropping).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -15,7 +15,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag as _bag_kernel

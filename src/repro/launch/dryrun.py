@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, all_cells, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.hlo import RooflineTerms, collective_bytes, model_flops_util
+from repro.core.hlo import RooflineTerms, model_flops_util
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
     abstract_cache,
@@ -45,7 +45,7 @@ from repro.parallel import (
     param_shardings,
     plan_memory,
 )
-from repro.train.train_step import jit_train_step, state_shardings
+from repro.train.train_step import jit_train_step
 from repro.train.optimizer import AdamWConfig
 
 

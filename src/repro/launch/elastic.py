@@ -14,7 +14,6 @@ different healthy-slice size. The pieces that make this work live in:
 
 from __future__ import annotations
 
-import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig

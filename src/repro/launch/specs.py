@@ -7,12 +7,12 @@ dry-run can lower+compile full-size models on a 512-device host mesh.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import get_model
 
 I32 = jnp.int32
@@ -60,7 +60,6 @@ def abstract_params(cfg: ModelConfig, dtype=BF16):
 def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, dtype=BF16):
     model = get_model(cfg)
     gb, s = shape.global_batch, shape.seq_len
-    extra = s if cfg.family == "vlm" and cfg.vision else 0
     max_seq = s + (cfg.vision.num_patches if cfg.family == "vlm" else 0)
     if shape.kind == "decode":
         max_seq += 1

@@ -13,7 +13,6 @@ and in the dry-run the models run this path (see DESIGN.md §Kernels).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -158,7 +157,7 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         qblk, qidx = qi  # (b, qb, h, d), scalar block index
 
         def kv_step(carry, ki):
-            acc, m, l = carry
+            acc, m, denom = carry
             kblk, vblk, kidx = ki
             logits = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk)
             logits = logits.astype(jnp.float32) * scale
@@ -173,19 +172,19 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             m_new = jnp.maximum(m, logits.max(axis=-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(logits - m_new[..., None])
-            l_new = l * alpha + p.sum(axis=-1)
+            denom_new = denom * alpha + p.sum(axis=-1)
             pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk)
             acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
-            return (acc_new, m_new, l_new), None
+            return (acc_new, m_new, denom_new), None
 
         acc0 = jnp.zeros((b, h, q_block, d), jnp.float32)
         m0 = jnp.full((b, h, q_block), -jnp.inf, jnp.float32)
-        l0 = jnp.zeros((b, h, q_block), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(
-            kv_step, (acc0, m0, l0),
+        denom0 = jnp.zeros((b, h, q_block), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, denom0),
             (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
              jnp.arange(nk)))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
         return None, out.astype(q.dtype)
 
     qb = qp.reshape(b, nq, q_block, h, d).transpose(1, 0, 2, 3, 4)

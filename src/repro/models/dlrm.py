@@ -38,8 +38,8 @@ def init_params(key, cfg: DLRMConfig, dtype=jnp.float32) -> dict:
 
 
 def _run_mlp(layers, x, final_linear=False):
-    for i, l in enumerate(layers):
-        x = x @ l["w"] + l["b"]
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"] + lyr["b"]
         if not (final_linear and i == len(layers) - 1):
             x = jax.nn.relu(x)
     return x

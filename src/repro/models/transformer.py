@@ -12,7 +12,6 @@ the HLO O(1) in depth. Remat policy is a knob (see ``apply_remat``).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -20,7 +19,6 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.models import common
 from repro.models.common import (
     DEFAULT_DTYPE,
     attention_block,
@@ -157,7 +155,7 @@ def _trunk(params: dict, cfg: ModelConfig, x: jax.Array, *,
         aux_total = jnp.zeros((), jnp.float32)
         kc_out = []
         for j in range(me):
-            sub = jax.tree.map(lambda a: a[j], lp)
+            sub = jax.tree.map(lambda a, j=j: a[j], lp)
             h = rms_norm(x, sub["ln1"], cfg.norm_eps)
             kv = None
             if scanned.get("cache") is not None:

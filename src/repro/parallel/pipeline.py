@@ -12,7 +12,6 @@ automatically — no hand-written backward pipeline.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

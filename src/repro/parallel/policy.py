@@ -17,9 +17,8 @@ This is the paper's methodology closed into the loop: the analytical model
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.core.cluster import V5E_HBM_CAP
 
 

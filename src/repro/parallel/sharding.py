@@ -18,7 +18,7 @@ over the intra-pod "data" axis — chosen by the memory planner
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

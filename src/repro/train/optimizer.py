@@ -130,7 +130,8 @@ def apply_updates(params, grads, state: dict, cfg: AdamWConfig,
         new_m.append(m2.astype(sdt))
         new_v.append(v2.astype(sdt))
 
-    unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    def unf(leaves):
+        return jax.tree_util.tree_unflatten(treedef, leaves)
     new_state = {"m": unf(new_m), "v": unf(new_v), "step": step}
     if use_master:
         new_state["master"] = unf(new_master)

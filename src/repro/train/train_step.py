@@ -14,7 +14,6 @@ GSPMD all-gathers the data-sharded Adam states to full size instead).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -66,13 +65,13 @@ def make_train_step(cfg: ModelConfig, plan: MemoryPlan,
 
             def body(carry, mb):
                 acc_loss, acc_parts, acc_g = carry
-                (l, parts), g = jax.value_and_grad(
+                (mb_loss, parts), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, _constrain_batch(mb))
                 acc_g = jax.tree.map(
                     lambda a, x: a + x.astype(acc_dtype) / m, acc_g, g)
                 acc_parts = jax.tree.map(lambda a, x: a + x / m,
                                          acc_parts, parts)
-                return (acc_loss + l / m, acc_parts, acc_g), None
+                return (acc_loss + mb_loss / m, acc_parts, acc_g), None
 
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, acc_dtype), params)

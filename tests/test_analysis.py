@@ -1,0 +1,484 @@
+"""repro.analysis: rule packs fire on planted violations, stay silent on
+registry objects, and the run_study validate gate never changes records."""
+
+import copy
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.analysis import (
+    AnalysisError,
+    RuleConfig,
+    analyze_cluster,
+    analyze_compiled,
+    analyze_study,
+    analyze_workload,
+    has_errors,
+    list_rules,
+    max_severity,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.configs import get_config, get_dlrm_config
+from repro.configs.base import ShapeConfig
+from repro.core import dse
+from repro.core.cluster import (
+    BASELINE_DGX_A100,
+    CostModel,
+    get_cluster,
+    list_clusters,
+)
+from repro.core.gemm import CommEvent
+from repro.core.study import (
+    ENGINES,
+    Axis,
+    GridSpace,
+    StudySpec,
+    check_path,
+    placement_axis,
+    run_study,
+)
+from repro.core.workload import decompose
+
+SHAPE = ShapeConfig("paper", 2048, 1024, "train")
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return get_config("smollm-135m")
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    return dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)
+
+
+def codes(diags):
+    return sorted({d.code for d in diags})
+
+
+# ===================================================================== #
+# Framework
+# ===================================================================== #
+
+class TestFramework:
+    def test_registry_covers_all_packs(self):
+        packs = {r.pack for r in list_rules()}
+        assert packs == {"workload", "compiled", "study", "cluster"}
+        assert len(list_rules("workload")) == 5
+        assert len(list_rules("compiled")) == 5
+
+    def test_rule_config_disable(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[0].stage = 3
+        assert codes(analyze_workload(wl)) == ["W104"]
+        cfg = RuleConfig(disable=frozenset({"W104"}))
+        assert analyze_workload(wl, config=cfg) == []
+
+    def test_rule_config_severity_override(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[0].comm_fwd.append(
+            CommEvent("all-reduce", 8, "pp", True))
+        cfg = RuleConfig(disable=frozenset({"W104"}),
+                         severity={"W102": "error"})
+        diags = analyze_workload(wl, config=cfg)
+        assert codes(diags) == ["W102"] and has_errors(diags)
+
+    def test_rule_config_rejects_unknown_severity(self):
+        with pytest.raises(ValueError, match="unknown severity"):
+            RuleConfig(severity={"W101": "fatal"})
+
+    def test_max_severity(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        assert max_severity(analyze_workload(wl)) is None
+        wl.layers[0].stage = 9
+        assert max_severity(analyze_workload(wl)) == "error"
+
+
+# ===================================================================== #
+# W1xx: workload rules
+# ===================================================================== #
+
+class TestWorkloadRules:
+    def test_clean_decompositions(self, small_cfg):
+        for kw in (dict(mp=2, dp=4), dict(mp=1, dp=4, pp=2),
+                   dict(mp=2, dp=2, pp=2, ep=1)):
+            wl = decompose(small_cfg, SMALL_SHAPE, **kw)
+            assert analyze_workload(wl) == []
+
+    def test_w101_bad_scope(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[1].comm_fwd.append(
+            CommEvent("all-reduce", 100, "xx", False))
+        diags = analyze_workload(wl)
+        assert codes(diags) == ["W101"] and has_errors(diags)
+
+    def test_w102_degenerate_group(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[0].comm_wg.append(
+            CommEvent("all-reduce", 64, "ep", False))  # ep=1 -> group of mp=2
+        wl2 = decompose(small_cfg, SMALL_SHAPE, mp=1, dp=8)
+        wl2.layers[0].comm_fwd.append(
+            CommEvent("all-gather", 64, "mp", True))   # mp=1 -> no-op
+        assert analyze_workload(wl) == []
+        diags = analyze_workload(wl2)
+        assert codes(diags) == ["W102"]
+        assert all(d.severity == "warning" for d in diags)
+
+    def test_w103_conservation_violation(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4, pp=2)
+        other = decompose(small_cfg, ShapeConfig("big", 1024, 64, "train"),
+                          mp=2, dp=4)
+        assert codes(analyze_workload(wl, baseline=other)) == ["W103"]
+
+    def test_w103_holds_across_factorizations(self, small_cfg):
+        base = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=8)
+        for kw in (dict(mp=2, dp=8, pp=1), dict(mp=2, dp=4, pp=2),
+                   dict(mp=2, dp=4, ep=2)):
+            wl = decompose(small_cfg, SMALL_SHAPE, **kw)
+            assert analyze_workload(wl, baseline=base) == []
+
+    def test_w103_skips_mismatched_baselines(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        other_mp = decompose(small_cfg, SMALL_SHAPE, mp=4, dp=2)
+        assert analyze_workload(wl, baseline=other_mp) == []
+
+    def test_w104_orphan_stage(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[0].stage = 5
+        diags = analyze_workload(wl)
+        assert codes(diags) == ["W104"] and has_errors(diags)
+
+    def test_w104_missing_stage(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=1, dp=4, pp=2)
+        for layer in wl.layers:
+            layer.stage = 0
+        assert "W104" in codes(analyze_workload(wl))
+
+    def test_w104_p2p_off_boundary(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=1, dp=4, pp=2)
+        wl.layers[1].comm_fwd.append(CommEvent("p2p", 64, "pp", True))
+        assert codes(analyze_workload(wl)) == ["W104"]
+
+    def test_w105_negative_bytes(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[0].comm_ig.append(CommEvent("all-reduce", -5, "dp", False))
+        diags = analyze_workload(wl)
+        assert codes(diags) == ["W105"] and has_errors(diags)
+
+    def test_w105_bad_layer_fields(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)
+        wl.layers[2].weight_bytes = float("inf")
+        wl.layers[3].repeat = 0
+        diags = analyze_workload(wl)
+        assert codes(diags) == ["W105"] and len(diags) >= 2
+
+
+# ===================================================================== #
+# C1xx: compiled rules
+# ===================================================================== #
+
+class TestCompiledRules:
+    @pytest.fixture(scope="class")
+    def pair(self, small_cfg):
+        wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4, pp=2)
+        return wl, wl.compiled()
+
+    def test_clean_lowering(self, pair):
+        wl, cw = pair
+        assert analyze_compiled(cw) == []
+        assert analyze_compiled(cw, workload=wl) == []
+
+    def test_c101_missing_stage(self, pair):
+        wl, cw = pair
+        mut = copy.deepcopy(cw)
+        mut.stages.pop()
+        assert "C101" in codes(analyze_compiled(mut, workload=wl))
+
+    def test_c102_dropped_event(self, pair):
+        wl, cw = pair
+        mut = copy.deepcopy(cw)
+        p = mut.stages[0].fwd
+        for field in ("ev_pos", "ev_comm", "ev_blocking", "ev_scope",
+                      "ev_phase"):
+            setattr(p, field, getattr(p, field)[:-1])
+        diags = analyze_compiled(mut, workload=wl)
+        assert "C102" in codes(diags) and has_errors(diags)
+
+    def test_c103_mutated_bytes(self, pair):
+        wl, cw = pair
+        mut = copy.deepcopy(cw)
+        mut.stages[0].comm_sizes[0] += 7.0
+        assert "C103" in codes(analyze_compiled(mut, workload=wl))
+
+    def test_c104_mutated_counts(self, pair):
+        wl, cw = pair
+        mut = copy.deepcopy(cw)
+        mut.stages[0].counts[0, 0] += 1
+        assert codes(analyze_compiled(mut, workload=wl)) == ["C104"]
+
+    def test_c105_mutated_optimizer_totals(self, pair):
+        wl, cw = pair
+        mut = copy.deepcopy(cw)
+        mut.stages[1].dense_w += 100.0
+        assert codes(analyze_compiled(mut, workload=wl)) == ["C105"]
+
+    def test_registry_models_lower_cleanly(self):
+        for arch in ("granite-moe-3b-a800m", "mamba2-780m"):
+            cfg = get_config(arch)
+            wl = decompose(cfg, SMALL_SHAPE, mp=2, dp=2, ep=2)
+            assert analyze_compiled(wl.compiled()) == []
+
+
+# ===================================================================== #
+# S1xx: study rules + the construction-time path check (satellite 1)
+# ===================================================================== #
+
+class TestStudyRules:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_typo_path_fails_at_construction(self, engine, small_cfg,
+                                             small_cluster):
+        """The misspelled dotted path raises the available-fields error
+        before run_study can fork a worker, under either engine."""
+        with pytest.raises(AttributeError,
+                           match="no field 'peak_flpos'.*available"):
+            spec = StudySpec(
+                name="typo", model=small_cfg, shape=SMALL_SHAPE,
+                cluster=small_cluster, strategies=(2, 4),
+                axes=[Axis("flops", (0.5, 2.0), path="node.peak_flpos",
+                           mode="scale")])
+            run_study(spec, engine=engine)
+
+    def test_nested_typo_path(self, small_cfg, small_cluster):
+        with pytest.raises(AttributeError, match="no field 'intra_bandwith'"):
+            StudySpec(name="typo", model=small_cfg, shape=SMALL_SHAPE,
+                      cluster=small_cluster,
+                      axes=[Axis("bw", (1.0,),
+                                 path="topology.intra_bandwith")])
+
+    def test_path_behind_apply_axis_is_deferred(self, small_cfg,
+                                                small_cluster):
+        # An apply axis may swap the cluster type, so a later path can only
+        # be resolved at run time — construction must not reject it.
+        spec = StudySpec(
+            name="deferred", model=small_cfg, shape=SMALL_SHAPE,
+            cluster=small_cluster,
+            axes=[Axis("swap", (1,), apply=lambda cl, _: cl),
+                  Axis("maybe", (1.0,), path="node.peak_flpos")])
+        assert spec.axes[1].path == "node.peak_flpos"
+
+    def test_check_path_resolves_valid_paths(self, small_cluster):
+        check_path(small_cluster, "node.peak_flops")
+        check_path(small_cluster, "topology.intra_bw")
+        with pytest.raises(TypeError, match="non-dataclass"):
+            check_path(small_cluster, "num_nodes.nope")
+
+    def test_s101_on_mutated_axes(self, small_cfg, small_cluster):
+        spec = StudySpec(name="s", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster, strategies=(2, 4))
+        spec.axes = [Axis("bad", (1.0,), path="node.nope")]
+        assert codes(analyze_study(spec)) == ["S101"]
+
+    def test_s102_metric_shadows_record_column(self, small_cfg,
+                                               small_cluster):
+        spec = StudySpec(name="s", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster, strategies=(2, 4),
+                         metrics={"total": lambda ctx: 0.0})
+        diags = analyze_study(spec)
+        assert codes(diags) == ["S102"] and has_errors(diags)
+
+    def test_s103_unknown_placement_value(self, small_cfg, small_cluster):
+        spec = StudySpec(name="s", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster, strategies=(2, 4),
+                         axes=[placement_axis(("paper", "not-a-placement"))])
+        assert codes(analyze_study(spec)) == ["S103"]
+
+    def test_s104_empty_strategy_space(self, small_cfg, small_cluster):
+        spec = StudySpec(name="s", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster,
+                         strategies=GridSpace(mp=(3,), dp=(5,)))
+        diags = analyze_study(spec)
+        assert codes(diags) == ["S104"]
+        assert max_severity(diags) == "warning"
+
+    def test_figure_studies_are_clean(self):
+        for name, spec in dse.figure_studies().items():
+            diags = [d for d in analyze_study(spec) if d.severity == "error"]
+            assert diags == [], f"{name}: {diags}"
+
+
+# ===================================================================== #
+# K1xx: cluster rules
+# ===================================================================== #
+
+class TestClusterRules:
+    def test_registry_clusters_have_no_errors(self):
+        for name in list_clusters():
+            diags = analyze_cluster(get_cluster(name))
+            assert not has_errors(diags), f"{name}: {diags}"
+
+    def test_k101_ragged_pod(self, small_cluster):
+        ragged = dataclasses.replace(small_cluster, num_nodes=12)
+        diags = analyze_cluster(ragged)
+        assert codes(diags) == ["K101"]
+        assert max_severity(diags) == "warning"
+
+    def test_k102_inverted_hierarchy(self, small_cluster):
+        topo = dataclasses.replace(
+            small_cluster.topology,
+            inter_bw=small_cluster.topology.intra_bw * 4)
+        assert codes(analyze_cluster(
+            small_cluster.with_topology(topo))) == ["K102"]
+
+    def test_k103_negative_price(self, small_cluster):
+        bad = small_cluster.with_cost(CostModel(usd_per_node=-1.0))
+        diags = analyze_cluster(bad)
+        assert codes(diags) == ["K103"] and has_errors(diags)
+
+    def test_k103_missing_cost_is_info(self, small_cluster):
+        diags = analyze_cluster(small_cluster.with_cost(None))
+        assert codes(diags) == ["K103"]
+        assert max_severity(diags) == "info"
+
+    def test_k104_zero_flops(self, small_cluster):
+        bad = small_cluster.with_node(
+            dataclasses.replace(small_cluster.node, peak_flops=0.0))
+        diags = analyze_cluster(bad)
+        assert codes(diags) == ["K104"] and has_errors(diags)
+
+    def test_k104_em_capacity_without_bandwidth(self, small_cluster):
+        node = small_cluster.node.with_expansion(cap=1e12, bw=0.0)
+        assert codes(analyze_cluster(
+            small_cluster.with_node(node))) == ["K104"]
+
+
+# ===================================================================== #
+# run_study(validate=...)
+# ===================================================================== #
+
+class TestValidateGate:
+    def _bad_spec(self, small_cfg, small_cluster):
+        spec = StudySpec(name="bad", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster, strategies=(2, 4))
+        spec.axes = [Axis("bad", (1.0,), path="node.nope")]
+        return spec
+
+    def test_error_mode_raises(self, small_cfg, small_cluster):
+        with pytest.raises(AnalysisError) as exc:
+            run_study(self._bad_spec(small_cfg, small_cluster),
+                      validate="error")
+        assert any(d.code == "S101" for d in exc.value.diagnostics)
+
+    def test_warn_mode_warns_and_runs(self, small_cfg, small_cluster):
+        spec = StudySpec(name="empty", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster,
+                         strategies=GridSpace(mp=(3,), dp=(5,)))
+        with pytest.warns(UserWarning, match="S104"):
+            res = run_study(spec, validate="warn")
+        assert len(res) == 0
+
+    def test_off_mode_is_silent(self, small_cfg, small_cluster):
+        spec = StudySpec(name="empty", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster,
+                         strategies=GridSpace(mp=(3,), dp=(5,)))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            run_study(spec, validate="off")
+
+    def test_unknown_mode_rejected(self, small_cfg, small_cluster):
+        spec = StudySpec(name="s", model=small_cfg, shape=SMALL_SHAPE,
+                         cluster=small_cluster, strategies=(2, 4))
+        with pytest.raises(ValueError, match="validate"):
+            run_study(spec, validate="loud")
+
+
+class TestValidateEquivalence:
+    """validate= must be purely observational: identical records with the
+    gate on and off, across every paper-figure study (reduced grids)."""
+
+    @staticmethod
+    def figure_specs():
+        t = get_config("transformer-1t")
+        d = get_dlrm_config()
+        base = BASELINE_DGX_A100
+        return {
+            "fig8": dse.mpdp_study(t, SHAPE, base),
+            "fig9": dse.memory_expansion_study(
+                t, SHAPE, base, em_bandwidths_gbs=(100, 1000, 2000),
+                strategies=[(32, 32), (8, 128)]),
+            "fig10": dse.compute_scaling_study(
+                t, SHAPE, base, 8, 128, compute_factors=(0.5, 1.0, 2.0),
+                em_bandwidths_gbs=(500, 2000)),
+            "fig11": dse.network_scaling_study(
+                t, SHAPE, base, 64, 16, intra_factors=(0.5, 2.0),
+                inter_factors=(1.0, 2.0)),
+            "fig12": dse.bandwidth_rebalance_study(
+                t, SHAPE, base, 64, 16, ratios=(1, 6, 9.6, 16)),
+            "fig13a": dse.dlrm_cluster_size_study(
+                d, base, global_batch=65536, node_counts=(64, 16, 8)),
+            "fig13b": dse.dlrm_memory_expansion_study(
+                d, base, global_batch=65536, em_bandwidths_gbs=(500, 2000),
+                nodes_per_instance_opts=(64, 8)),
+        }
+
+    @pytest.mark.parametrize("fig", ["fig8", "fig9", "fig10", "fig11",
+                                     "fig12", "fig13a", "fig13b"])
+    def test_records_identical(self, fig):
+        spec = self.figure_specs()[fig]
+        off = run_study(spec, validate="off")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            on = run_study(spec, validate="warn")
+        assert off.records == on.records
+
+
+# ===================================================================== #
+# CLI
+# ===================================================================== #
+
+class TestCli:
+    def test_subset_sweep_exits_zero(self, capsys):
+        rc = analysis_main(["--models", "smollm-135m", "--clusters", "dojo"])
+        assert rc == 0
+        assert "OK" in capsys.readouterr().out
+
+    def test_json_report(self, tmp_path, capsys):
+        out = tmp_path / "report.json"
+        rc = analysis_main(["--models", "smollm-135m", "--clusters", "dojo",
+                            "--json", str(out)])
+        assert rc == 0
+        report = json.loads(out.read_text())
+        assert report["errors"] == 0
+        assert report["models"] == ["smollm-135m"]
+
+    def test_list_rules(self, capsys):
+        assert analysis_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for code in ("W101", "C103", "S101", "K104"):
+            assert code in out
+
+    def test_error_findings_exit_nonzero(self, monkeypatch, capsys):
+        from repro.analysis import Diagnostic
+        from repro.analysis import __main__ as cli
+        monkeypatch.setattr(cli, "sweep", lambda *a, **k: [
+            Diagnostic("W101", "error", "somewhere", "planted")])
+        rc = cli.main(["--models", "smollm-135m", "--clusters", "dojo"])
+        assert rc == 1
+        assert "W101" in capsys.readouterr().out
+
+    def test_disable_flag(self, monkeypatch):
+        from repro.analysis import __main__ as cli
+        captured = {}
+
+        def fake_sweep(models, clusters, config=None):
+            captured["config"] = config
+            return []
+
+        monkeypatch.setattr(cli, "sweep", fake_sweep)
+        rc = cli.main(["--models", "smollm-135m", "--clusters", "dojo",
+                       "--disable", "W102", "--severity", "K101=error"])
+        assert rc == 0
+        assert not captured["config"].enabled("W102")
+        assert captured["config"].severity["K101"] == "error"

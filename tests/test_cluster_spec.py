@@ -15,7 +15,6 @@ from repro.configs.base import ShapeConfig
 from repro.core.cluster import (
     B_HYBRID_EM,
     BASELINE_DGX_A100,
-    DOJO,
     TABLE_III_CLUSTERS,
     ClusterSpec,
     CostModel,

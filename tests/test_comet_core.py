@@ -11,14 +11,11 @@ from repro.core.cluster import (
     BASELINE_DGX_A100,
     DOJO,
     TPU_V4,
-    HierarchicalSwitch,
     NodeConfig,
-    SingleSwitch,
-    Torus,
     get_cluster,
 )
 from repro.core.collectives import CollectiveModel, placement
-from repro.core.gemm import CommEvent, Gemm, gemm_traffic_bytes
+from repro.core.gemm import Gemm, gemm_traffic_bytes
 from repro.core.memory import (
     effective_memory_bw,
     hybrid_bandwidth,

@@ -1,0 +1,109 @@
+"""repro.parallel.compression: int8 error-feedback gradient reduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.compression import (
+    compressed_psum,
+    compression_ratio,
+    dequantize_int8,
+    quantize_int8,
+)
+
+
+class TestQuantize:
+    def test_roundtrip_error_bound(self, rng):
+        x = jax.random.normal(rng, (256,)) * 3.0
+        q, scale = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+        # Round-to-nearest on a symmetric grid: at most half a step off.
+        assert err.max() <= float(scale) / 2 + 1e-7
+
+    def test_preserves_extremes(self):
+        x = jnp.array([-4.0, 0.0, 4.0])
+        q, scale = quantize_int8(x)
+        assert int(q[0]) == -127 and int(q[2]) == 127
+        np.testing.assert_allclose(np.asarray(dequantize_int8(q, scale)),
+                                   np.asarray(x), rtol=1e-6)
+
+    def test_zero_tensor_is_stable(self):
+        q, scale = quantize_int8(jnp.zeros((8,)))
+        assert float(jnp.abs(dequantize_int8(q, scale)).max()) == 0.0
+
+
+class TestCompressedPsum:
+    N = 4
+
+    def _psum(self, xs, errors=None):
+        """Run compressed_psum across a vmapped 'dp' axis of size N."""
+        if errors is None:
+            fn = jax.vmap(lambda x: compressed_psum(x, "dp"),
+                          axis_name="dp")
+            return fn(xs)
+        fn = jax.vmap(lambda x, e: compressed_psum(x, "dp", e),
+                      axis_name="dp")
+        return fn(xs, errors)
+
+    def test_matches_exact_sum(self, rng):
+        xs = jax.random.normal(rng, (self.N, 64))
+        total, _ = self._psum(xs)
+        exact = np.asarray(xs).sum(axis=0)
+        scale = np.abs(np.asarray(xs)).max() / 127.0
+        np.testing.assert_allclose(np.asarray(total[0]), exact,
+                                   atol=self.N * scale)
+
+    def test_all_shards_receive_same_total(self, rng):
+        xs = jax.random.normal(rng, (self.N, 32))
+        total, _ = self._psum(xs)
+        for i in range(1, self.N):
+            np.testing.assert_array_equal(np.asarray(total[0]),
+                                          np.asarray(total[i]))
+
+    def test_new_error_is_quantization_residual(self, rng):
+        xs = jax.random.normal(rng, (self.N, 32))
+        _, new_err = self._psum(xs)
+        for i in range(self.N):
+            q, scale = quantize_int8(xs[i])
+            expect = np.asarray(xs[i] - dequantize_int8(q, scale))
+            np.testing.assert_allclose(np.asarray(new_err[i]), expect,
+                                       atol=1e-6)
+
+    def test_error_feedback_removes_accumulated_bias(self, rng):
+        """Summing the same gradient for many steps: with error feedback
+        the accumulated output tracks the accumulated true sum to within
+        one quantization step; without it the bias grows linearly."""
+        xs = jax.random.normal(rng, (self.N, 16)) * 0.37
+        exact = np.asarray(xs).sum(axis=0)
+        steps = 50
+
+        acc_fb = np.zeros(16)
+        errors = jnp.zeros_like(xs)
+        for _ in range(steps):
+            total, errors = self._psum(xs, errors)
+            acc_fb += np.asarray(total[0])
+
+        total_nofb, _ = self._psum(xs)
+        acc_nofb = steps * np.asarray(total_nofb[0])
+
+        err_fb = np.abs(acc_fb - steps * exact).max()
+        err_nofb = np.abs(acc_nofb - steps * exact).max()
+        one_step = self.N * np.abs(np.asarray(xs)).max() / 127.0
+        assert err_fb <= 2 * one_step
+        # The uncompensated bias is the per-step error amplified by the
+        # step count; feedback must beat it decisively.
+        if err_nofb > 4 * one_step:
+            assert err_fb < err_nofb / 4
+
+    def test_dtype_preserved(self, rng):
+        xs = jax.random.normal(rng, (self.N, 8)).astype(jnp.bfloat16)
+        total, _ = self._psum(xs)
+        assert total.dtype == jnp.bfloat16
+
+
+class TestCompressionRatio:
+    @pytest.mark.parametrize("dtype,ratio", [
+        (jnp.bfloat16, 2.0), (jnp.float32, 4.0), (jnp.float16, 2.0)])
+    def test_wire_ratio(self, dtype, ratio):
+        assert compression_ratio(dtype) == ratio

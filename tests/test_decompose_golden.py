@@ -53,18 +53,18 @@ def fingerprint(wl):
         "per_replica_batch": wl.per_replica_batch,
         "seq_len": wl.seq_len,
         "layers": [{
-            "name": l.name,
-            "repeat": l.repeat,
-            "weight_bytes": l.weight_bytes,
-            "act_out_bytes": l.act_out_bytes,
-            "optim_bytes": l.optim_bytes,
-            "fwd": [_op_fp(o) for o in l.fwd],
-            "ig": [_op_fp(o) for o in l.ig],
-            "wg": [_op_fp(o) for o in l.wg],
-            "comm_fwd": [_comm_fp(e) for e in l.comm_fwd],
-            "comm_ig": [_comm_fp(e) for e in l.comm_ig],
-            "comm_wg": [_comm_fp(e) for e in l.comm_wg],
-        } for l in wl.layers],
+            "name": ly.name,
+            "repeat": ly.repeat,
+            "weight_bytes": ly.weight_bytes,
+            "act_out_bytes": ly.act_out_bytes,
+            "optim_bytes": ly.optim_bytes,
+            "fwd": [_op_fp(o) for o in ly.fwd],
+            "ig": [_op_fp(o) for o in ly.ig],
+            "wg": [_op_fp(o) for o in ly.wg],
+            "comm_fwd": [_comm_fp(e) for e in ly.comm_fwd],
+            "comm_ig": [_comm_fp(e) for e in ly.comm_ig],
+            "comm_wg": [_comm_fp(e) for e in ly.comm_wg],
+        } for ly in wl.layers],
     }
 
 
@@ -132,9 +132,9 @@ class TestPpEpDecomposition:
         pp = 4
         wl = decompose(cfg, PAPER_SHAPE, mp=8, dp=32, pp=pp)
         stages = wl.stage_layers()
-        fwd_p2p = [e for l in wl.layers for e in l.comm_fwd
+        fwd_p2p = [e for ly in wl.layers for e in ly.comm_fwd
                    if e.collective == "p2p"]
-        ig_p2p = [e for l in wl.layers for e in l.comm_ig
+        ig_p2p = [e for ly in wl.layers for e in ly.comm_ig
                   if e.collective == "p2p"]
         assert len(fwd_p2p) == len(ig_p2p) == pp - 1
         assert all(e.scope == "pp" and e.blocking for e in fwd_p2p + ig_p2p)
@@ -164,11 +164,11 @@ class TestPpEpDecomposition:
     def test_ep_emits_all_to_all_on_ep_scope(self):
         moe = get_config("granite-moe-3b-a800m")
         wl = decompose(moe, SHAPES["train_4k"], mp=2, dp=2, ep=2)
-        a2a = [e for l in wl.layers for e in l.comm_fwd
+        a2a = [e for ly in wl.layers for e in ly.comm_fwd
                if e.collective == "all-to-all"]
         assert a2a and all(e.scope == "ep" for e in a2a)
         # Expert gradients sync over DP only; dense ones over DP x EP.
-        scopes = {e.scope for l in wl.layers for e in l.comm_wg}
+        scopes = {e.scope for ly in wl.layers for e in ly.comm_wg}
         assert scopes == {"dp", "edp"}
 
     def test_ep_divides_per_replica_batch(self):

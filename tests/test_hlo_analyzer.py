@@ -2,10 +2,9 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.core.hlo import RooflineTerms, collective_bytes, shape_bytes
+from repro.core.hlo import RooflineTerms, shape_bytes
 from repro.core.hlo_analyzer import analyze_hlo
 
 N = 256

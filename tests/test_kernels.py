@@ -111,14 +111,14 @@ class TestRmsNorm:
 
 
 class TestEmbeddingBag:
-    @pytest.mark.parametrize("t,r,e,b,l", [
+    @pytest.mark.parametrize("t,r,e,b,n", [
         (4, 50, 16, 3, 7),
         (2, 128, 32, 8, 1),
         (8, 16, 8, 2, 16),
     ])
-    def test_matches(self, t, r, e, b, l):
+    def test_matches(self, t, r, e, b, n):
         tbl = jax.random.normal(KEY, (t, r, e), jnp.float32)
-        idx = jax.random.randint(KEY, (b, t, l), 0, r)
+        idx = jax.random.randint(KEY, (b, t, n), 0, r)
         out = embedding_bag(tbl, idx, interpret=True)
         want = ref.embedding_bag_ref(tbl, idx)
         np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,101 @@
+"""repro.launch.elastic: restore a checkpoint onto a different mesh.
+
+Multi-device behavior runs in a subprocess (the main pytest process must
+keep seeing one device) — same harness as tests/test_distributed.py."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(script: str, n: int = 8) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+
+
+def check(proc):
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+
+
+def test_remesh_restores_state_on_new_mesh():
+    """Save under a (4 data, 1 model) mesh, restart on (2 data, 2 model):
+    remesh_state must return bit-identical leaves, sharded for the NEW
+    mesh, plus the step metadata."""
+    check(run_devices("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_config
+        from repro.launch.elastic import remesh_state
+        from repro.parallel import build_mesh, plan_memory
+        from repro.train.train_step import init_train_state
+
+        cfg = get_config("smollm-135m", reduced=True)
+        plan = plan_memory(cfg, 1, 4)
+        state = init_train_state(cfg, plan, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d, interval=1, keep=2, async_save=False)
+        assert mgr.maybe_save(3, state, extra={"tokens_seen": 123})
+
+        new_plan = plan_memory(cfg, 2, 2)
+        new_mesh = build_mesh((2, 2), ("data", "model"))
+        template = jax.eval_shape(lambda: state)
+        with new_mesh:
+            restored, extra, sh = remesh_state(cfg, new_plan, mgr,
+                                               template, new_mesh)
+
+        assert extra == {"tokens_seen": 123}
+
+        # Bit-identical leaves...
+        old_flat = jax.tree_util.tree_leaves(state)
+        new_flat = jax.tree_util.tree_leaves(restored)
+        assert len(old_flat) == len(new_flat)
+        for a, b in zip(old_flat, new_flat):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # ...placed under the new mesh's shardings.
+        sh_flat = jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+        for leaf, want in zip(new_flat, sh_flat):
+            assert leaf.sharding.mesh.shape == new_mesh.shape, leaf.sharding
+            assert leaf.sharding.is_equivalent_to(want, leaf.ndim), (
+                leaf.sharding, want)
+    """))
+
+
+def test_remesh_without_checkpoint_raises():
+    """A fresh manager has nothing to restore — the launcher must see the
+    FileNotFoundError, not a silent cold start."""
+    check(run_devices("""
+        import tempfile
+        import jax, jax.numpy as jnp
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_config
+        from repro.launch.elastic import remesh_state
+        from repro.parallel import build_mesh, plan_memory
+        from repro.train.train_step import init_train_state
+
+        cfg = get_config("smollm-135m", reduced=True)
+        plan = plan_memory(cfg, 2, 2)
+        state = init_train_state(cfg, plan, jax.random.PRNGKey(0),
+                                 dtype=jnp.float32)
+        mgr = CheckpointManager(tempfile.mkdtemp(), async_save=False)
+        mesh = build_mesh((2, 2), ("data", "model"))
+        template = jax.eval_shape(lambda: state)
+        try:
+            with mesh:
+                remesh_state(cfg, plan, mgr, template, mesh)
+        except FileNotFoundError:
+            pass
+        else:
+            raise AssertionError("expected FileNotFoundError")
+    """))

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import get_model
 
 KEY = jax.random.PRNGKey(0)

@@ -34,7 +34,7 @@ from repro.core.placement import (
     get_placement,
     list_placements,
 )
-from repro.core.simulator import group_breakdowns, simulate_iteration
+from repro.core.simulator import simulate_iteration
 from repro.core.study import (
     Axis,
     GridSpace,

@@ -15,7 +15,7 @@ import legacy_dse_reference as legacy
 from repro.configs import get_config, get_dlrm_config
 from repro.configs.base import ShapeConfig
 from repro.core import dse
-from repro.core.cluster import BASELINE_DGX_A100, NodeConfig
+from repro.core.cluster import BASELINE_DGX_A100
 from repro.core.study import (
     Axis,
     ExplicitSpace,
