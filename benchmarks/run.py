@@ -314,6 +314,37 @@ def _rows_placement() -> List[Row]:
     return rows
 
 
+def _rows_serving() -> List[Row]:
+    """ISSUE 7 tentpole: serving-fleet DSE — colocated vs disaggregated
+    prefill/decode goodput-per-dollar over the em_pod_frac x rate grid,
+    plus the study's wall-clock."""
+    t0 = time.monotonic()
+    ranked = dse.serving_ranking(processes=PROCESSES)
+    dt = time.monotonic() - t0
+    rows = [("serving", "study", "wallclock_s", round(dt, 1),
+             f"{len(ranked)} feasible cells")]
+    top = ranked[0] if ranked else None
+    if top is not None:
+        rows.append(("serving", "best", "cell",
+                     f"em{top['em_pod_frac']}_rate{int(top['rate'])}_"
+                     f"{top['placement']}",
+                     "disaggregated should top goodput/$ at high rate"))
+    best: dict = {}
+    for r in ranked:   # ranked best-first: first hit per key wins
+        best.setdefault((r["rate"], r["placement"]), r)
+    for (rate, pl), r in sorted(best.items()):
+        rows.append(("serving", f"rate{int(rate)}_{pl}",
+                     "goodput_per_tco_usd",
+                     f"{r['goodput_per_dollar']:.3e}",
+                     "colocated prefill stalls blow the TPOT SLO here"
+                     if pl == "colocated" and rate == max(
+                         k[0] for k in best) else ""))
+        rows.append(("serving", f"rate{int(rate)}_{pl}", "tpot_ms",
+                     round(r["tpot"] * 1e3, 1),
+                     f"em_pod_frac={r['em_pod_frac']}"))
+    return rows
+
+
 def _rows_tco() -> List[Row]:
     """Beyond paper: heterogeneous A100+EM pod mix ranked perf-per-dollar
     (§V-D's qualitative perf/$ argument, quantified)."""
@@ -345,6 +376,7 @@ BENCHES = {
     "fig15": _rows_fig15,
     "pp_ep": _rows_pp_ep,
     "placement": _rows_placement,
+    "serving": _rows_serving,
     "tco": _rows_tco,
     "v5e-comet": _rows_v5e_archs,
 }
@@ -411,6 +443,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
     t_comp_p, comp_p = best_of(reps, engine="compiled", processes=processes)
     assert comp.records == comp_p.records, \
         "compiled engine: fork and serial records differ"
+    serving = _serving_trajectory(smoke=smoke)
     return {
         "bench": "fig15-transformer" + ("-smoke" if smoke else ""),
         "cells": len(ref),
@@ -425,6 +458,33 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "compiled_procs_speedup_vs_reference_procs":
             round(t_ref_p / t_comp_p, 2),
         "max_rel_err": _max_rel_err(ref, comp),
+        "serving": serving,
+    }
+
+
+def _serving_trajectory(smoke: bool = False) -> dict:
+    """Serving leg of the perf artifact: colocated vs disaggregated
+    goodput-per-dollar at the grid's top rate, plus wall-clock.  The CI
+    smoke gate asserts both placements produce goodput and the study
+    stays fast."""
+    kwargs = (dict(em_pod_fractions=(0.0, 0.5), rates=(120.0, 440.0),
+                   num_requests=800) if smoke else {})
+    t0 = time.monotonic()
+    ranked = dse.serving_ranking(**kwargs)
+    dt = time.monotonic() - t0
+    top_rate = max(r["rate"] for r in ranked) if ranked else 0.0
+
+    def best(placement: str) -> float:
+        return max((r["goodput_per_dollar"] for r in ranked
+                    if r["placement"] == placement
+                    and r["rate"] == top_rate), default=0.0)
+
+    return {
+        "wallclock_s": round(dt, 3),
+        "cells": len(ranked),
+        "top_rate": top_rate,
+        "colocated_goodput_per_dollar": best("colocated"),
+        "disaggregated_goodput_per_dollar": best("disaggregated"),
     }
 
 

@@ -1,0 +1,45 @@
+"""Serving-fleet DSE: when does prefill/decode disaggregation pay?
+
+A serving replica runs two phases on opposite ends of the roofline —
+prefill (compute-bound prompt pass) and decode (bandwidth-bound, one
+token per KV slot per tick).  Colocated replicas (the actual
+``repro.serve.engine`` behavior) stall their whole decode batch for
+every admission's prefill, so past a traffic knee the time-per-output-
+token blows through the SLO even though raw capacity remains; a
+disaggregated fleet dedicates pods to prefill and pods to decode (KV
+caches handed over the pod fabric) and keeps decode at pure-tick
+cadence.
+
+This example sweeps ``em_pod_frac x arrival rate x placement`` over a
+small mixed B0 (plain) + B1 (memory-expanded) fleet serving
+internlm2-20b under a {TTFT <= 1s, TPOT <= 35ms} SLO, and ranks by
+goodput-per-TCO-dollar.
+
+Run: PYTHONPATH=src python examples/serving_dse.py
+"""
+
+from repro.core import dse
+
+ranked = dse.serving_ranking()
+best = {}
+for r in ranked:                       # best-first: first hit per key wins
+    best.setdefault((r["em_pod_frac"], r["rate"], r["placement"]), r)
+
+print("=== internlm2-20b on a 4-pod B0+B1 fleet, SLO: TTFT 1s / TPOT 35ms ===")
+print(f"{'em_frac':>8}{'rate':>7}{'placement':>15}{'goodput':>9}"
+      f"{'tpot_ms':>9}{'ttft_p99':>10}{'goodput/$':>12}")
+for (frac, rate, pl), r in sorted(best.items()):
+    print(f"{frac:>8}{rate:>7.0f}{pl:>15}{r['goodput']:>9.1f}"
+          f"{r['tpot'] * 1e3:>9.1f}{r['ttft_p99']:>10.3f}"
+          f"{r['goodput_per_dollar']:>12.3e}")
+
+top = ranked[0]
+print(f"\nWinner: {top['placement']} at {top['rate']:.0f} req/s on a "
+      f"{top['em_pod_frac']:.0%}-EM fleet — {top['goodput']:.0f} good "
+      f"req/s at {top['tpot'] * 1e3:.0f}ms TPOT.")
+print("Reading: at low rates the placements tie (prefill stalls are "
+      "absorbed by idle ticks).  At the top rate the colocated fleet's "
+      "admission stalls push TPOT past the SLO and its goodput collapses, "
+      "while disaggregated decode pods never stall; a single EM decode "
+      "pod (em_frac=0.25, auto phase plan) shows the opposite failure — "
+      "decode-starved, every slot saturated, TPOT explodes instead.")

@@ -1,13 +1,15 @@
 """Static analysis over COMET IR: workloads, compiled workloads, studies,
 clusters — checked before anything is simulated.
 
-Four rule packs (codes grouped by hundreds digit):
+Five rule packs (codes grouped by hundreds digit):
 
 * ``W1xx`` (:mod:`repro.analysis.rules_workload`) — Workload invariants,
 * ``C1xx`` (:mod:`repro.analysis.rules_compiled`) — CompiledWorkload vs.
   its source,
 * ``S1xx`` (:mod:`repro.analysis.rules_study`) — StudySpec executability,
-* ``K1xx`` (:mod:`repro.analysis.rules_cluster`) — cluster well-formedness.
+* ``K1xx`` (:mod:`repro.analysis.rules_cluster`) — cluster well-formedness,
+* ``V1xx`` (:mod:`repro.analysis.rules_serving`) — ServingSpec
+  servability (KV fits, SLO/trace sane, decode groups exist).
 
 Entry points: the ``analyze_*`` helpers below, the ``validate=`` gate on
 :func:`repro.core.study.run_study`, and the registry sweep CLI
@@ -29,6 +31,7 @@ from repro.analysis.diagnostics import (
 )
 from repro.analysis.rules_cluster import analyze_cluster
 from repro.analysis.rules_compiled import analyze_compiled
+from repro.analysis.rules_serving import analyze_serving
 from repro.analysis.rules_study import analyze_study
 from repro.analysis.rules_workload import analyze_workload
 
@@ -40,6 +43,7 @@ __all__ = [
     "SEVERITIES",
     "analyze_cluster",
     "analyze_compiled",
+    "analyze_serving",
     "analyze_study",
     "analyze_workload",
     "format_report",

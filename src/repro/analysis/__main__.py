@@ -8,7 +8,9 @@ Statically checks, without running the simulator:
   compiled lowering), with a same-(mp, dp*ep) baseline decomposition
   enabling the W103 conservation check;
 * a default StudySpec per (model, cluster) pair plus the seven
-  paper-figure studies (S1xx, and K1xx on their base clusters).
+  paper-figure studies (S1xx, and K1xx on their base clusters);
+* the default ``dse.serving_study`` spec (V1xx on the ServingSpec plus
+  S1xx on its lowered StudySpec).
 
 Exits 1 if any error-severity diagnostic fires (the CI gate), 0
 otherwise.  ``--json`` writes the full report for artifact upload.
@@ -101,11 +103,16 @@ def sweep(models: Sequence[str], clusters: Sequence[str],
                              strategies=DEFAULT_SPACE)
             diags += analyze_study(spec, config)
 
-    from repro.core.dse import figure_studies
+    from repro.core.dse import figure_studies, serving_study
     for spec in figure_studies().values():
         diags += analyze_study(spec, config)
         if spec.cluster is not None:
             diags += analyze_cluster(spec.cluster, config)
+
+    from repro.analysis.rules_serving import analyze_serving
+    sspec = serving_study()
+    diags += analyze_serving(sspec, config)
+    diags += analyze_study(sspec.to_study(), config)
     return diags
 
 

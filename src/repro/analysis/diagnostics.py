@@ -26,7 +26,8 @@ from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Mapping,
 SEVERITIES: Tuple[str, ...] = ("info", "warning", "error")
 _SEV_RANK: Dict[str, int] = {s: i for i, s in enumerate(SEVERITIES)}
 
-PACKS: Tuple[str, ...] = ("workload", "compiled", "study", "cluster")
+PACKS: Tuple[str, ...] = ("workload", "compiled", "study", "cluster",
+                          "serving")
 
 
 @dataclasses.dataclass(frozen=True)

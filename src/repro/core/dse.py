@@ -616,6 +616,89 @@ def multi_tenant_ranking(processes: Optional[int] = None,
 
 
 # --------------------------------------------------------------------- #
+# Beyond the paper's training studies: serving-fleet DSE (ISSUE 7).
+# Prefill/decode rooflines + an SLO-gated traffic simulation decide when
+# disaggregating the two phases onto separate pods beats colocated
+# replicas on goodput-per-dollar.
+# --------------------------------------------------------------------- #
+
+def _serving_pod_mix(plain: str = "B0", expanded: str = "B1",
+                     num_pods: int = 4):
+    """``apply(cluster, frac) -> ClusterSpec`` building a small serving
+    fleet: ``num_pods`` Table III pods, ``frac`` of them memory-expanded
+    (same interconnect; priced by the expanded cluster's cost model)."""
+    base, em = TABLE_III_CLUSTERS[plain], TABLE_III_CLUSTERS[expanded]
+    pod = base.topology.pod_size
+
+    def mix(_, frac: float) -> ClusterSpec:
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"em_pod_frac must be in [0, 1], got {frac}")
+        n_em = int(round(frac * num_pods))
+        pods = tuple(
+            p for p in (PodSpec(base.node, count=num_pods - n_em,
+                                nodes_per_pod=pod),
+                        PodSpec(em.node, count=n_em, nodes_per_pod=pod))
+            if p.count > 0)
+        return ClusterSpec(
+            name=f"serve-{plain}+{expanded}-em{n_em}of{num_pods}",
+            pods=pods, interconnect=base.topology, cost=em.cost,
+            notes=f"serving fleet: {num_pods - n_em} plain + {n_em} EM "
+                  f"pods x {pod} nodes.")
+
+    return mix
+
+
+def serving_study(
+    cfg: Optional[ModelConfig] = None,
+    em_pod_fractions: Sequence[float] = (0.0, 0.25, 0.5),
+    rates: Sequence[float] = (120.0, 280.0, 440.0),
+    placements: Sequence[str] = ("colocated", "disaggregated"),
+    num_requests: int = 3000,
+    plain: str = "B0", expanded: str = "B1", num_pods: int = 4,
+):
+    """Serving DSE over an ``em_pod_frac x rate x placement`` grid.
+
+    Each cell builds a mixed plain/EM fleet, prices one replica's
+    prefill and decode phases on the roofline, then pushes a Poisson
+    trace through the fleet queue to get SLO-gated ``goodput`` (and
+    ``goodput_per_dollar`` via the fleet's TCO).  Colocated replicas
+    stall their whole batch for every admission's prefill (the
+    ``repro.serve.engine`` semantics), so past a traffic knee their
+    TPOT blows through the SLO; disaggregated fleets keep decode pods
+    at pure-decode cadence at the price of dedicating pods (and a KV
+    hand-off per request) to prefill.  Returns a
+    :class:`repro.serving.ServingSpec` — pass it straight to
+    :func:`run_study`."""
+    from repro.configs import get_config
+    from repro.serving import (ServingModel, ServingSpec, SLOSpec,
+                               TrafficTrace, serving_placement_axis)
+    cfg = cfg or get_config("internlm2-20b")
+    mix = _serving_pod_mix(plain, expanded, num_pods)
+    return ServingSpec(
+        name="serving-disagg-dse", model=cfg,
+        serving=ServingModel(max_batch=32, max_seq=8192,
+                             prompt_len=1024, max_new_tokens=64),
+        trace=TrafficTrace(kind="poisson", rate=float(rates[0]),
+                           num_requests=num_requests),
+        slo=SLOSpec(ttft=1.0, tpot=0.035),
+        axes=[Axis("em_pod_frac", tuple(em_pod_fractions), apply=mix),
+              Axis("rate", tuple(float(r) for r in rates),
+                   path="trace.rate"),
+              serving_placement_axis(tuple(placements))])
+
+
+def serving_ranking(processes: Optional[int] = None,
+                    **kwargs) -> List[Dict[str, float]]:
+    """Feasible (em_pod_frac, rate, placement) cells, best
+    goodput-per-dollar first."""
+    res: StudyResult = run_study(serving_study(**kwargs),
+                                 processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["goodput_per_dollar"],
+                  reverse=True)
+
+
+# --------------------------------------------------------------------- #
 # Figure-study registry
 # --------------------------------------------------------------------- #
 

@@ -445,6 +445,7 @@ class StudySpec:
         "feasible", "footprint_bytes", "mem_bw",
         "cost_usd", "tco", "perf_per_dollar",
         "concurrent_instances", "waves", "turnaround", "makespan",
+        "ttft_p50", "ttft_p99", "tpot", "goodput", "goodput_per_dollar",
     })
 
     def __post_init__(self):
@@ -882,6 +883,9 @@ def _validate_spec(spec: StudySpec, mode: str) -> None:
     diags = analyze_study(spec)
     if spec.cluster is not None:
         diags += analyze_cluster(spec.cluster)
+    if getattr(spec, "serving", None) is not None:
+        from repro.analysis import analyze_serving
+        diags += analyze_serving(spec.serving)
     # Advisory (info) findings don't warrant interrupting a run; they stay
     # visible through the CLI and analyze_* helpers.
     diags = [d for d in diags if d.severity != "info"]
@@ -922,7 +926,18 @@ def run_study(spec: StudySpec, processes: Optional[int] = None,
     (default) reports findings as a warning, ``"error"`` raises
     :class:`repro.analysis.AnalysisError` on error-severity findings,
     ``"off"`` skips the pass.  Validation only inspects — records are
-    identical across all three modes."""
+    identical across all three modes.
+
+    ``spec`` may also be anything with a ``to_study()`` lowering — a
+    :class:`repro.serving.ServingSpec` runs here directly, with the V1xx
+    serving rules joining the pre-flight."""
+    if not isinstance(spec, StudySpec):
+        to_study = getattr(spec, "to_study", None)
+        if to_study is None:
+            raise TypeError(
+                f"run_study wants a StudySpec or an object with "
+                f"to_study(); got {type(spec).__name__}")
+        spec = to_study()
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     if validate not in VALIDATE_MODES:

@@ -51,6 +51,7 @@ class Engine:
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}       # slot -> request
         self.remaining: Dict[int, int] = {}
+        self.temps: Dict[int, float] = {}          # slot -> temperature
         self.cache = self.model.init_cache(
             cfg, ecfg.max_batch, ecfg.max_seq, dtype=dtype)
         self.last_tokens = jnp.zeros((ecfg.max_batch, 1), jnp.int32)
@@ -60,6 +61,13 @@ class Engine:
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.ecfg.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt_len ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {total} exceeds "
+                f"max_seq ({self.ecfg.max_seq}); the decode cache would "
+                "overflow mid-generation")
         req.out_tokens = []
         self.queue.append(req)
 
@@ -92,6 +100,7 @@ class Engine:
             req.out_tokens.append(int(tok[0]))
             self.active[slot] = req
             self.remaining[slot] = req.max_new_tokens - 1
+            self.temps[slot] = req.temperature
 
     def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
         if temperature <= 0:
@@ -99,6 +108,25 @@ class Engine:
         self._rng, key = jax.random.split(self._rng)
         return jax.random.categorical(
             key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def _sample_slots(self, logits: jax.Array) -> jax.Array:
+        """Per-slot decode sampling: greedy for slots at temperature <= 0,
+        categorical at each slot's own temperature otherwise.  The RNG
+        only advances when some active slot actually samples, so
+        all-greedy batches stay bit-for-bit reproducible."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        temps = np.zeros((self.ecfg.max_batch,), np.float32)
+        for slot, t in self.temps.items():
+            if t > 0:
+                temps[slot] = t
+        if not temps.any():
+            return greedy
+        self._rng, key = jax.random.split(self._rng)
+        hot = jnp.asarray(temps > 0)
+        safe = jnp.asarray(np.where(temps > 0, temps, 1.0))
+        sampled = jax.random.categorical(
+            key, logits / safe[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(hot, sampled, greedy)
 
     # ------------------------------------------------------------------ #
     def tick(self) -> List[Request]:
@@ -109,7 +137,7 @@ class Engine:
             return done
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.last_tokens)
-        next_tokens = self._sample(logits[:, 0, :], 0.0)
+        next_tokens = self._sample_slots(logits[:, 0, :])
         self.last_tokens = next_tokens[:, None]
         for slot in list(self.active):
             req = self.active[slot]
@@ -120,6 +148,7 @@ class Engine:
                 done.append(req)
                 del self.active[slot]
                 del self.remaining[slot]
+                del self.temps[slot]
         return done
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:

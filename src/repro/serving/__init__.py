@@ -1,0 +1,31 @@
+"""repro.serving — analytic serving-fleet design-space exploration.
+
+The serving twin of the training DSE stack: prefill/decode roofline
+workloads (:mod:`~repro.serving.workload`), arrival-process traffic and
+the SLO fleet queue (:mod:`~repro.serving.traffic`), disaggregation as a
+placement (:mod:`~repro.serving.placement`), and the ``run_study``
+wiring (:mod:`~repro.serving.spec`).  See docs/serving_api.md.
+"""
+
+from repro.serving.placement import (COLOCATED, DISAGGREGATED,
+                                     ColocatedPlacement,
+                                     DisaggregatedPlacement, PhasePlan,
+                                     get_serving_placement, kv_transfer_time,
+                                     list_serving_placements)
+from repro.serving.spec import (SERVING_COLUMNS, ServingPoint, ServingSpec,
+                                ServingStudy, is_serving_axis,
+                                serving_placement_axis, serving_record)
+from repro.serving.traffic import (FleetMetrics, ReplicaProfile, SLOSpec,
+                                   TrafficTrace, simulate_colocated,
+                                   simulate_disaggregated)
+from repro.serving.workload import ServingModel, ServingWorkload, TickTrace
+
+__all__ = [
+    "COLOCATED", "DISAGGREGATED", "ColocatedPlacement",
+    "DisaggregatedPlacement", "FleetMetrics", "PhasePlan", "ReplicaProfile",
+    "SERVING_COLUMNS", "SLOSpec", "ServingModel", "ServingPoint",
+    "ServingSpec", "ServingStudy", "ServingWorkload", "TickTrace",
+    "TrafficTrace", "get_serving_placement", "is_serving_axis",
+    "kv_transfer_time", "list_serving_placements", "serving_placement_axis",
+    "serving_record", "simulate_colocated", "simulate_disaggregated",
+]

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import get_model
@@ -51,6 +52,64 @@ def test_engine_slot_reuse():
     done = eng.run_until_drained()
     assert sorted(r.uid for r in done) == [0, 1, 2]
     assert all(len(r.out_tokens) == 3 for r in done)
+
+
+def test_engine_decode_respects_request_temperature():
+    """Decode ticks sample at each request's own temperature: a very hot
+    request must diverge from the greedy continuation (the old engine
+    forced temperature=0.0 for every decode step), while a greedy request
+    sharing the batch stays bit-for-bit greedy."""
+    cfg = get_config("smollm-135m", reduced=True)
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg, dtype=jnp.float32)
+    prompt = np.array([1, 2, 3, 4, 5])
+    want = _direct_greedy(mod, cfg, params, prompt, 24)
+
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64),
+                 dtype=jnp.float32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=24,
+                       temperature=50.0))
+    eng.submit(Request(uid=1, prompt=prompt.copy(), max_new_tokens=24,
+                       temperature=0.0))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[0].out_tokens != want, \
+        "hot request reproduced the greedy continuation exactly"
+    assert done[1].out_tokens == want, \
+        "greedy request in a mixed-temperature batch must stay greedy"
+
+
+def test_engine_all_greedy_unchanged_by_sampler():
+    """All-greedy batches never consume RNG, so two engines with
+    different seeds emit identical tokens."""
+    cfg = get_config("smollm-135m", reduced=True)
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg, dtype=jnp.float32)
+    outs = []
+    for seed in (0, 123):
+        eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64,
+                                               seed=seed),
+                     dtype=jnp.float32)
+        eng.submit(Request(uid=0, prompt=np.array([1, 2, 3]),
+                           max_new_tokens=6))
+        outs.append(eng.run_until_drained()[0].out_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_engine_submit_rejects_cache_overflow():
+    """prompt_len + max_new_tokens > max_seq must fail at submit time,
+    not corrupt the decode cache mid-generation."""
+    cfg = get_config("smollm-135m", reduced=True)
+    mod = get_model(cfg)
+    params = mod.init_params(KEY, cfg, dtype=jnp.float32)
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=16),
+                 dtype=jnp.float32)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(uid=0, prompt=np.arange(10, dtype=np.int32),
+                           max_new_tokens=7))
+    assert not eng.queue
+    eng.submit(Request(uid=1, prompt=np.arange(10, dtype=np.int32),
+                       max_new_tokens=6))
+    assert len(eng.run_until_drained()) == 1
 
 
 def test_engine_mamba_family():

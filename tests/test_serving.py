@@ -1,0 +1,394 @@
+"""repro.serving: rooflines, traffic, placements, study wiring, rules.
+
+The tier-2 cross-check (`test_engine_schedule_matches_real_engine`)
+instruments the real ``repro.serve.engine`` tick loop and locks the
+analytic :class:`ServingWorkload` schedule against it tick for tick.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisError, analyze_serving
+from repro.configs import get_config
+from repro.core import dse
+from repro.core.cluster import TABLE_III_CLUSTERS
+from repro.core.study import Axis, run_study
+from repro.serving import (
+    COLOCATED,
+    DISAGGREGATED,
+    DisaggregatedPlacement,
+    ReplicaProfile,
+    SERVING_COLUMNS,
+    SLOSpec,
+    ServingModel,
+    ServingSpec,
+    ServingWorkload,
+    TrafficTrace,
+    kv_transfer_time,
+    serving_placement_axis,
+    simulate_colocated,
+    simulate_disaggregated,
+)
+
+CFG = get_config("internlm2-20b")
+PLAIN = TABLE_III_CLUSTERS["B0"].node
+EM = TABLE_III_CLUSTERS["B1"].node
+
+
+def _wl(**kw):
+    defaults = dict(max_batch=32, max_seq=8192, prompt_len=1024,
+                    max_new_tokens=64)
+    defaults.update(kw)
+    return ServingWorkload(CFG, ServingModel(**defaults))
+
+
+# --------------------------------------------------------------------- #
+# Workload: KV footprint + rooflines
+# --------------------------------------------------------------------- #
+
+def test_kv_bytes_formula():
+    wl = _wl()
+    want = (2 * CFG.num_layers * CFG.num_kv_heads * CFG.resolved_head_dim
+            * 2)  # k and v, every layer, bf16
+    assert wl.kv_bytes_per_token == want
+    assert wl.kv_slot_bytes == want * 8192
+    assert wl.kv_bytes_for(100) == want * 100
+    # the override becomes the sweepable axis
+    assert _wl(kv_bytes=123.0).kv_bytes_per_token == 123.0
+
+
+def test_serving_model_rejects_overflow():
+    with pytest.raises(ValueError, match="max_seq"):
+        ServingModel(max_seq=512, prompt_len=500, max_new_tokens=64)
+
+
+def test_prefill_compute_bound_decode_memory_bound():
+    wl = _wl()
+    pre = wl.prefill_point(PLAIN)
+    assert pre.bound == "compute"
+    dec = wl.decode_point(PLAIN, batch=wl.slots_that_fit(PLAIN))
+    assert dec.bound == "memory"
+    # decode OI ~ batch; prefill OI ~ prompt_len >> batch
+    assert pre.oi > dec.oi
+    # prefilling a 1k prompt dwarfs one decode tick
+    assert pre.delay > 2 * dec.delay
+
+
+def test_slots_that_fit_em_pool():
+    wl = _wl()
+    plain, em = wl.slots_that_fit(PLAIN), wl.slots_that_fit(EM)
+    # B0's HBM caps the batch below max_batch; B1's CXL pool frees it
+    assert 0 < plain < wl.serving.max_batch
+    assert em == wl.serving.max_batch
+    want = int((PLAIN.total_cap - wl.weight_bytes) // wl.kv_slot_bytes)
+    assert plain == want
+    rep = wl.replica_report(EM)
+    assert rep.fits_total and not rep.fits_local
+
+
+def test_em_decode_slower_per_tick():
+    """Spilling KV slots into expanded memory degrades the decode slope
+    (Eqn-3): the EM node ticks slower at its larger batch."""
+    wl = _wl()
+    t_plain = wl.decode_time(PLAIN, wl.slots_that_fit(PLAIN))
+    t_em = wl.decode_time(EM, wl.slots_that_fit(EM))
+    assert t_em > t_plain
+
+
+def test_decode_curve_monotone():
+    wl = _wl()
+    curve = wl.decode_curve(PLAIN, max_batch=8)
+    assert len(curve) == 8
+    assert all(b >= a for a, b in zip(curve, curve[1:]))
+
+
+# --------------------------------------------------------------------- #
+# Traffic traces
+# --------------------------------------------------------------------- #
+
+def test_trace_deterministic_and_replaceable():
+    tr = TrafficTrace(kind="poisson", rate=10.0, num_requests=50, seed=3)
+    assert tr.arrivals == TrafficTrace(kind="poisson", rate=10.0,
+                                       num_requests=50, seed=3).arrivals
+    assert len(tr.arrivals) == 50 and tr.arrivals[0] == 0.0
+    # dotted-path axes rewrite via dataclasses.replace: arrivals regenerate
+    faster = dataclasses.replace(tr, rate=100.0)
+    assert faster.duration < tr.duration
+
+
+def test_trace_kinds():
+    uni = TrafficTrace(kind="uniform", rate=4.0, num_requests=9)
+    assert uni.arrivals == tuple(i * 0.25 for i in range(9))
+    bur = TrafficTrace(kind="bursty", rate=20.0, num_requests=400, seed=1)
+    mean_rate = (bur.num_requests - 1) / bur.duration
+    assert 0.5 * 20.0 < mean_rate < 2.0 * 20.0
+    with pytest.raises(ValueError, match="kind"):
+        TrafficTrace(kind="fractal")
+    with pytest.raises(ValueError, match="rate"):
+        TrafficTrace(rate=-1.0).arrivals
+
+
+# --------------------------------------------------------------------- #
+# Engine-shaped schedule + tier-2 cross-check against the real engine
+# --------------------------------------------------------------------- #
+
+def test_engine_schedule_conservation():
+    wl = _wl(max_new_tokens=16)
+    tr = wl.engine_schedule(10, max_batch=4)
+    assert tr.prefills == 10
+    assert sum(tr.admitted) == 10
+    # every request holds a slot for exactly decode_steps ticks
+    assert sum(tr.occupancy) == 10 * wl.decode_steps
+    assert max(tr.occupancy) <= 4
+    t = wl.schedule_time(tr, PLAIN)
+    assert t > tr.prefills * wl.prefill_time(PLAIN)
+
+
+def test_engine_schedule_matches_real_engine():
+    """Tier-2 cross-check: the analytic TickTrace reproduces the real
+    continuous-batching engine tick for tick, and the roofline-priced
+    schedule time is consistent with the fleet queue's makespan."""
+    import jax.numpy as jnp
+    from repro.models import get_model
+    from repro.serve import Engine, EngineConfig, Request
+    import jax
+
+    cfg = get_config("smollm-135m", reduced=True)
+    mod = get_model(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64),
+                 dtype=jnp.float32)
+    n_req, n_new = 5, 5
+    for i in range(n_req):
+        eng.submit(Request(uid=i, prompt=np.array([1 + i, 2, 3]),
+                           max_new_tokens=n_new))
+
+    occupancy, admitted = [], []
+    orig_decode, orig_admit = eng._decode, eng._admit
+
+    def decode_spy(p, c, t):
+        occupancy.append(len(eng.active))
+        return orig_decode(p, c, t)
+
+    def admit_spy():
+        q0 = len(eng.queue)
+        orig_admit()
+        admitted.append(q0 - len(eng.queue))
+
+    eng._decode, eng._admit = decode_spy, admit_spy
+    done = eng.run_until_drained()
+    assert len(done) == n_req
+
+    sv = ServingModel(max_batch=2, max_seq=64, prompt_len=3,
+                      max_new_tokens=n_new)
+    wl = ServingWorkload(cfg, sv)
+    trace = wl.engine_schedule(n_req)
+    # structure matches the real engine exactly
+    assert trace.occupancy == tuple(occupancy)
+    assert trace.admitted == tuple(admitted)
+    assert trace.prefills == n_req
+
+    # timing: the fleet queue on one replica with the whole backlog at
+    # t=0 replays the same schedule, so its makespan IS schedule_time
+    tr = TrafficTrace(num_requests=n_req)
+    tr.__dict__["arrivals"] = (0.0,) * n_req   # backlog, like the engine
+    prof = ReplicaProfile(wl.prefill_time(PLAIN),
+                          wl.decode_curve(PLAIN), sv.max_batch)
+    m = simulate_colocated([prof], wl.decode_steps, tr,
+                           SLOSpec(ttft=1e9, tpot=1e9))
+    want = wl.schedule_time(trace, PLAIN)
+    makespan = m.completed / m.throughput
+    assert makespan == pytest.approx(want, rel=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# Fleet queue
+# --------------------------------------------------------------------- #
+
+def test_fleet_queue_drains_and_scales():
+    wl = _wl()
+    prof = ReplicaProfile(wl.prefill_time(PLAIN),
+                          wl.decode_curve(PLAIN, 24), 24)
+    tr = TrafficTrace(rate=30.0, num_requests=120, seed=0)
+    slo = SLOSpec(ttft=5.0, tpot=1.0)
+    one = simulate_colocated([dataclasses.replace(prof, count=4)],
+                             wl.decode_steps, tr, slo)
+    assert one.completed == 120 and one.slo_met == 120
+    eight = simulate_colocated([dataclasses.replace(prof, count=8)],
+                               wl.decode_steps, tr, slo)
+    assert eight.ttft_p99 <= one.ttft_p99 + 1e-12
+
+
+def test_disaggregated_decode_never_stalls():
+    """Under load, colocated admissions inflate TPOT past the pure
+    decode cadence; disaggregated decode replicas stay at tick speed."""
+    wl = _wl()
+    pt = wl.prefill_time(PLAIN)
+    curve = wl.decode_curve(PLAIN, 24)
+    tr = TrafficTrace(rate=60.0, num_requests=400, seed=0)
+    slo = SLOSpec(ttft=5.0, tpot=1.0)
+    col = simulate_colocated([ReplicaProfile(pt, curve, 24, count=8)],
+                             wl.decode_steps, tr, slo)
+    dis = simulate_disaggregated(
+        [ReplicaProfile(pt, (0.0,), 1, count=4)],
+        [ReplicaProfile(0.0, curve, 24, count=4)],
+        wl.decode_steps, tr, slo, kv_delay=0.005)
+    assert dis.tpot < col.tpot
+    assert dis.tpot <= max(curve) + 1e-9
+
+
+def test_kv_transfer_priced_on_outer_hop():
+    fleet = dse.mixed_dlrm_fleet()
+    hop = fleet.topology.hops[-1]
+    size = 1e9
+    assert kv_transfer_time(size, fleet.topology) == \
+        pytest.approx(size / hop.bw + hop.latency)
+
+
+# --------------------------------------------------------------------- #
+# Placements
+# --------------------------------------------------------------------- #
+
+def test_phase_plans():
+    fleet = dse.mixed_dlrm_fleet()          # [plain pods, EM pods]
+    groups = fleet.node_groups
+    col = COLOCATED.phase_plan(groups)
+    assert not col.disaggregated
+    assert col.prefill == col.decode == (0, 1)
+    auto = DISAGGREGATED.phase_plan(groups)
+    assert auto.disaggregated
+    # the roomier EM group decodes, the plain group prefills
+    assert auto.decode == (1,) and auto.prefill == (0,)
+    pinned = DisaggregatedPlacement(decode_groups=(0,)).phase_plan(groups)
+    assert pinned.decode == (0,) and pinned.prefill == (1,)
+    with pytest.raises(ValueError, match="out of range"):
+        DisaggregatedPlacement(decode_groups=(7,)).phase_plan(groups)
+    with pytest.raises(ValueError, match="prefill_frac"):
+        DisaggregatedPlacement(prefill_frac=1.5)
+    assert DISAGGREGATED.label == "disaggregated"
+    assert DisaggregatedPlacement(decode_groups=(1,)).label == \
+        "disaggregated[1]"
+
+
+# --------------------------------------------------------------------- #
+# Study wiring
+# --------------------------------------------------------------------- #
+
+def _small_spec(**kw):
+    defaults = dict(
+        name="t-serving", model=CFG, cluster=dse.mixed_dlrm_fleet(),
+        serving=ServingModel(max_batch=32, max_seq=8192, prompt_len=1024,
+                             max_new_tokens=64),
+        trace=TrafficTrace(rate=40.0, num_requests=80),
+        slo=SLOSpec(ttft=2.0, tpot=0.1))
+    defaults.update(kw)
+    return ServingSpec(**defaults)
+
+
+def test_serving_spec_through_run_study():
+    spec = _small_spec(
+        axes=[Axis("rate", (20.0, 60.0), path="trace.rate"),
+              serving_placement_axis()])
+    res = run_study(spec, processes=1)
+    assert len(res) == 4
+    for cell in res:
+        r = cell.record
+        for col in SERVING_COLUMNS:
+            assert col in r, col
+        assert r["feasible"]
+        assert r["placement"] in ("colocated", "disaggregated")
+        assert r["tco"] > 0
+        assert r["goodput_per_dollar"] == \
+            pytest.approx(r["goodput"] / r["tco"])
+    # the rate axis really rewrites the trace: goodput tracks the rate
+    by = {(c.record["rate"], c.record["placement"]): c.record for c in res}
+    assert by[(60.0, "colocated")]["goodput"] > \
+        by[(20.0, "colocated")]["goodput"]
+
+
+def test_serving_knob_axes():
+    """`serving.*` dotted paths sweep the workload itself."""
+    spec = _small_spec(
+        trace=TrafficTrace(rate=30.0, num_requests=60),
+        axes=[Axis("max_batch", (4, 32), path="serving.max_batch"),
+              Axis("kvb", (196608.0,), path="serving.kv_bytes")])
+    res = run_study(spec, processes=1)
+    by = {c.record["max_batch"]: c.record for c in res}
+    assert len(by) == 2
+    # fewer slots -> fatter queue -> worse tail latency
+    assert by[4]["ttft_p99"] >= by[32]["ttft_p99"]
+    spec.axes = [Axis("nope", (1,), path="serving.not_a_field")]
+    with pytest.raises(AttributeError):
+        spec.__post_init__()
+
+
+def test_serving_spec_requires_to_study_type():
+    with pytest.raises(TypeError):
+        run_study(object())
+
+
+def test_serving_ranking_headline():
+    """On the mixed plain/EM fleet there is a rate regime where
+    disaggregated prefill/decode placement beats the best colocated
+    configuration on goodput-per-dollar."""
+    recs = dse.serving_ranking(processes=1)
+    assert recs and all(r["feasible"] for r in recs)
+    rates = sorted({r["rate"] for r in recs})
+
+    def best(placement, rate, frac=None):
+        pool = [r["goodput_per_dollar"] for r in recs
+                if r["placement"] == placement and r["rate"] == rate
+                and (frac is None or r["em_pod_frac"] == frac)]
+        return max(pool) if pool else 0.0
+
+    # globally: some rate where disaggregation wins outright
+    assert any(best("disaggregated", rt) > best("colocated", rt)
+               for rt in rates)
+    # and on the fixed half-EM fleet (same TCO both ways)
+    assert any(best("disaggregated", rt, 0.5) > best("colocated", rt, 0.5)
+               for rt in rates)
+    # at the highest rate the win is decisive, not a tie-breaker
+    top = max(rates)
+    assert best("disaggregated", top, 0.5) > 1.2 * best("colocated", top, 0.5)
+
+
+# --------------------------------------------------------------------- #
+# V1xx analysis rules
+# --------------------------------------------------------------------- #
+
+def test_v101_kv_never_fits():
+    spec = _small_spec(model=get_config("transformer-1t"))
+    codes = [d.code for d in analyze_serving(spec)]
+    assert "V101" in codes
+
+
+def test_v102_v103_slo_and_trace():
+    spec = _small_spec(slo=SLOSpec(ttft=0.0, tpot=0.1))
+    assert [d.code for d in analyze_serving(spec)] == ["V102"]
+    spec = _small_spec(axes=[Axis("rate", (8.0, -1.0), path="trace.rate")])
+    assert [d.code for d in analyze_serving(spec)] == ["V103"]
+    spec = _small_spec()
+    object.__setattr__(spec.trace, "num_requests", 0)
+    assert [d.code for d in analyze_serving(spec)] == ["V103"]
+
+
+def test_v104_decode_groups():
+    spec = _small_spec(
+        placement=DisaggregatedPlacement(decode_groups=()))
+    assert [d.code for d in analyze_serving(spec)] == ["V104"]
+    spec = _small_spec(
+        axes=[serving_placement_axis(
+            ("colocated", DisaggregatedPlacement(decode_groups=(9,))))])
+    assert [d.code for d in analyze_serving(spec)] == ["V104"]
+    assert analyze_serving(_small_spec(placement=DISAGGREGATED)) == []
+
+
+def test_validate_gate_raises_on_serving_errors():
+    spec = _small_spec(slo=SLOSpec(ttft=2.0, tpot=-1.0))
+    with pytest.raises(AnalysisError, match="V102"):
+        run_study(spec, validate="error", processes=1)
+    ok = _small_spec(trace=TrafficTrace(rate=50.0, num_requests=40))
+    cells = list(run_study(ok, validate="error", processes=1))
+    assert len(cells) == 1 and cells[0].record["feasible"]
