@@ -439,8 +439,12 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
     reps = 1 if smoke else 2
     t_ref, ref = best_of(reps, engine="reference")
     t_comp, comp = best_of(reps, engine="compiled")
+    # Fork-pool legs run before anything touches JAX: os.fork() after
+    # the jit runtime spins up its thread pool is deadlock-prone.
     t_ref_p, _ = best_of(reps, engine="reference", processes=processes)
     t_comp_p, comp_p = best_of(reps, engine="compiled", processes=processes)
+    run_study(study, engine="jax")             # warm jit compiles
+    t_jax, jaxr = best_of(reps, engine="jax")
     assert comp.records == comp_p.records, \
         "compiled engine: fork and serial records differ"
     serving = _serving_trajectory(smoke=smoke)
@@ -450,6 +454,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "processes": processes,
         "reference_serial_s": round(t_ref, 3),
         "compiled_serial_s": round(t_comp, 3),
+        "jax_serial_s": round(t_jax, 3),
         "reference_procs_s": round(t_ref_p, 3),
         "compiled_procs_s": round(t_comp_p, 3),
         "compiled_serial_speedup": round(t_ref / t_comp, 2),
@@ -458,7 +463,100 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "compiled_procs_speedup_vs_reference_procs":
             round(t_ref_p / t_comp_p, 2),
         "max_rel_err": _max_rel_err(ref, comp),
+        "jax_max_rel_err": _max_rel_err(ref, jaxr),
+        "jax_grid": _jax_grid_trajectory(smoke=smoke),
         "serving": serving,
+    }
+
+
+def _jax_grid_trajectory(smoke: bool = False) -> dict:
+    """The ISSUE 8 acceptance grid: the fig15 transformer strategies
+    against a dense (peak_flops x local_bw x intra_bw) scaling
+    cross-product — 12,288 cells full (3 x 16^3), 1,536 smoke — timed
+    through ``time_compiled`` on the NumPy vs the jit/vmap backend.
+
+    The study-level fig15 legs share per-cell Python costs (record
+    assembly, spec plumbing) that cap any engine ratio near 1x; this leg
+    times the evaluator itself, where the jit/vmap path must be >= 3x
+    the PR-5 serial engine.  Divergence is checked two ways: jax vs the
+    NumPy engine on every grid cell, and jax vs the *reference* event
+    loop on an 8-environment subgrid per strategy (the reference walk is
+    per-cell Python, pricing the full grid with it would take hours)."""
+    import dataclasses
+    import itertools
+
+    from repro.core import simulator
+
+    tcfg = get_config("transformer-1t")
+    base = BASELINE_DGX_A100
+    n = 8 if smoke else 16
+    step = 4.0 / n
+
+    def env(i: int, j: int, k: int):
+        node = dataclasses.replace(
+            base.node,
+            peak_flops=base.node.peak_flops * (0.5 + step * i),
+            local_bw=base.node.local_bw * (0.5 + step * j))
+        topo = dataclasses.replace(
+            base.topology,
+            intra_bw=base.topology.intra_bw * (0.5 + step * k))
+        return node, topo
+
+    envs = [env(i, j, k)
+            for i, j, k in itertools.product(range(n), repeat=3)]
+    strategies = ((64, 16), (16, 64), (8, 128))
+    wls = [decompose(tcfg, SHAPE_1T, mp=mp, dp=dp)
+           for mp, dp in strategies]
+    cws = [wl.compiled() for wl in wls]
+
+    def leg(backend: str):
+        return [simulator.time_compiled(cw, envs, backend=backend)
+                for cw in cws]
+
+    leg("numpy")
+    leg("jax")                       # warm: imports + jit compiles
+
+    def best_of(backend: str, reps: int = 3):
+        best, out = float("inf"), None
+        for _ in range(reps):
+            t0 = time.monotonic()
+            out = leg(backend)
+            best = min(best, time.monotonic() - t0)
+        return best, out
+
+    t_np, np_out = best_of("numpy")
+    t_jx, jx_out = best_of("jax")
+
+    def err(pairs) -> float:
+        worst = 0.0
+        for a, b in pairs:
+            da, db = a.as_dict(), b.as_dict()
+            for key, va in da.items():
+                vb = db[key]
+                if not (math.isfinite(va) and math.isfinite(vb)):
+                    if str(va) != str(vb):
+                        return float("inf")
+                    continue
+                worst = max(worst,
+                            abs(va - vb) / max(abs(va), abs(vb), 1e-30))
+        return worst
+
+    err_np = max(err(zip(a, b)) for a, b in zip(np_out, jx_out))
+    sub = envs[:: max(1, len(envs) // 8)][:8]
+    err_ref = 0.0
+    for wl, cw in zip(wls, cws):
+        jx = simulator.time_compiled(cw, sub, backend="jax")
+        ref = [simulate_iteration(
+            wl, dataclasses.replace(base, node=node, topology=topo))
+            for node, topo in sub]
+        err_ref = max(err_ref, err(zip(ref, jx)))
+    return {
+        "cells": len(envs) * len(strategies),
+        "compiled_serial_s": round(t_np, 3),
+        "jax_s": round(t_jx, 3),
+        "jax_speedup": round(t_np / t_jx, 2),
+        "max_rel_err_vs_compiled": err_np,
+        "max_rel_err_vs_reference": err_ref,
     }
 
 
@@ -495,7 +593,7 @@ def main() -> None:
     ap.add_argument("--processes", type=int, default=None,
                     help="fan study cells over a fork pool (POSIX)")
     ap.add_argument("--engine", default="reference",
-                    choices=("reference", "compiled"),
+                    choices=("reference", "compiled", "jax"),
                     help="study evaluator for every bench (docs/perf.md)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the engine perf trajectory (fig15 serial "

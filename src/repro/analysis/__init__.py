@@ -9,7 +9,10 @@ Five rule packs (codes grouped by hundreds digit):
 * ``S1xx`` (:mod:`repro.analysis.rules_study`) — StudySpec executability,
 * ``K1xx`` (:mod:`repro.analysis.rules_cluster`) — cluster well-formedness,
 * ``V1xx`` (:mod:`repro.analysis.rules_serving`) — ServingSpec
-  servability (KV fits, SLO/trace sane, decode groups exist).
+  servability (KV fits, SLO/trace sane, decode groups exist),
+* ``R1xx`` (:mod:`repro.analysis.rules_search`) — search objective sets
+  and Pareto-frontier annotations (degenerate objectives, non-finite
+  values, dominance consistency).
 
 Entry points: the ``analyze_*`` helpers below, the ``validate=`` gate on
 :func:`repro.core.study.run_study`, and the registry sweep CLI
@@ -31,6 +34,7 @@ from repro.analysis.diagnostics import (
 )
 from repro.analysis.rules_cluster import analyze_cluster
 from repro.analysis.rules_compiled import analyze_compiled
+from repro.analysis.rules_search import SearchTarget, analyze_search
 from repro.analysis.rules_serving import analyze_serving
 from repro.analysis.rules_study import analyze_study
 from repro.analysis.rules_workload import analyze_workload
@@ -41,8 +45,10 @@ __all__ = [
     "Rule",
     "RuleConfig",
     "SEVERITIES",
+    "SearchTarget",
     "analyze_cluster",
     "analyze_compiled",
+    "analyze_search",
     "analyze_serving",
     "analyze_study",
     "analyze_workload",

@@ -10,7 +10,9 @@ Statically checks, without running the simulator:
 * a default StudySpec per (model, cluster) pair plus the seven
   paper-figure studies (S1xx, and K1xx on their base clusters);
 * the default ``dse.serving_study`` spec (V1xx on the ServingSpec plus
-  S1xx on its lowered StudySpec).
+  S1xx on its lowered StudySpec);
+* the search pack (R1xx) over a deterministic synthetic Pareto
+  annotation — a live gate on the dominance logic.
 
 Exits 1 if any error-severity diagnostic fires (the CI gate), 0
 otherwise.  ``--json`` writes the full report for artifact upload.
@@ -113,6 +115,26 @@ def sweep(models: Sequence[str], clusters: Sequence[str],
     sspec = serving_study()
     diags += analyze_serving(sspec, config)
     diags += analyze_study(sspec.to_study(), config)
+
+    # Search pack (R1xx) over a deterministic synthetic frontier: annotate
+    # a fixed record set through the real pareto_front path, then check
+    # the annotations.  Pure (no simulator), and a live gate on the
+    # dominance logic itself: a broken pareto_rank trips R103 here.
+    from repro.analysis.rules_search import analyze_search
+    from repro.core.search import DEFAULT_OBJECTIVES, pareto_front
+    from repro.core.study import CellResult, StudyResult
+    demo = [
+        {"feasible": True, "total": 1.0, "tco": 9.0, "energy_usd": 2.0},
+        {"feasible": True, "total": 3.0, "tco": 4.0, "energy_usd": 1.0},
+        {"feasible": True, "total": 3.5, "tco": 9.5, "energy_usd": 2.5},
+        {"feasible": False, "total": 0.5, "tco": 1.0, "energy_usd": 0.1},
+    ]
+    res = StudyResult(
+        spec=StudySpec(name="search-demo", evaluate=lambda ctx: {}),
+        cells=[CellResult(None, {}, None, None, None, r) for r in demo])
+    pareto_front(res, DEFAULT_OBJECTIVES)
+    diags += analyze_search(res, DEFAULT_OBJECTIVES, config,
+                            name="registry-demo")
     return diags
 
 

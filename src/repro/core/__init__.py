@@ -62,4 +62,12 @@ from repro.core.study import (  # noqa: F401
     run_study,
     set_by_path,
 )
+from repro.core.search import (  # noqa: F401
+    DEFAULT_OBJECTIVES,
+    Objective,
+    SearchResult,
+    evolutionary_search,
+    pareto_front,
+    successive_halving,
+)
 from repro.core.workload import Workload, decompose, decompose_dlrm  # noqa: F401

@@ -345,13 +345,40 @@ def hetero_cost_study(
 
 def hetero_cost_ranking(cfg: ModelConfig, shape: ShapeConfig,
                         processes: Optional[int] = None,
-                        engine: str = "reference",
+                        engine: str = "compiled",
                         **kwargs) -> List[Dict[str, float]]:
     """Feasible (em_pod_frac, strategy) cells, best perf-per-dollar first."""
     res: StudyResult = run_study(hetero_cost_study(cfg, shape, **kwargs),
                                  processes=processes, engine=engine)
     feasible = [c.record for c in res if c.record["feasible"]]
     return sorted(feasible, key=lambda r: r["perf_per_dollar"], reverse=True)
+
+
+def pareto_frontier(cfg: Optional[ModelConfig] = None,
+                    shape: Optional[ShapeConfig] = None,
+                    objectives=None,
+                    processes: Optional[int] = None,
+                    engine: str = "compiled",
+                    **kwargs) -> List[Dict[str, float]]:
+    """Demo search study: the (time, TCO, energy) Pareto frontier of the
+    mixed plain/EM fleet design space (``hetero_cost_study``).
+
+    A single perf-per-dollar scalar hides the trade surface; the frontier
+    keeps every fleet fraction x strategy cell no other cell beats on all
+    three axes at once — typically the all-plain fleet (cheap, slow), the
+    all-EM fleet (fast, expensive) and the EM-aware mixes between them.
+    Every record is annotated with ``pareto_rank`` / ``pareto_optimal``
+    (:mod:`repro.core.search`); returns the frontier records, fastest
+    first."""
+    from repro.core.search import DEFAULT_OBJECTIVES, pareto_front
+    cfg = cfg or _default_transformer()
+    shape = shape or ShapeConfig("pareto", 2048, 1024, "train")
+    res = run_study(hetero_cost_study(cfg, shape, **kwargs),
+                    processes=processes, engine=engine)
+    front = pareto_front(res, objectives if objectives is not None
+                         else DEFAULT_OBJECTIVES)
+    return sorted((c.record for c in front),
+                  key=lambda r: r["total"])
 
 
 # --------------------------------------------------------------------- #
@@ -394,7 +421,7 @@ def pp_ep_study(
 
 
 def pp_ep_ranking(processes: Optional[int] = None,
-                  engine: str = "reference",
+                  engine: str = "compiled",
                   **kwargs) -> List[Dict[str, float]]:
     """Feasible four-axis cells, fastest first (per-cluster ranking is a
     ``select(cluster=...)`` away)."""
@@ -463,7 +490,7 @@ def cluster_comparison(
     dlrm_batch: int = 4096,
     clusters: Optional[Dict[str, ClusterLike]] = None,
     processes: Optional[int] = None,
-    engine: str = "reference",
+    engine: str = "compiled",
 ) -> Dict[str, Dict[str, float]]:
     """runtime[cluster][workload] for Transformer-1T + 8 DLRM instances.
 
@@ -540,7 +567,7 @@ def placement_study(
 
 
 def placement_ranking(processes: Optional[int] = None,
-                      engine: str = "reference",
+                      engine: str = "compiled",
                       **kwargs) -> List[Dict[str, float]]:
     """Feasible (em_pod_frac, placement, strategy) cells, best
     perf-per-dollar first."""
@@ -606,7 +633,7 @@ def multi_tenant_study(
 
 
 def multi_tenant_ranking(processes: Optional[int] = None,
-                         engine: str = "reference",
+                         engine: str = "compiled",
                          **kwargs) -> List[Dict[str, float]]:
     """Feasible (nodes_per_inst, placement) cells, best turnaround first."""
     res = run_study(multi_tenant_study(**kwargs), processes=processes,

@@ -1,0 +1,571 @@
+"""JAX backend for the compiled study engine: jit + vmap over environments.
+
+Phase 2b of the two-phase engine (ROADMAP: "JAX-native mega-scale
+search").  :mod:`repro.core.compiled` lowers each strategy to flat arrays
+once; :func:`repro.core.simulator.time_compiled` times them against
+environment batches.  This module re-expresses that hot path — the
+delay-class roofline matrix (§III-C2 tiling traffic + Eqns (1)/(2)), the
+per-family ``collective_time_batch`` formulas (hierarchical switch /
+torus / single switch), and the ASTRA-lite timeline (a closed form when
+no scope interleaves non-blocking and blocking events, a ``lax.scan``
+walk otherwise) — as pure jittable functions of those flat arrays:
+
+* :func:`stage_compute_exposed` is the drop-in kernel the simulator
+  dispatches to under ``backend="jax"``: one ``jax.jit`` call per
+  (stage, environment-batch), with the per-environment timeline
+  ``vmap``-ed over the batch axis, so a whole (strategy x cluster-env)
+  cross-product is one device dispatch per stage.  Shapes are the jit
+  cache key: strategies stamped from the same model share event-stream
+  shapes, so a sweep typically compiles once and replays.
+* :func:`comm_matrix` vectorizes collective pricing over *environments*
+  too: distinct topologies sharing a structural key (family + pod/dims
+  layout) differ only in bandwidth/latency scalars, so one vectorized
+  evaluation per (collective, scope, structural-key) prices every
+  environment column at once.  (These formulas run in NumPy: they sit
+  *outside* the jit and feed it as an input, where per-op dispatch
+  overhead would dominate their tiny arithmetic.)  Topology families
+  outside the three built-ins fall back to their own
+  ``collective_time_batch`` / scalar ``collective_time`` (NumPy), so
+  correctness never depends on this fast path.
+
+Everything runs in float64 under ``jax.experimental.enable_x64`` —
+scoped, so the f32 training/kernel stack elsewhere in the repo is
+untouched — and matches the NumPy compiled engine (and therefore the
+reference event loop) within 1e-9 relative (tests/test_jax_engine.py).
+When JAX is not importable, ``HAVE_JAX`` is False and the simulator
+falls back to the NumPy path with a one-time warning.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.topology import (
+    HierarchicalSwitch,
+    SingleSwitch,
+    Torus,
+    _group_size,
+    _PAPER_ORDER,
+)
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised on jax-less installs
+    jax = None          # type: ignore[assignment]
+    jnp = None          # type: ignore[assignment]
+    enable_x64 = None   # type: ignore[assignment]
+    HAVE_JAX = False
+
+
+# --------------------------------------------------------------------- #
+# Collective formulas over environment-parameter arrays
+# --------------------------------------------------------------------- #
+# Mirrors repro.core.topology's *_batch helpers term for term, with the
+# bandwidth / latency scalars promoted to arrays over the environment
+# group: ``sizes`` is (nev, 1), parameters are (k,), results broadcast to
+# (nev, k).  Group sizes / pod layout / placement stay Python ints — they
+# are part of the structural key that formed the group.
+
+def _ring_allreduce(sizes, n: int, bw, lat):
+    if n <= 1:
+        return np.zeros(np.broadcast_shapes(np.shape(sizes),
+                                              np.shape(bw)))
+    t = 2 * (n - 1) / n * sizes / bw + 2 * (n - 1) * lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def _ring_allgather(sizes, n: int, bw, lat):
+    if n <= 1:
+        return np.zeros(np.broadcast_shapes(np.shape(sizes),
+                                              np.shape(bw)))
+    t = (n - 1) / n * sizes / bw + (n - 1) * lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def _all_to_all(sizes, n: int, bw, lat):
+    if n <= 1:
+        return np.zeros(np.broadcast_shapes(np.shape(sizes),
+                                              np.shape(bw)))
+    t = (n - 1) / n * sizes / bw + lat
+    return np.where(sizes > 0, t, 0.0)
+
+
+def _flat_time(collective: str, sizes, n: int, bw, lat):
+    if collective == "all-reduce":
+        return _ring_allreduce(sizes, n, bw, lat)
+    if collective in ("all-gather", "reduce-scatter"):
+        return _ring_allgather(sizes, n, bw, lat)
+    if collective == "all-to-all":
+        return _all_to_all(sizes, n, bw, lat)
+    if collective == "p2p":
+        return np.where(sizes > 0, sizes / bw + lat, 0.0)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def _hier_time(collective: str, sizes, scope: str, mp: int, dp: int,
+               pp: int, ep: int, order, pod_size: int,
+               intra_bw, inter_bw, intra_lat, inter_lat):
+    """HierarchicalSwitch.collective_time_batch over a parameter array."""
+    if collective == "p2p":
+        if not order.p2p_crosses_pod(mp, dp, pod_size, pp, ep):
+            return np.where(sizes > 0, sizes / intra_bw + intra_lat, 0.0)
+        return np.where(sizes > 0, sizes / inter_bw + inter_lat, 0.0)
+    pl = order.group_placement(scope, mp, dp, pod_size, pp, ep)
+    p, q = pl.intra, pl.inter
+    if q <= 1:
+        return _flat_time(collective, sizes, p, intra_bw, intra_lat)
+    if p <= 1:
+        return _flat_time(collective, sizes, q, inter_bw, inter_lat)
+    if collective == "all-reduce":
+        return 2 * _ring_allgather(sizes, p, intra_bw, intra_lat) \
+            + _ring_allreduce(sizes / p, q, inter_bw, inter_lat)
+    if collective in ("all-gather", "reduce-scatter"):
+        return _ring_allgather(sizes, p, intra_bw, intra_lat) \
+            + _ring_allgather(sizes / p, q, inter_bw, inter_lat)
+    if collective == "all-to-all":
+        n = p * q
+        inter_frac = (n - p) / n
+        intra_frac = (p - 1) / n
+        t_inter = inter_frac * sizes / inter_bw + inter_lat
+        t_intra = intra_frac * sizes / intra_bw + intra_lat
+        return np.where(sizes > 0, np.maximum(t_inter, t_intra), 0.0)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def _torus_sweep(collective: str, sizes, group: int,
+                 dims_spec: Tuple[int, ...], pod: int, has_dcn: bool,
+                 link_bw, lat, dcn_bw, dcn_lat):
+    """Torus._time_batch over a parameter array (per-dim ring sweeps plus
+    the DCN spill level)."""
+    bw = 2 * link_bw
+    if has_dcn and group > pod:
+        q = math.ceil(group / pod)
+        if collective == "all-reduce":
+            t_in = _torus_sweep("reduce-scatter", sizes, pod, dims_spec,
+                                pod, has_dcn, link_bw, lat, dcn_bw, dcn_lat) \
+                + _torus_sweep("all-gather", sizes, pod, dims_spec, pod,
+                               has_dcn, link_bw, lat, dcn_bw, dcn_lat)
+            return t_in + _ring_allreduce(sizes / pod, q, dcn_bw, dcn_lat)
+        t_in = _torus_sweep(collective, sizes, pod, dims_spec, pod,
+                            has_dcn, link_bw, lat, dcn_bw, dcn_lat)
+        return t_in + _flat_time(collective, sizes / pod, q, dcn_bw, dcn_lat)
+    dims: List[int] = []
+    rem = min(group, pod)
+    for d in dims_spec:
+        if rem <= 1:
+            break
+        use = min(d, rem)
+        dims.append(use)
+        rem = max(1, rem // use)
+    if not dims:
+        return np.zeros(np.broadcast_shapes(np.shape(sizes),
+                                              np.shape(link_bw)))
+    if collective == "all-reduce":
+        t, s = 0.0, sizes
+        for d in dims:
+            t = t + _ring_allgather(s, d, bw, lat)
+            s = s / d
+        for d in reversed(dims):
+            s = s * d
+            t = t + _ring_allgather(s, d, bw, lat)
+        return t
+    if collective in ("all-gather", "reduce-scatter"):
+        t, s = 0.0, sizes
+        for d in dims:
+            t = t + _ring_allgather(s, d, bw, lat)
+            s = s / d
+        return t
+    if collective == "all-to-all":
+        n = 1
+        for d in dims:
+            n *= d
+        return _all_to_all(sizes, n, bw * len(dims), lat)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def _torus_time(collective: str, sizes, scope: str, mp: int, dp: int,
+                pp: int, ep: int, order, dims_spec: Tuple[int, ...],
+                pod: int, has_dcn: bool, link_bw, lat, dcn_bw, dcn_lat):
+    group = _group_size(scope, mp, dp, pp, ep)
+    if collective == "p2p":
+        if has_dcn and order.p2p_crosses_pod(mp, dp, pod, pp, ep):
+            t = sizes / dcn_bw + dcn_lat
+        else:
+            t = sizes / link_bw + lat
+        return np.where(sizes > 0, t, 0.0)
+    return _torus_sweep(collective, sizes, group, dims_spec, pod, has_dcn,
+                        link_bw, lat, dcn_bw, dcn_lat)
+
+
+def _structural_key(topo) -> Optional[tuple]:
+    """Environments whose topologies share a key differ only in bandwidth
+    and latency scalars, so one vectorized formula prices them all."""
+    if isinstance(topo, HierarchicalSwitch):
+        return ("hier", topo.pod_size)
+    if isinstance(topo, Torus):
+        return ("torus", topo.dims, bool(topo.dcn_bw))
+    if isinstance(topo, SingleSwitch):
+        return ("switch",)
+    return None
+
+
+def comm_matrix(stage, envs, mp: int, dp: int, pp: int, ep: int,
+                placement) -> np.ndarray:
+    """Collective durations ``(ncomm, nenv)`` with the environment axis
+    vectorized per structural topology family.
+
+    Same semantics as the per-topology
+    ``CollectiveModel.time_batch`` loop in
+    :func:`repro.core.simulator._compiled_comm` — rows group by
+    (collective, scope), zero when the scope's group size is <= 1 — but
+    evaluated once per (row-group, structural key) over every matching
+    environment column instead of once per distinct topology."""
+    nenv = len(envs)
+    out = np.zeros((len(stage.comm_kinds), nenv))
+    if not stage.comm_kinds:
+        return out
+    order = placement if placement is not None else _PAPER_ORDER
+    sizes_all = np.asarray(stage.comm_sizes, dtype=float)
+
+    # Distinct topologies -> their environment columns (dict identity via
+    # the frozen dataclasses' value hash, like _compiled_comm).
+    topo_cols: Dict[object, List[int]] = {}
+    for e, (_, topo) in enumerate(envs):
+        topo_cols.setdefault(topo, []).append(e)
+    families: Dict[tuple, List[object]] = {}
+    fallback: List[object] = []
+    for topo in topo_cols:
+        key = _structural_key(topo)
+        if key is None:
+            fallback.append(topo)
+        else:
+            families.setdefault(key, []).append(topo)
+
+    row_groups: Dict[Tuple[str, str], List[int]] = {}
+    for i, (c, s) in enumerate(zip(stage.comm_kinds, stage.comm_scopes)):
+        row_groups.setdefault((c, s), []).append(i)
+
+    for key, topos in families.items():
+        cols = [topo_cols[t] for t in topos]
+        if key[0] == "hier":
+            params = tuple(
+                np.asarray([getattr(t, f) for t in topos])
+                for f in ("intra_bw", "inter_bw", "intra_latency",
+                          "inter_latency"))
+        elif key[0] == "torus":
+            params = tuple(
+                np.asarray([getattr(t, f) for t in topos])
+                for f in ("link_bw", "latency", "dcn_bw", "dcn_latency"))
+        else:
+            params = tuple(np.asarray([getattr(t, f) for t in topos])
+                           for f in ("bw", "latency"))
+        for (c, scope), rows in row_groups.items():
+            if _group_size(scope, mp, dp, pp, ep) <= 1:
+                continue
+            sizes = np.asarray(sizes_all[rows])[:, None]   # (nrow, 1)
+            if key[0] == "hier":
+                t = _hier_time(c, sizes, scope, mp, dp, pp, ep, order,
+                               key[1], *params)
+            elif key[0] == "torus":
+                t = _torus_time(c, sizes, scope, mp, dp, pp, ep, order,
+                                key[1], int(np.prod(key[1])), key[2],
+                                *params)
+            else:
+                group = _group_size(scope, mp, dp, pp, ep)
+                t = _flat_time(c, sizes, group, *params)
+            t = np.asarray(t)                                # (nrow, k)
+            for j, tcols in enumerate(cols):
+                out[np.ix_(rows, tcols)] = t[:, j:j + 1]
+
+    if fallback:
+        from repro.core.collectives import CollectiveModel
+        for topo in fallback:
+            coll = CollectiveModel(topo, mp, dp, pp=pp, ep=ep,
+                                   placement=placement)
+            col = coll.time_batch(stage.comm_kinds, stage.comm_sizes,
+                                  stage.comm_scopes)
+            for e in topo_cols[topo]:
+                out[:, e] = col
+    return out
+
+
+# --------------------------------------------------------------------- #
+# The jitted stage kernel: roofline delays + batched timeline
+# --------------------------------------------------------------------- #
+
+_SCOPE_COUNT = 5    # simulator._SCOPES: (mp, dp, ep, pp, edp)
+
+
+def _prep_pass(p, ncomm: int, nseq: int, ncls: int) -> Dict[str, np.ndarray]:
+    """Static per-pass arrays with the tail-compute sentinel appended.
+
+    The reference walk adds the compute remaining after the last event
+    (``csum[-1] - csum[prev]``) once the event loop ends; a final
+    zero-duration non-blocking event at position ``nseq`` charges exactly
+    that (scope 0's stream time becomes ``max(tc, tn[0])``, which never
+    changes the exposed residue ``max(0, max(tn) - tc)``).
+
+    All the cumulative structure is folded into *static count matrices*
+    so that nothing sequential survives into the kernel:
+
+    * ``dcounts`` (``(nev+1, ncls)``, scan path) — ops of each delay
+      class between consecutive events, making every per-environment
+      compute delta one matrix product;
+    * ``exp_cnt`` (fast path) — blocking exposure per (phase, comm
+      kind), so exposure is one small static-matrix product (XLA's CPU
+      ``cumsum``/``cummax`` lowerings are O(n log n) with large
+      constants — the count matrices sidestep them entirely);
+    * ``nb`` (fast path) — per scope with non-blocking events: one
+      static matrix ``R`` whose product with the stacked
+      ``[delays; comm_pad]`` gives each event's *residual margin* — the
+      scope's final stream time minus the pass's final compute clock, as
+      seen from that event.  The counts are integers, so the
+      chain-vs-compute subtraction happens exactly at prep time and the
+      kernel evaluates one short well-conditioned dot product per row
+      instead of differencing two large totals (which would amplify
+      rounding on near-zero residues).  Within a repeated layer run the
+      count rows advance by a constant increment, so the margin is
+      affine in the event index and its max sits at a run endpoint —
+      interior rows are pruned statically (514 chain events in the
+      transformer stack collapse to a handful of rows).
+
+    ``mixed`` flags a pass where some scope sees a non-blocking event
+    *before* a later blocking one — the only shape the closed form
+    cannot price (the blocking event would have to wait on the pending
+    transfer), so it drops to the ``lax.scan`` walk."""
+    pos = np.append(p.ev_pos, nseq).astype(np.int64)
+    prev = np.concatenate([[0], pos[:-1]]).astype(np.int64)
+    comm = np.append(p.ev_comm, ncomm).astype(np.int64)  # -> padded zero row
+    block = np.append(p.ev_blocking, False).astype(float)
+    scope = np.append(p.ev_scope, 0).astype(np.int64)
+    phase = np.append(p.ev_phase, 0).astype(np.int64)
+    seq = p.seq.astype(np.int64)
+    onehot = np.zeros((nseq + 1, ncls))
+    onehot[np.arange(nseq) + 1, seq] = 1.0
+    prefix = np.cumsum(onehot, axis=0)           # (nseq+1, ncls)
+    comm_oh = np.eye(ncomm + 1)[comm]            # (nev+1, ncomm+1)
+    phase_oh = np.eye(3)[phase] * block[:, None]
+    # Cumulative blocking-duration counts per comm kind at each event.
+    bcc = np.cumsum(comm_oh * block[:, None], axis=0)
+    nb: Dict[str, Dict[str, np.ndarray]] = {}
+    mixed = False
+    for s in range(_SCOPE_COUNT):
+        on = np.asarray(p.ev_scope) == s
+        nb_idx = np.flatnonzero(on & ~np.asarray(p.ev_blocking))
+        blk_idx = np.flatnonzero(on & np.asarray(p.ev_blocking))
+        if nb_idx.size:
+            oh = comm_oh[nb_idx]
+            dafter = np.cumsum(oh[::-1], axis=0)[::-1]   # incl. own dur
+            # Residual margin at event k: the chain's durations from k on
+            # minus the ops (and blocking durations) still ahead of it.
+            R = np.concatenate(
+                [prefix[pos[nb_idx]] - prefix[nseq],
+                 dafter + bcc[nb_idx] - bcc[-1]], axis=1)
+            if R.shape[0] > 2:
+                d = np.diff(R, axis=0)
+                interior = np.all(d[1:] == d[:-1], axis=1)
+                R = R[np.concatenate([[True], ~interior, [True]])]
+            nb[str(s)] = R
+            if blk_idx.size and nb_idx.min() < blk_idx.max():
+                mixed = True
+    return {
+        "dcounts": prefix[pos] - prefix[prev],   # (nev+1, ncls)
+        "comm": comm,
+        "block": block,
+        "scope_oh": np.eye(_SCOPE_COUNT)[scope],
+        # Exposure lands on the event's phase row only when it blocks.
+        "phase_oh": phase_oh,
+        "exp_cnt": phase_oh.T @ comm_oh,         # (3, ncomm+1)
+        "nb": nb,
+        "mixed": mixed,
+    }
+
+
+def _prep(stage) -> Tuple[dict, bool]:
+    """The stage's flat arrays in kernel form plus the closed-form
+    eligibility flag, cached on the stage (one lowering per strategy,
+    reused for every environment batch)."""
+    cached = getattr(stage, "_jax_prep", None)
+    if cached is not None:
+        return cached
+    ncomm = len(stage.comm_kinds)
+    ncls = stage.flops.shape[0]
+    P: dict = {
+        "flops": np.asarray(stage.flops, dtype=float),
+        "base": np.asarray(stage.base_traffic, dtype=float),
+        "counts": np.asarray(stage.counts, dtype=float),
+        "fwd": _prep_pass(stage.fwd, ncomm, stage.fwd.seq.size, ncls),
+        "bwd": _prep_pass(stage.bwd, ncomm, stage.bwd.seq.size, ncls),
+    }
+    if stage.gemm_u.size:
+        nops = stage.gemm_u.size
+        lengths = np.diff(np.append(stage.gemm_starts, nops))
+        P["g_u"] = np.asarray(stage.gemm_u, dtype=float)
+        P["g_v"] = np.asarray(stage.gemm_v, dtype=float)
+        P["g_w"] = np.asarray(stage.gemm_w, dtype=float)
+        P["g_b"] = np.asarray(stage.gemm_batch, dtype=float)
+        P["op_cls"] = np.repeat(stage.gemm_cls, lengths).astype(np.int64)
+    fast = not (P["fwd"].pop("mixed") or P["bwd"].pop("mixed"))
+    # Keep only the arrays the selected kernel reads: stray leaves would
+    # widen the jit cache key (and the fast/scan paths share none).
+    drop = (("dcounts", "comm", "block", "scope_oh", "phase_oh") if fast
+            else ("exp_cnt", "nb"))
+    for p in (P["fwd"], P["bwd"]):
+        for k in drop:
+            p.pop(k)
+    stage._jax_prep = (P, fast)
+    return P, fast
+
+
+def _delays_jnp(P: dict, sram, peak, mem_bw):
+    """:func:`repro.core.compiled.stage_traffic` +
+    :func:`repro.core.simulator._compiled_delays` in one fused jnp
+    expression: ``(ncls, nenv)`` roofline delays."""
+    traffic = P["base"][:, None] + jnp.zeros((1, sram.shape[0]))
+    if "g_u" in P:
+        u = P["g_u"][:, None]
+        v = P["g_v"][:, None]
+        w = P["g_w"][:, None]
+        s = sram[None, :]
+        psi1 = jnp.ceil(u / s) * v + u
+        psi2 = jnp.ceil(v / s) * u + v
+        per = jnp.minimum(psi1, psi2) + w
+        per = jnp.where((u == 0) | (v == 0), u + v + w, per)
+        contrib = P["g_b"][:, None] * per
+        traffic = traffic + jax.ops.segment_sum(
+            contrib, P["op_cls"], num_segments=P["flops"].shape[0])
+    flops = P["flops"][:, None]
+    oi = flops / traffic                        # inf when traffic == 0
+    perf = jnp.minimum(peak[None, :], oi * mem_bw[None, :])
+    delays = flops / perf
+    # Pure data movement (zero-FLOP rows): memory-bound transfer.
+    mem_t = jnp.where(traffic > 0, traffic / mem_bw[None, :], 0.0)
+    return jnp.where((P["flops"] == 0)[:, None], mem_t, delays)
+
+
+def _pass_fast(pP: dict, comm_pad, stacked):
+    """Closed-form timeline for a scope-disjoint pass, whole batch at once.
+
+    With no non-blocking transfer pending when a blocking event fires
+    (the ``mixed`` pre-check), every blocking event starts exactly at the
+    compute clock — its exposure *is* its duration, one static-count
+    matrix product.  Each scope's non-blocking stream unrolls
+    ``tn = max(tc, tn) + dur`` into a max over per-event residual
+    margins (``R @ [delays; comm_pad]``, rows statically pruned to run
+    endpoints), since only the final stream time past the final compute
+    clock feeds the exposed residue.  Returns
+    ``(exposed (3, nenv), residual margin (nenv) or None)``."""
+    exp = pP["exp_cnt"] @ comm_pad                       # (3, nenv)
+    resid = None
+    for s in sorted(pP["nb"]):
+        m = jnp.max(pP["nb"][s] @ stacked, axis=0)       # (nenv,)
+        resid = m if resid is None else jnp.maximum(resid, m)
+    return exp, resid
+
+
+def _stage_fn_fast(P: dict, sram, peak, mem_bw, comm):
+    """The pure stage kernel, closed form: flat arrays in,
+    (compute, exposed) out — jitted once per shape set, every step a
+    whole-batch matrix product or reduction (no scan, no vmap, no
+    cumulatives)."""
+    delays = _delays_jnp(P, sram, peak, mem_bw)          # (ncls, nenv)
+    compute = P["counts"] @ delays                        # (3, nenv)
+    comm_pad = jnp.concatenate(
+        [comm, jnp.zeros((1, comm.shape[1]))], axis=0)
+    stacked = jnp.concatenate([delays, comm_pad], axis=0)
+    exp_f, _ = _pass_fast(P["fwd"], comm_pad, stacked)
+    exp_b, resid_b = _pass_fast(P["bwd"], comm_pad, stacked)
+    exposed = exp_f + exp_b
+    if resid_b is not None:
+        # Non-blocking residue past the end of backward compute.
+        resid = jnp.maximum(0.0, resid_b)
+        exposed = exposed + jnp.array([0.0, 0.0, 1.0])[:, None] * resid
+    return compute, exposed
+
+
+def _scan_pass(pass_P: dict, deltas_col, durs_col, exposed):
+    """One timeline pass for one environment: the event walk as a
+    ``lax.scan`` over (delta, duration, blocking, scope, phase) rows —
+    the general-shape fallback when a pass is not scope-disjoint."""
+
+    def step(carry, x):
+        tc, tn, exp = carry
+        delta, dur, blk, sc_oh, ph_oh = x
+        tc = tc + delta
+        start = jnp.maximum(tc, jnp.sum(tn * sc_oh))
+        end = start + dur
+        exp = exp + ph_oh * (end - tc)          # ph_oh pre-masked by blk
+        tc = jnp.where(blk > 0, end, tc)
+        tn = tn * (1.0 - sc_oh) + sc_oh * end
+        return (tc, tn, exp), None
+
+    init = (jnp.zeros(()), jnp.zeros(_SCOPE_COUNT), exposed)
+    (tc, tn, exposed), _ = jax.lax.scan(
+        step, init, (deltas_col, durs_col, pass_P["block"],
+                     pass_P["scope_oh"], pass_P["phase_oh"]))
+    return tc, tn, exposed
+
+
+def _stage_fn_scan(P: dict, sram, peak, mem_bw, comm):
+    """The general stage kernel: per-event ``lax.scan`` vmapped over the
+    environment batch.  Only reached when a pass interleaves non-blocking
+    and blocking events on one scope."""
+    delays = _delays_jnp(P, sram, peak, mem_bw)          # (ncls, nenv)
+    compute = P["counts"] @ delays                        # (3, nenv)
+    comm_pad = jnp.concatenate(
+        [comm, jnp.zeros((1, comm.shape[1]))], axis=0)
+    df = P["fwd"]["dcounts"] @ delays
+    db = P["bwd"]["dcounts"] @ delays
+    uf = comm_pad[P["fwd"]["comm"]]
+    ub = comm_pad[P["bwd"]["comm"]]
+
+    def one_env(df_c, uf_c, db_c, ub_c):
+        _, _, exp = _scan_pass(P["fwd"], df_c, uf_c, jnp.zeros(3))
+        tc, tn, exp = _scan_pass(P["bwd"], db_c, ub_c, exp)
+        # Non-blocking residue past the end of backward compute.
+        resid = jnp.maximum(0.0, jnp.max(tn) - tc)
+        return exp + jnp.array([0.0, 0.0, 1.0]) * resid
+
+    exposed = jax.vmap(one_env, in_axes=(1, 1, 1, 1), out_axes=1)(
+        df, uf, db, ub)
+    return compute, exposed
+
+
+_jit_fns: dict = {}
+
+
+def _stage_jit(fast: bool):
+    fn = _jit_fns.get(fast)
+    if fn is None:
+        fn = jax.jit(_stage_fn_fast if fast else _stage_fn_scan)
+        _jit_fns[fast] = fn
+    return fn
+
+
+def stage_compute_exposed(stage, envs, nodes, mem_bw, mp: int, dp: int,
+                          pp: int, ep: int, placement
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """The ``backend="jax"`` twin of the simulator's NumPy kernel
+    (:func:`repro.core.simulator._stage_compute_exposed`): one jitted
+    device call per (stage, environment batch), returning NumPy
+    ``(compute, exposed)`` arrays, each ``(3, nenv)``."""
+    if not HAVE_JAX:   # pragma: no cover - callers gate on HAVE_JAX
+        raise RuntimeError("jax backend requested but jax is unavailable")
+    with enable_x64():
+        comm = comm_matrix(stage, envs, mp, dp, pp, ep, placement)
+        sram = np.array([max(int(n.sram_bytes), 1) for n in nodes],
+                        dtype=float)
+        peak = np.array([n.peak_flops for n in nodes], dtype=float)
+        P, fast = _prep(stage)
+        compute, exposed = _stage_jit(fast)(
+            P, jnp.asarray(sram), jnp.asarray(peak),
+            jnp.asarray(np.asarray(mem_bw, dtype=float)),
+            jnp.asarray(comm))
+        return np.asarray(compute), np.asarray(exposed)

@@ -407,6 +407,13 @@ def _simulate_pipeline(
 # ops, reproducing _simulate_group / simulate_iteration within float
 # round-off (<= 1e-9 relative, tests/test_compiled.py).  The event-loop
 # path above stays untouched as the bit-for-bit reference engine.
+#
+# ``backend`` selects the array library for the per-stage hot path (the
+# roofline delay matrix, the batched collective table and the timeline
+# scan): ``"numpy"`` is the PR-5 vectorized engine; ``"jax"`` routes
+# through :mod:`repro.core.jax_engine` — one jitted/vmapped device call
+# per (stage, environment-batch) — and silently falls back to NumPy when
+# JAX is not importable (a one-time warning).
 
 def _compiled_delays(stage, nodes, mem_bw) -> "np.ndarray":
     """Roofline compute delays, ``(n_lp, nenv)``: Eqns (1)/(2) over every
@@ -491,6 +498,35 @@ def _compiled_scan(stage, delays, comm):
     return compute, exposed
 
 
+_warned_no_jax = False
+
+
+def _stage_compute_exposed(stage, envs, nodes, mem_bw, mp, dp, pp, ep,
+                           placement, backend: str = "numpy"):
+    """One stage's ``(compute, exposed)`` — each ``(3, nenv)`` — through
+    the selected array backend.  The NumPy path is the PR-5 pipeline
+    (:func:`_compiled_delays` / :func:`_compiled_comm` /
+    :func:`_compiled_scan`); ``backend="jax"`` hands the same flat arrays
+    to :func:`repro.core.jax_engine.stage_compute_exposed` (jit + vmap
+    over the environment axis) and degrades to NumPy when JAX is absent."""
+    if backend == "jax":
+        from repro.core import jax_engine
+        if jax_engine.HAVE_JAX:
+            return jax_engine.stage_compute_exposed(
+                stage, envs, nodes, mem_bw, mp, dp, pp, ep, placement)
+        global _warned_no_jax
+        if not _warned_no_jax:
+            _warned_no_jax = True
+            import warnings
+            warnings.warn("backend='jax' requested but jax is not "
+                          "importable; falling back to the NumPy compiled "
+                          "engine (identical results, no device dispatch)",
+                          RuntimeWarning, stacklevel=3)
+    delays = _compiled_delays(stage, nodes, mem_bw)
+    comm = _compiled_comm(stage, envs, mp, dp, pp, ep, placement)
+    return _compiled_scan(stage, delays, comm)
+
+
 def _compiled_mem_bws(nodes, total: float, mem_bw_override) -> "np.ndarray":
     import numpy as np
     return np.array([n.local_bw if mem_bw_override == "local"
@@ -499,7 +535,8 @@ def _compiled_mem_bws(nodes, total: float, mem_bw_override) -> "np.ndarray":
 
 
 def _time_compiled_flat(cw, envs, zero_stage, mem_bw_override, require_fit,
-                        placement) -> List[IterationBreakdown]:
+                        placement,
+                        backend: str = "numpy") -> List[IterationBreakdown]:
     wl = cw.workload
     stage = cw.stages[0]
     nodes = [n for n, _ in envs]
@@ -511,9 +548,9 @@ def _time_compiled_flat(cw, envs, zero_stage, mem_bw_override, require_fit,
             for n in nodes]
     mem_bw = _compiled_mem_bws(nodes, total, mem_bw_override)
     ep = getattr(wl, "ep", 1)
-    delays = _compiled_delays(stage, nodes, mem_bw)
-    comm = _compiled_comm(stage, envs, wl.mp, wl.dp, 1, ep, placement)
-    compute, exposed = _compiled_scan(stage, delays, comm)
+    compute, exposed = _stage_compute_exposed(stage, envs, nodes, mem_bw,
+                                              wl.mp, wl.dp, 1, ep, placement,
+                                              backend)
     numer = _optimizer_numer(stage.dense_w, stage.expert_w, stage.sparse,
                              wl.dp * ep, wl.dp, zero_stage)
     out = []
@@ -531,7 +568,9 @@ def _time_compiled_flat(cw, envs, zero_stage, mem_bw_override, require_fit,
 
 
 def _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
-                            require_fit, placement) -> List[IterationBreakdown]:
+                            require_fit, placement,
+                            backend: str = "numpy"
+                            ) -> List[IterationBreakdown]:
     import numpy as np
     wl = cw.workload
     pp = wl.pp
@@ -553,10 +592,10 @@ def _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
     totals = np.zeros((pp, nenv))
     numers = np.zeros(pp)
     for s, stage in enumerate(cw.stages):
-        delays = _compiled_delays(stage, nodes, mem_bws[s])
-        comm = _compiled_comm(stage, envs, wl.mp, wl.dp, pp, wl.ep,
-                              placement)
-        compute, exposed = _compiled_scan(stage, delays, comm)
+        compute, exposed = _stage_compute_exposed(stage, envs, nodes,
+                                                  mem_bws[s], wl.mp, wl.dp,
+                                                  pp, wl.ep, placement,
+                                                  backend)
         computes.append(compute)
         exposeds.append(exposed)
         totals[s] = compute.sum(axis=0) + exposed.sum(axis=0)
@@ -586,6 +625,62 @@ def _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
     return out
 
 
+def _time_compiled_assigned(
+    cw,
+    stage_envs: "List[Tuple[NodeConfig, Topology]]",
+    zero_stage: int,
+    mem_bw_override: "Optional[float | str]",
+    require_fit: bool,
+    placement=None,
+) -> IterationBreakdown:
+    """:func:`_simulate_pipeline` over a pre-lowered workload: the
+    placement-assigned pipeline path (mixed fleet + ``pp > 1`` + a
+    placement whose ``assign_stages`` maps stages to node groups), with
+    each stage timed on *its own* (node, topology) environment through
+    the compiled per-stage kernels instead of the reference event loop.
+
+    Mirrors ``_simulate_pipeline`` clause for clause — per-stage
+    footprints gated against the assigned node, per-stage memory
+    bandwidths, gating stage ``k``, concurrent optimizer as a max over
+    stages, schedule scaling — so the two agree within 1e-9 relative
+    (tests/test_compiled.py)."""
+    wl = cw.workload
+    pp = wl.pp
+    m = max(1, wl.num_microbatches)
+    v = max(1, getattr(wl, "virtual_stages", 1))
+    nodes = [node for node, _ in stage_envs]
+    reps = stage_footprints(wl, None, zero_stage, nodes=nodes)
+    worst_rep = worst_report(reps)
+    mem_bws = [node.local_bw if mem_bw_override == "local"
+               else mem_bw_override if mem_bw_override is not None
+               else effective_memory_bw(node, r.total)
+               for node, r in zip(nodes, reps)]
+    feasible = worst_rep.fits_total
+    scale, bubble = _schedule_factors(wl.schedule, pp, m, v)
+    if require_fit and not feasible:
+        return _infeasible(worst_rep, min(mem_bws), bubble_fraction=bubble)
+    import numpy as np
+    data_ways = wl.dp * wl.ep
+    per_stage = []
+    for stage, env, bw in zip(cw.stages, stage_envs, mem_bws):
+        compute, exposed = _stage_compute_exposed(
+            stage, [env], [env[0]], np.array([bw], dtype=float),
+            wl.mp, wl.dp, pp, wl.ep, placement)
+        fp = PhaseBreakdown(float(compute[0, 0]), float(exposed[0, 0]))
+        ig = PhaseBreakdown(float(compute[1, 0]), float(exposed[1, 0]))
+        wg = PhaseBreakdown(float(compute[2, 0]), float(exposed[2, 0]))
+        per_stage.append((fp, ig, wg, fp.total + ig.total + wg.total))
+    k = max(range(pp), key=lambda s: per_stage[s][3])
+    fp, ig, wg, _ = per_stage[k]
+    optim = max(_optimizer_numer(stage.dense_w, stage.expert_w, stage.sparse,
+                                 data_ways, wl.dp, zero_stage) / bw
+                for stage, bw in zip(cw.stages, mem_bws))
+    return IterationBreakdown(fp.scaled(scale), ig.scaled(scale),
+                              wg.scaled(scale), optim, worst_rep,
+                              mem_bws[k], feasible,
+                              bubble_fraction=bubble)
+
+
 def time_compiled(
     cw,
     envs: "List[Tuple[NodeConfig, Topology]]",
@@ -593,6 +688,7 @@ def time_compiled(
     mem_bw_override: "Optional[float | str]" = None,
     require_fit: bool = False,
     placement=None,
+    backend: str = "numpy",
 ) -> List[IterationBreakdown]:
     """Time one :class:`~repro.core.compiled.CompiledWorkload` on a batch
     of (node, topology) environments at once.
@@ -601,46 +697,62 @@ def time_compiled(
     roofline, collective, timeline, optimizer and footprint models — but
     the per-environment work is NumPy array ops over the pre-lowered
     arrays, so a batch costs barely more than a single cell.  Results
-    match the reference event loop within 1e-9 relative."""
+    match the reference event loop within 1e-9 relative.
+    ``backend="jax"`` runs the per-stage hot path as one jitted/vmapped
+    device call (:mod:`repro.core.jax_engine`), NumPy-fallback when JAX
+    is absent."""
     if not envs:
         return []
     if getattr(cw.workload, "pp", 1) > 1:
         return _time_compiled_pipeline(cw, envs, zero_stage, mem_bw_override,
-                                       require_fit, placement)
+                                       require_fit, placement, backend)
     return _time_compiled_flat(cw, envs, zero_stage, mem_bw_override,
-                               require_fit, placement)
+                               require_fit, placement, backend)
 
 
 def _env_breakdowns(cw, envs, zero_stage, mem_bw_override, require_fit,
-                    placement, env_cache) -> List[IterationBreakdown]:
+                    placement, env_cache,
+                    backend: str = "numpy") -> List[IterationBreakdown]:
     """Per-environment breakdowns through the optional cross-cell cache
     (key: placement x environment x require_fit; the study engine prefills
     it with one big batch per strategy group)."""
     if env_cache is None:
         return time_compiled(cw, envs, zero_stage, mem_bw_override,
-                             require_fit, placement)
+                             require_fit, placement, backend)
     missing = [env for env in dict.fromkeys(envs)
                if (placement, env, require_fit) not in env_cache]
     if missing:
         for env, br in zip(missing,
                            time_compiled(cw, missing, zero_stage,
                                          mem_bw_override, require_fit,
-                                         placement)):
+                                         placement, backend)):
             env_cache[(placement, env, require_fit)] = br
     return [env_cache[(placement, env, require_fit)] for env in envs]
 
 
-def compiled_delegates_to_reference(workload: Workload,
-                                    cluster: ClusterLike,
-                                    placement) -> bool:
-    """True when a cell must run on the reference event loop instead of
-    the vectorized path: a mixed fleet + ``pp > 1`` + an explicit
-    placement may assign pipeline stages to *different* node groups
-    (``Placement.assign_stages``), which the batch evaluator does not
-    model.  Shared by :func:`simulate_iteration_compiled` and the study
-    engine's batch prefetch so the two cannot drift."""
-    return len(cluster.node_groups) > 1 and placement is not None \
-        and getattr(workload, "pp", 1) > 1
+def compiled_stage_assignment(workload: Workload, cluster: ClusterLike,
+                              placement, zero_stage: int = 2):
+    """The per-stage (node, topology) environments a placement assigns,
+    or None when replicate-everywhere semantics apply (single group, no
+    placement, ``pp == 1``, or the placement declines the fleet).
+
+    Mirrors the dispatch at the top of :func:`simulate_iteration`;
+    shared with :func:`simulate_iteration_compiled` and the study
+    engine's batch prefetch so the three cannot drift.  (Until PR 8 this
+    path — mixed fleet + ``pp > 1`` + explicit placement — *delegated*
+    to the reference event loop; it now runs compiled via
+    :func:`_time_compiled_assigned`.)"""
+    groups = cluster.node_groups
+    if len(groups) <= 1 or placement is None \
+            or getattr(workload, "pp", 1) <= 1:
+        return None
+    stage_bytes = [r.total for r in
+                   stage_footprints(workload, None, zero_stage)]
+    nodes_per_stage = workload.mp * workload.dp * workload.ep
+    assign = placement.assign_stages(stage_bytes, groups, nodes_per_stage)
+    if assign is None:
+        return None
+    return [(groups[i].node, groups[i].topology) for i in assign]
 
 
 def simulate_iteration_compiled(
@@ -651,21 +763,27 @@ def simulate_iteration_compiled(
     require_fit: bool = False,
     placement=None,
     env_cache: "Optional[dict]" = None,
+    backend: str = "numpy",
 ) -> IterationBreakdown:
     """:func:`simulate_iteration` over a pre-lowered workload.
 
     Single-group clusters and heterogeneous flat / replicate-everywhere
-    cells run vectorized; the placement-assigned pipeline path
-    (:func:`compiled_delegates_to_reference`) delegates to the reference
-    event loop, which is bit-for-bit by construction."""
+    cells run vectorized over the group environments; the
+    placement-assigned pipeline path
+    (:func:`compiled_stage_assignment` not None) runs each stage on its
+    assigned environment through :func:`_time_compiled_assigned` — every
+    cell is compiled, none delegates to the reference loop."""
     groups = cluster.node_groups
     wl = cw.workload
-    if compiled_delegates_to_reference(wl, cluster, placement):
-        return simulate_iteration(wl, cluster, zero_stage, mem_bw_override,
-                                  require_fit, placement)
+    stage_envs = compiled_stage_assignment(wl, cluster, placement,
+                                           zero_stage)
+    if stage_envs is not None:
+        return _time_compiled_assigned(cw, stage_envs, zero_stage,
+                                       mem_bw_override, require_fit,
+                                       placement)
     per = _env_breakdowns(cw, [(g.node, g.topology) for g in groups],
                           zero_stage, mem_bw_override, require_fit,
-                          placement, env_cache)
+                          placement, env_cache, backend)
     if len(per) == 1:
         return per[0]
     worst_rep = worst_report([b.footprint for b in per])
@@ -687,10 +805,11 @@ def group_breakdowns_compiled(
     mem_bw_override: "Optional[float | str]" = None,
     placement=None,
     env_cache: "Optional[dict]" = None,
+    backend: str = "numpy",
 ) -> List[IterationBreakdown]:
     """:func:`group_breakdowns` over a pre-lowered workload (the
     multi-tenant ScheduleModel's per-group instance timings)."""
     return _env_breakdowns(cw, [(g.node, g.topology)
                                 for g in cluster.node_groups],
                            zero_stage, mem_bw_override, False, placement,
-                           env_cache)
+                           env_cache, backend)

@@ -443,7 +443,9 @@ class StudySpec:
         "fp_compute", "fp_exposed_comm", "ig_compute", "ig_exposed_comm",
         "wg_compute", "wg_exposed_comm", "optimizer", "total",
         "feasible", "footprint_bytes", "mem_bw",
-        "cost_usd", "tco", "perf_per_dollar",
+        "cost_usd", "energy_usd", "tco", "perf_per_dollar",
+        "pareto_rank", "pareto_optimal",
+        "search_round", "search_fidelity", "search_score",
         "concurrent_instances", "waves", "turnaround", "makespan",
         "ttft_p50", "ttft_p99", "tpot", "goodput", "goodput_per_dollar",
     })
@@ -563,7 +565,9 @@ def _cost_columns(record: Dict[str, Any], cluster: ClusterLike) -> None:
         return
     capex = cost.capex(cluster)
     record["cost_usd"] = capex
-    tco = capex + cost.energy_usd(cluster)
+    energy = cost.energy_usd(cluster)
+    record["energy_usd"] = energy
+    tco = capex + energy
     record["tco"] = tco
     total = record.get("total")
     if record.get("feasible", True) and isinstance(total, (int, float)) \
@@ -728,7 +732,7 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
 
 # --- engines ----------------------------------------------------------- #
 
-ENGINES = ("reference", "compiled")
+ENGINES = ("reference", "compiled", "jax")
 
 
 def _run_cells(spec: StudySpec, cells: List[tuple],
@@ -740,14 +744,17 @@ def _run_cells(spec: StudySpec, cells: List[tuple],
     state behind that poisons a later run (serial or forked)."""
     wl_memo: dict = {}
     sim_memo: dict = {}
-    if engine == "compiled":
-        return _run_cells_compiled(spec, cells, wl_memo, sim_memo)
+    if engine in ("compiled", "jax"):
+        backend = "jax" if engine == "jax" else "numpy"
+        return _run_cells_compiled(spec, cells, wl_memo, sim_memo,
+                                   backend=backend)
     return [_eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo)
             for s, p, cl, pl in cells]
 
 
 def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
-                        wl_memo: dict, sim_memo: dict) -> List[CellResult]:
+                        wl_memo: dict, sim_memo: dict,
+                        backend: str = "numpy") -> List[CellResult]:
     """Strategy-major compiled evaluation.
 
     Cells are grouped by workload key; each group resolves and lowers its
@@ -758,7 +765,7 @@ def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
     reference engine — only the simulate callables differ, so the record
     schema and every non-timing column are identical by construction."""
     from repro.core.simulator import (
-        compiled_delegates_to_reference,
+        compiled_stage_assignment,
         group_breakdowns_compiled,
         simulate_iteration_compiled,
         time_compiled,
@@ -788,15 +795,18 @@ def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
                 env_cache: dict = {}
                 # Prefetch: one batched evaluation per (placement,
                 # require_fit) over every environment the group's cells
-                # touch.  Cells on the reference-fallback path (mixed
-                # fleet + pipeline + explicit placement) are skipped —
-                # simulate_iteration_compiled delegates those wholesale.
+                # touch.  Cells on the assigned-pipeline path (mixed
+                # fleet + pp>1 + a placement that stages the fleet) skip
+                # the prefetch: simulate_iteration_compiled times those
+                # per-stage (_time_compiled_assigned), not per-group, so
+                # they never read the env cache.
                 want: Dict[tuple, List[tuple]] = {}
                 for i in idxs:
                     _, _, cl, pl = cells[i]
                     if cl is None:
                         continue
-                    if compiled_delegates_to_reference(wl, cl, pl):
+                    if compiled_stage_assignment(wl, cl, pl,
+                                                 zero) is not None:
                         continue
                     for g in cl.node_groups:
                         env = (g.node, g.topology)
@@ -810,7 +820,7 @@ def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
                     for env, br in zip(batch,
                                        time_compiled(cw, batch, zero,
                                                      spec.mem_bw_override,
-                                                     rf, pl)):
+                                                     rf, pl, backend)):
                         env_cache[(pl, env, rf)] = br
 
                 def simulate(workload, cluster, zero_stage=2,
@@ -818,14 +828,15 @@ def _run_cells_compiled(spec: StudySpec, cells: List[tuple],
                              placement=None, _cw=cw, _cache=env_cache):
                     return simulate_iteration_compiled(
                         _cw, cluster, zero_stage, mem_bw_override,
-                        require_fit, placement, env_cache=_cache)
+                        require_fit, placement, env_cache=_cache,
+                        backend=backend)
 
                 def group_sim(workload, cluster, zero_stage=2,
                               mem_bw_override=None, placement=None,
                               _cw=cw, _cache=env_cache):
                     return group_breakdowns_compiled(
                         _cw, cluster, zero_stage, mem_bw_override,
-                        placement, env_cache=_cache)
+                        placement, env_cache=_cache, backend=backend)
         for i in idxs:
             s, p, cl, pl = cells[i]
             results[i] = _eval_cell(spec, s, p, cl, pl, wl_memo, sim_memo,
@@ -898,7 +909,7 @@ def _validate_spec(spec: StudySpec, mode: str) -> None:
 
 
 def run_study(spec: StudySpec, processes: Optional[int] = None,
-              engine: str = "reference",
+              engine: str = "compiled",
               validate: str = "warn") -> "StudyResult":
     """Evaluate every cell of ``spec``; memoizes workload decompositions
     (keyed by strategy + ``workload_deps``) and simulator calls (keyed by
@@ -906,14 +917,20 @@ def run_study(spec: StudySpec, processes: Optional[int] = None,
 
     ``engine`` selects the evaluator:
 
-    * ``"reference"`` (default) — the event-loop simulator, bit-for-bit
-      the historical behavior;
-    * ``"compiled"`` — each decomposition is lowered once to flat NumPy
-      arrays (:mod:`repro.core.compiled`) and timed against whole batches
-      of cluster cells in array ops
+    * ``"compiled"`` (default) — each decomposition is lowered once to
+      flat NumPy arrays (:mod:`repro.core.compiled`) and timed against
+      whole batches of cluster cells in array ops
       (:func:`repro.core.simulator.time_compiled`).  Records match the
       reference within 1e-9 relative (tests/test_compiled.py) at a
       multiple of the throughput — see docs/perf.md.
+    * ``"jax"`` — the compiled arrays are dispatched through the
+      jit+vmap kernel in :mod:`repro.core.jax_engine` (scoped float64);
+      identical records within 1e-9, fastest on large cross-products.
+      Falls back to the NumPy compiled engine (with a one-time
+      RuntimeWarning) when ``jax`` is not importable.
+    * ``"reference"`` — the event-loop simulator, bit-for-bit the
+      historical behavior; the escape hatch if a compiled record is ever
+      in doubt.
 
     ``processes > 1`` fans cells out over a fork()-based process pool
     (POSIX only; falls back to serial elsewhere).  Dispatch is
@@ -1042,6 +1059,16 @@ class StudyResult:
         for c in self.cells:
             c.record[f"{metric}_norm"] = c.record[metric] / value
         return self
+
+    def pareto_front(self, objectives=None) -> "StudyResult":
+        """Frontier cells over ``objectives`` (default: the paper's
+        time/TCO/energy triple).  Annotates every record with
+        ``pareto_rank`` / ``pareto_optimal`` in place — a thin delegate
+        to :func:`repro.core.search.pareto_front`."""
+        from repro.core import search
+        return search.pareto_front(
+            self, objectives if objectives is not None
+            else search.DEFAULT_OBJECTIVES)
 
     # -- reshaping / export --------------------------------------------- #
     def pivot(self, index: str, columns: str,

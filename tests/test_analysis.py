@@ -66,10 +66,12 @@ def codes(diags):
 class TestFramework:
     def test_registry_covers_all_packs(self):
         packs = {r.pack for r in list_rules()}
-        assert packs == {"workload", "compiled", "study", "cluster", "serving"}
+        assert packs == {"workload", "compiled", "study", "cluster",
+                         "serving", "search"}
         assert len(list_rules("workload")) == 5
         assert len(list_rules("compiled")) == 5
         assert len(list_rules("serving")) == 4
+        assert len(list_rules("search")) == 3
 
     def test_rule_config_disable(self, small_cfg):
         wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)

@@ -343,19 +343,31 @@ class TestCostModel:
         assert best.record["feasible"]
 
     def test_cost_axis_shares_one_simulation(self, small_cfg, monkeypatch):
-        """A pure price sweep simulates each physical config once."""
+        """A pure price sweep simulates each physical config once.
+        Instrumented per engine: the reference path through
+        study.simulate_iteration, the compiled path through
+        simulator.time_compiled (one batched prefetch)."""
+        import repro.core.simulator as sim_mod
         import repro.core.study as study_mod
-        calls = []
-        real = study_mod.simulate_iteration
-        monkeypatch.setattr(study_mod, "simulate_iteration",
-                            lambda *a, **k: calls.append(1) or real(*a, **k))
-        run_study(StudySpec(
+        spec = StudySpec(
             name="t", model=small_cfg, shape=SMALL_SHAPE,
             cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),
             strategies=ParallelSpec(mp=4, dp=2),
             axes=[Axis("em_usd", (4.0, 8.0, 16.0),
-                       path="cost.usd_per_gb_em")]))
+                       path="cost.usd_per_gb_em")])
+        calls = []
+        real = study_mod.simulate_iteration
+        monkeypatch.setattr(study_mod, "simulate_iteration",
+                            lambda *a, **k: calls.append(1) or real(*a, **k))
+        run_study(spec, engine="reference")
         assert len(calls) == 1
+        batches = []
+        real_tc = sim_mod.time_compiled
+        monkeypatch.setattr(sim_mod, "time_compiled",
+                            lambda *a, **k: batches.append(1)
+                            or real_tc(*a, **k))
+        run_study(spec, engine="compiled")
+        assert len(batches) == 1
 
     def test_best_maximize_ranks_perf_per_dollar(self, small_cfg):
         cluster = dataclasses.replace(BASELINE_DGX_A100, num_nodes=8)

@@ -19,6 +19,7 @@ study.  Locked here:
 
 import dataclasses
 import math
+import unittest.mock
 
 import pytest
 
@@ -81,7 +82,10 @@ def assert_records_equivalent(ref, comp, rel: float = REL) -> None:
 
 
 def both_engines(spec):
-    return run_study(spec), run_study(spec, engine="compiled")
+    # engine="reference" is now the explicit escape hatch — run_study
+    # defaults to "compiled" since ISSUE 8.
+    return (run_study(spec, engine="reference"),
+            run_study(spec, engine="compiled"))
 
 
 def assert_breakdowns_equivalent(a, b, rel: float = REL) -> None:
@@ -259,17 +263,42 @@ class TestSimulatorEquivalence:
                                                   B_HYBRID_EM)):
             assert_breakdowns_equivalent(a, b)
 
-    def test_placement_assigned_pipeline_delegates(self, tcfg):
-        # Mixed fleet + pp>1 + explicit placement goes through the
-        # reference path wholesale — bit-for-bit, not just 1e-9.
+    def test_placement_assigned_pipeline_runs_compiled(self, tcfg):
+        # Mixed fleet + pp>1 + explicit placement: the path that used to
+        # delegate to the reference event loop now runs fully compiled
+        # (per-stage environments through _time_compiled_assigned) and
+        # matches within the engine-equivalence envelope.
+        from repro.core.cluster import B_HYBRID_EM
+        from repro.core.placement import EM_AWARE_PLACEMENT
+        from repro.core.simulator import compiled_stage_assignment
+        wl = decompose(tcfg, SHAPE, mp=16, dp=16, pp=4)
+        assert compiled_stage_assignment(
+            wl, B_HYBRID_EM, EM_AWARE_PLACEMENT) is not None
+        ref = simulate_iteration(wl, B_HYBRID_EM,
+                                 placement=EM_AWARE_PLACEMENT)
+        with unittest.mock.patch(
+                "repro.core.simulator.simulate_iteration",
+                side_effect=AssertionError(
+                    "assigned-pipeline cell fell back to the "
+                    "reference event loop")):
+            comp = simulate_iteration_compiled(
+                wl.compiled(), B_HYBRID_EM, placement=EM_AWARE_PLACEMENT)
+        assert_breakdowns_equivalent(ref, comp)
+
+    def test_placement_override_and_fit_variants_run_compiled(self, tcfg):
         from repro.core.cluster import B_HYBRID_EM
         from repro.core.placement import EM_AWARE_PLACEMENT
         wl = decompose(tcfg, SHAPE, mp=16, dp=16, pp=4)
-        ref = simulate_iteration(wl, B_HYBRID_EM,
-                                 placement=EM_AWARE_PLACEMENT)
-        comp = simulate_iteration_compiled(wl.compiled(), B_HYBRID_EM,
-                                           placement=EM_AWARE_PLACEMENT)
-        assert ref.as_dict() == comp.as_dict()
+        cw = wl.compiled()
+        for ov in (None, "local", 500e9):
+            for rf in (False, True):
+                ref = simulate_iteration(
+                    wl, B_HYBRID_EM, mem_bw_override=ov, require_fit=rf,
+                    placement=EM_AWARE_PLACEMENT)
+                comp = simulate_iteration_compiled(
+                    cw, B_HYBRID_EM, mem_bw_override=ov, require_fit=rf,
+                    placement=EM_AWARE_PLACEMENT)
+                assert_breakdowns_equivalent(ref, comp)
 
     def test_scope_codes_agree(self):
         assert compiled_mod.SCOPES == _SCOPES

@@ -1,0 +1,273 @@
+"""JAX-native batch evaluator (ISSUE 8): the jit/vmap kernel in
+``repro.core.jax_engine`` must agree with the NumPy compiled engine and
+the reference event loop within 1e-9 relative, everywhere:
+
+  * a parametrized grid across all four topology families x PP/EP x
+    schedules x EM nodes x bandwidth overrides x require_fit;
+  * ``run_study(engine="jax")`` record-for-record against both other
+    engines;
+  * a hypothesis property over random topologies/strategies/overrides
+    when hypothesis is installed (the grid still runs without it);
+  * the NumPy fallback path (jax absent -> one RuntimeWarning, identical
+    records);
+  * x64 scoping: the engine computes in float64 without flipping the
+    process-global JAX default (the repro.kernels/models f32 stack runs
+    in the same process).
+
+``jax`` itself is importorskip-ed so a NumPy-only environment (the CI
+bench-smoke lane installs just numpy) skips cleanly.
+"""
+
+import dataclasses
+import math
+import warnings
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import (
+    BASELINE_DGX_A100,
+    ClusterConfig,
+    HierarchicalSwitch,
+    NodeConfig,
+    SingleSwitch,
+    Torus,
+)
+from repro.core.simulator import (
+    simulate_iteration,
+    simulate_iteration_compiled,
+    time_compiled,
+)
+from repro.core.study import Axis, PowerOfTwoSpace, StudySpec, run_study
+from repro.core.workload import decompose
+
+GB = 1e9
+REL = 1e-9
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+SMALL_NODE = NodeConfig("sim", peak_flops=100e12, local_cap=16 * GB,
+                        local_bw=1000 * GB, sram_bytes=20e6, tdp_watts=300)
+EM_NODE = dataclasses.replace(SMALL_NODE, local_cap=0.2 * GB,
+                              exp_cap=64 * GB, exp_bw=250 * GB)
+
+TOPOLOGIES = {
+    "hier": HierarchicalSwitch(pod_size=4, intra_bw=200 * GB,
+                               inter_bw=25 * GB),
+    "torus": Torus(dims=(4, 4), link_bw=40 * GB),
+    "torus-dcn": Torus(dims=(2, 2), link_bw=40 * GB, dcn_bw=10 * GB),
+    "switch": SingleSwitch(bw=300 * GB),
+}
+
+
+def assert_breakdowns_equivalent(a, b, rel: float = REL) -> None:
+    for k, va in a.as_dict().items():
+        vb = b.as_dict()[k]
+        if isinstance(va, float) and (math.isnan(va) or math.isinf(va)):
+            assert str(va) == str(vb), k
+        else:
+            assert va == pytest.approx(vb, rel=rel, abs=1e-12), k
+    assert a.feasible == b.feasible
+    assert a.mem_bw == pytest.approx(b.mem_bw, rel=rel)
+    assert a.bubble_fraction == pytest.approx(b.bubble_fraction, rel=rel,
+                                              abs=1e-12)
+
+
+# ===================================================================== #
+# Fallback path: no jax needed (and must not break without it)
+# ===================================================================== #
+
+class TestNumpyFallback:
+    def test_fallback_warns_once_and_matches(self, monkeypatch):
+        from repro.core import jax_engine, simulator
+        wl = decompose(get_config("smollm-135m"), SMALL_SHAPE, mp=4, dp=4)
+        cluster = ClusterConfig("sim", SMALL_NODE, 16, TOPOLOGIES["hier"])
+        monkeypatch.setattr(jax_engine, "HAVE_JAX", False)
+        monkeypatch.setattr(simulator, "_warned_no_jax", False)
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            via_jax = simulate_iteration_compiled(wl.compiled(), cluster,
+                                                  backend="jax")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # second call: no re-warn
+            again = simulate_iteration_compiled(wl.compiled(), cluster,
+                                                backend="jax")
+        plain = simulate_iteration_compiled(wl.compiled(), cluster)
+        assert via_jax.as_dict() == plain.as_dict()
+        assert again.as_dict() == plain.as_dict()
+
+
+# ===================================================================== #
+# Everything below drives the real jit/vmap kernel
+# ===================================================================== #
+
+jax = pytest.importorskip("jax")
+
+
+JAX_CASES = [
+    # (model, topo key, node, mp, dp, pp, ep, schedule, override, req_fit)
+    ("smollm-135m", "hier", SMALL_NODE, 4, 4, 1, 1, "1f1b", None, False),
+    ("smollm-135m", "hier", SMALL_NODE, 2, 2, 4, 1, "gpipe", None, False),
+    ("smollm-135m", "hier", SMALL_NODE, 2, 2, 4, 1, "interleaved", None,
+     False),
+    ("smollm-135m", "torus", SMALL_NODE, 4, 4, 1, 1, "1f1b", "local",
+     False),
+    ("smollm-135m", "torus-dcn", SMALL_NODE, 2, 4, 2, 1, "1f1b", None,
+     False),
+    ("smollm-135m", "switch", SMALL_NODE, 8, 2, 1, 1, "1f1b", 500 * GB,
+     False),
+    ("smollm-135m", "hier", EM_NODE, 2, 8, 1, 1, "1f1b", None, False),
+    ("smollm-135m", "hier", EM_NODE, 2, 8, 1, 1, "1f1b", None, True),
+    ("granite-moe-3b-a800m", "hier", SMALL_NODE, 2, 2, 1, 4, "1f1b", None,
+     False),
+    ("granite-moe-3b-a800m", "torus", SMALL_NODE, 2, 2, 2, 2, "gpipe",
+     None, False),
+]
+
+
+class TestJaxEquivalence:
+    @pytest.mark.parametrize("case", JAX_CASES,
+                             ids=[f"{c[0]}-{c[1]}-mp{c[3]}dp{c[4]}"
+                                  f"pp{c[5]}ep{c[6]}-{c[7]}"
+                                  for c in JAX_CASES])
+    def test_grid(self, case):
+        arch, topo_key, node, mp, dp, pp, ep, sched, override, req = case
+        wl = decompose(get_config(arch), SMALL_SHAPE, mp=mp, dp=dp, pp=pp,
+                       ep=ep, schedule=sched)
+        cluster = ClusterConfig("sim", node, mp * dp * pp * ep,
+                                TOPOLOGIES[topo_key])
+        ref = simulate_iteration(wl, cluster, mem_bw_override=override,
+                                 require_fit=req)
+        for backend in ("numpy", "jax"):
+            comp = simulate_iteration_compiled(
+                wl.compiled(), cluster, mem_bw_override=override,
+                require_fit=req, backend=backend)
+            assert_breakdowns_equivalent(ref, comp)
+
+    def test_batched_envs_match_numpy(self):
+        """One vmapped call over several environments at once — the shape
+        the study prefetch uses — against per-env NumPy results."""
+        wl = decompose(get_config("smollm-135m"), SMALL_SHAPE, mp=4, dp=4)
+        cw = wl.compiled()
+        envs = [(SMALL_NODE, TOPOLOGIES["hier"]),
+                (EM_NODE, TOPOLOGIES["hier"]),
+                (SMALL_NODE, TOPOLOGIES["torus"]),
+                (SMALL_NODE, TOPOLOGIES["switch"])]
+        via_np = time_compiled(cw, envs, backend="numpy")
+        via_jax = time_compiled(cw, envs, backend="jax")
+        for a, b in zip(via_np, via_jax):
+            assert_breakdowns_equivalent(a, b)
+
+    def test_assigned_placement_pipeline(self):
+        from repro.core.cluster import B_HYBRID_EM
+        from repro.core.placement import EM_AWARE_PLACEMENT
+        cfg = get_config("transformer-1t")
+        wl = decompose(cfg, ShapeConfig("p", 2048, 1024, "train"),
+                       mp=16, dp=16, pp=4)
+        ref = simulate_iteration(wl, B_HYBRID_EM,
+                                 placement=EM_AWARE_PLACEMENT)
+        comp = simulate_iteration_compiled(wl.compiled(), B_HYBRID_EM,
+                                           placement=EM_AWARE_PLACEMENT,
+                                           backend="jax")
+        assert_breakdowns_equivalent(ref, comp)
+
+    def test_x64_stays_scoped(self):
+        """The engine must compute in f64 without flipping the process
+        default: the repo's f32 kernel/model tests share this process."""
+        import jax.numpy as jnp
+        wl = decompose(get_config("smollm-135m"), SMALL_SHAPE, mp=4, dp=4)
+        cluster = ClusterConfig("sim", SMALL_NODE, 16, TOPOLOGIES["hier"])
+        simulate_iteration_compiled(wl.compiled(), cluster, backend="jax")
+        assert jnp.ones(3).dtype == jnp.float32
+
+
+class TestJaxStudyEngine:
+    def test_engine_jax_matches_other_engines(self):
+        spec = StudySpec(
+            name="jax-study",
+            model=get_config("smollm-135m"), shape=SMALL_SHAPE,
+            cluster=dataclasses.replace(BASELINE_DGX_A100, num_nodes=8),
+            strategies=PowerOfTwoSpace(),
+            axes=[Axis("f", (1.0, 2.0), path="node.peak_flops",
+                       mode="scale")])
+        ref = run_study(spec, engine="reference")
+        via_jax = run_study(spec, engine="jax")
+        assert len(ref) == len(via_jax)
+        for ra, rb in zip(ref.records, via_jax.records):
+            assert set(ra) == set(rb)
+            for k, va in ra.items():
+                vb = rb[k]
+                if isinstance(va, float) and isinstance(vb, float):
+                    if math.isnan(va) or math.isinf(va):
+                        assert str(va) == str(vb), k
+                    else:
+                        assert va == pytest.approx(vb, rel=REL,
+                                                   abs=1e-12), k
+                else:
+                    assert va == vb, k
+
+    def test_unknown_engine_rejected(self):
+        spec = StudySpec(name="bad", evaluate=lambda ctx: {})
+        with pytest.raises(ValueError, match="engine"):
+            run_study(spec, engine="cuda")
+
+
+# ===================================================================== #
+# Hypothesis property (skipped without hypothesis; the grid above runs)
+# ===================================================================== #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def jax_inputs(draw):
+        mp = draw(st.sampled_from([1, 2, 4]))
+        dp = draw(st.sampled_from([1, 2, 4]))
+        pp = draw(st.sampled_from([1, 2, 4]))
+        schedule = draw(st.sampled_from(["1f1b", "gpipe", "interleaved"]))
+        fam = draw(st.sampled_from(["hier", "torus", "torus-dcn",
+                                    "switch"]))
+        if fam == "hier":
+            topo = HierarchicalSwitch(
+                pod_size=draw(st.sampled_from([2, 4, 8])),
+                intra_bw=draw(st.floats(50, 500)) * GB,
+                inter_bw=draw(st.floats(5, 50)) * GB)
+        elif fam == "torus":
+            topo = Torus(dims=(4, 4),
+                         link_bw=draw(st.floats(10, 100)) * GB)
+        elif fam == "torus-dcn":
+            topo = Torus(dims=(2, 2),
+                         link_bw=draw(st.floats(10, 100)) * GB,
+                         dcn_bw=draw(st.floats(2, 20)) * GB)
+        else:
+            topo = SingleSwitch(bw=draw(st.floats(50, 500)) * GB)
+        node = dataclasses.replace(
+            SMALL_NODE,
+            peak_flops=draw(st.floats(20, 500)) * 1e12,
+            local_bw=draw(st.floats(200, 3000)) * GB,
+            local_cap=draw(st.floats(0.5, 64)) * GB,
+            exp_cap=draw(st.sampled_from([0.0, 64 * GB])),
+            exp_bw=draw(st.floats(100, 1000)) * GB)
+        override = draw(st.sampled_from([None, "local", 500 * GB]))
+        zero = draw(st.sampled_from([0, 2, 3]))
+        return mp, dp, pp, schedule, topo, node, override, zero
+
+    class TestHypothesisJaxEquivalence:
+        @settings(max_examples=25, deadline=None)
+        @given(jax_inputs())
+        def test_jax_matches_numpy_and_reference(self, inputs):
+            mp, dp, pp, schedule, topo, node, override, zero = inputs
+            cfg = get_config("smollm-135m")
+            wl = decompose(cfg, SMALL_SHAPE, mp=mp, dp=dp, pp=pp,
+                           schedule=schedule)
+            cluster = ClusterConfig("h", node, mp * dp * pp, topo)
+            ref = simulate_iteration(wl, cluster, zero_stage=zero,
+                                     mem_bw_override=override)
+            for backend in ("numpy", "jax"):
+                comp = simulate_iteration_compiled(
+                    wl.compiled(), cluster, zero_stage=zero,
+                    mem_bw_override=override, backend=backend)
+                assert_breakdowns_equivalent(ref, comp)

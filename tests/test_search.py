@@ -1,0 +1,361 @@
+"""repro.core.search (ISSUE 8): Pareto fronts and the real optimizers.
+
+Locks the promotion of ``experiments/hillclimb_run.py`` into a library:
+
+  * Objective scoring semantics (minimize default, maximize negation,
+    missing/bool/NaN -> +inf);
+  * pareto_rank / pareto_front on hand-checkable record sets, including
+    the annotation side effect and infeasible exclusion;
+  * successive_halving rung accounting: geometric fidelity ramp, 1/eta
+    survivor culling, full-fidelity final rung, validation errors;
+  * evolutionary_search: seed determinism, memoization (no genome is
+    simulated twice), trace columns, and grid-optimality on a space
+    small enough to enumerate;
+  * the R101-R103 analysis rules fire exactly when they should;
+  * the search columns are reserved in StudySpec (an axis cannot shadow
+    them).
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.analysis import analyze_search
+from repro.analysis.rules_search import SearchTarget
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import dse
+from repro.core.cluster import BASELINE_DGX_A100
+from repro.core.search import (
+    DEFAULT_OBJECTIVES,
+    Objective,
+    dominates,
+    evolutionary_search,
+    pareto_front,
+    pareto_rank,
+    successive_halving,
+)
+from repro.core.study import (
+    Axis,
+    CellResult,
+    PowerOfTwoSpace,
+    StudyResult,
+    StudySpec,
+    run_study,
+)
+
+SMALL_SHAPE = ShapeConfig("small", 512, 64, "train")
+
+
+def result_from(records):
+    """A StudyResult wrapping bare dict records (no simulation)."""
+    return StudyResult(
+        spec=StudySpec(name="synthetic", evaluate=lambda ctx: {}),
+        cells=[CellResult(None, {}, None, None, None, dict(r))
+               for r in records])
+
+
+def small_spec(**kwargs):
+    kwargs.setdefault("name", "search-smoke")
+    kwargs.setdefault("model", get_config("smollm-135m"))
+    kwargs.setdefault("shape", SMALL_SHAPE)
+    kwargs.setdefault("cluster",
+                      dataclasses.replace(BASELINE_DGX_A100, num_nodes=8))
+    kwargs.setdefault("strategies", PowerOfTwoSpace())
+    return StudySpec(**kwargs)
+
+
+# ===================================================================== #
+# Objectives and dominance
+# ===================================================================== #
+
+class TestObjective:
+    def test_minimize_is_identity(self):
+        assert Objective("total").score({"total": 2.5}) == 2.5
+
+    def test_maximize_negates(self):
+        o = Objective("tokens_per_s", maximize=True)
+        assert o.score({"tokens_per_s": 4.0}) == -4.0
+
+    def test_missing_nan_bool_score_inf(self):
+        o = Objective("total")
+        assert o.score({}) == math.inf
+        assert o.score({"total": math.nan}) == math.inf
+        assert o.score({"total": True}) == math.inf
+        assert o.score({"total": "fast"}) == math.inf
+
+    def test_label(self):
+        assert Objective("total", label="time").name == "time"
+        assert Objective("tco").name == "tco"
+
+    def test_dominates(self):
+        assert dominates((1.0, 1.0), (1.0, 2.0))
+        assert not dominates((1.0, 2.0), (2.0, 1.0))   # incomparable
+        assert not dominates((1.0, 1.0), (1.0, 1.0))   # equal: not strict
+
+
+class TestParetoRank:
+    RECORDS = [
+        {"feasible": True, "total": 1.0, "tco": 9.0, "energy_usd": 2.0},
+        {"feasible": True, "total": 3.0, "tco": 4.0, "energy_usd": 1.0},
+        # dominated by record 1 on every axis:
+        {"feasible": True, "total": 3.5, "tco": 9.5, "energy_usd": 2.5},
+        # would dominate everything, but infeasible:
+        {"feasible": False, "total": 0.5, "tco": 1.0, "energy_usd": 0.1},
+        # feasible but non-finite on one objective:
+        {"feasible": True, "total": math.inf, "tco": 1.0,
+         "energy_usd": 1.0},
+    ]
+
+    def test_ranks(self):
+        assert pareto_rank(self.RECORDS) == [0, 0, 1, None, None]
+
+    def test_single_objective_is_argmin(self):
+        ranks = pareto_rank(self.RECORDS, (Objective("total"),))
+        assert ranks == [0, 1, 2, None, None]
+
+    def test_pareto_front_annotates_and_filters(self):
+        res = result_from(self.RECORDS)
+        front = pareto_front(res)
+        assert [r["pareto_rank"] for r in res.records] == \
+            [0, 0, 1, None, None]
+        assert [r["pareto_optimal"] for r in res.records] == \
+            [True, True, False, False, False]
+        assert len(front) == 2
+        assert all(r["pareto_optimal"] for r in front.records)
+
+    def test_empty_objectives_rejected(self):
+        with pytest.raises(ValueError, match="objective"):
+            pareto_front(result_from(self.RECORDS), ())
+
+    def test_studyresult_method_delegates(self):
+        res = result_from(self.RECORDS)
+        front = res.pareto_front()
+        assert len(front) == 2
+        assert "pareto_rank" in res.records[0]
+
+
+# ===================================================================== #
+# Successive halving
+# ===================================================================== #
+
+class TestSuccessiveHalving:
+    def test_rung_accounting_and_final_fidelity(self):
+        res = successive_halving(small_spec(), eta=2, rungs=3,
+                                 min_fidelity=0.25)
+        # PowerOfTwoSpace on 8 nodes -> 4 strategies; survivors per rung:
+        # 4 -> ceil(4/2)=2 -> 1, so 4 + 2 + 1 evaluations.
+        assert res.evaluations == 7
+        assert len(res.trace) == 7
+        by_round = {}
+        for r in res.trace.records:
+            by_round.setdefault(r["search_round"], []).append(r)
+        assert {k: len(v) for k, v in by_round.items()} == {0: 4, 1: 2,
+                                                            2: 1}
+        # Geometric ramp 0.25 -> 0.5 -> 1.0; final rung authoritative.
+        assert [by_round[k][0]["search_fidelity"] for k in (0, 1, 2)] == \
+            pytest.approx([0.25, 0.5, 1.0])
+        assert len(res.final) == 1
+        assert all(r["search_fidelity"] == 1.0
+                   for r in res.final.records)
+        assert res.best().record is res.final.records[0] or \
+            res.best().record == res.final.records[0]
+
+    def test_matches_exhaustive_best(self):
+        spec = small_spec()
+        res = successive_halving(spec, eta=2, rungs=2, min_fidelity=0.5)
+        exhaustive = run_study(spec)
+        grid_best = min(
+            (r for r in exhaustive.records if r["feasible"]),
+            key=lambda r: r["total"])
+        assert res.best().record["total"] == \
+            pytest.approx(grid_best["total"], rel=1e-12)
+
+    def test_requires_default_workload_builder(self):
+        spec = StudySpec(name="custom", evaluate=lambda ctx: {})
+        with pytest.raises(ValueError, match="global_batch"):
+            successive_halving(spec)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="eta"):
+            successive_halving(small_spec(), eta=1)
+        with pytest.raises(ValueError, match="rungs"):
+            successive_halving(small_spec(), rungs=0)
+        with pytest.raises(ValueError, match="min_fidelity"):
+            successive_halving(small_spec(), min_fidelity=0.0)
+
+    def test_single_rung_runs_full_fidelity(self):
+        res = successive_halving(small_spec(), rungs=1)
+        assert res.evaluations == 4
+        assert all(r["search_fidelity"] == 1.0 for r in res.records)
+
+
+# ===================================================================== #
+# Evolutionary search
+# ===================================================================== #
+
+EVO_AXES = [Axis("flops_x", (0.5, 1.0, 2.0), path="node.peak_flops",
+                 mode="scale")]
+
+
+class TestEvolutionarySearch:
+    def test_seed_determinism(self):
+        a = evolutionary_search(small_spec(axes=EVO_AXES), population=6,
+                                generations=3, seed=7)
+        b = evolutionary_search(small_spec(axes=EVO_AXES), population=6,
+                                generations=3, seed=7)
+        assert a.evaluations == b.evaluations
+        assert a.trace.records == b.trace.records
+
+    def test_trace_columns_and_memoization(self):
+        res = evolutionary_search(small_spec(axes=EVO_AXES), population=6,
+                                  generations=4, seed=1)
+        assert res.evaluations == len(res.trace)
+        seen = set()
+        for r in res.records:
+            assert {"search_round", "search_fidelity",
+                    "search_score"} <= set(r)
+            assert r["search_fidelity"] == 1.0
+            key = (r["strategy"], r["flops_x"])
+            assert key not in seen, "genome simulated twice"
+            seen.add(key)
+        # 12 distinct (strategy, axis) cells exist; memoization caps the
+        # evaluation count at the cell-space size.
+        assert res.evaluations <= 12
+
+    def test_finds_grid_optimum_on_enumerable_space(self):
+        spec = small_spec(axes=EVO_AXES)
+        res = evolutionary_search(spec, population=12, generations=8,
+                                  seed=0)
+        exhaustive = run_study(spec)
+        grid_best = min(
+            (r for r in exhaustive.records if r["feasible"]),
+            key=lambda r: r["total"])
+        assert res.best().record["total"] == \
+            pytest.approx(grid_best["total"], rel=1e-12)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="population"):
+            evolutionary_search(small_spec(), population=1)
+        with pytest.raises(ValueError, match="generations"):
+            evolutionary_search(small_spec(), generations=0)
+        with pytest.raises(ValueError, match="cluster"):
+            evolutionary_search(
+                StudySpec(name="no-cluster",
+                          model=get_config("smollm-135m"),
+                          shape=SMALL_SHAPE))
+
+    def test_best_requires_feasible_evaluation(self):
+        from repro.core.search import SearchResult
+        empty = SearchResult(
+            spec=small_spec(), objectives=(Objective("total"),),
+            trace=result_from([]), final=result_from([]), evaluations=0)
+        with pytest.raises(ValueError, match="no feasible"):
+            empty.best()
+
+
+# ===================================================================== #
+# dse.pareto_frontier demo study
+# ===================================================================== #
+
+class TestDseParetoFrontier:
+    def test_smoke(self):
+        records = dse.pareto_frontier(
+            cfg=get_config("smollm-135m"), shape=SMALL_SHAPE)
+        assert records
+        assert all(r["pareto_optimal"] for r in records)
+        assert all("energy_usd" in r and "tco" in r for r in records)
+        totals = [r["total"] for r in records]
+        assert totals == sorted(totals)
+
+
+# ===================================================================== #
+# Analysis pack R101-R103
+# ===================================================================== #
+
+def codes(diags):
+    return sorted(d.code for d in diags)
+
+
+class TestSearchRules:
+    GOOD = [
+        {"feasible": True, "total": 1.0, "tco": 9.0, "energy_usd": 2.0,
+         "pareto_optimal": True},
+        {"feasible": True, "total": 3.0, "tco": 4.0, "energy_usd": 1.0,
+         "pareto_optimal": True},
+        {"feasible": True, "total": 3.5, "tco": 9.5, "energy_usd": 2.5,
+         "pareto_optimal": False},
+    ]
+
+    def test_clean_target_is_silent(self):
+        assert analyze_search(self.GOOD) == []
+
+    def test_r101_empty_objectives(self):
+        diags = analyze_search(SearchTarget(objectives=(),
+                                            records=tuple(self.GOOD)))
+        assert "R101" in codes(diags)
+
+    def test_r101_duplicate_and_missing_columns(self):
+        # (R103 may also fire: the pareto annotations were made under a
+        # different objective set — only R101 is asserted here.)
+        dup = analyze_search(self.GOOD,
+                             objectives=(Objective("total"),
+                                         Objective("total")))
+        assert "R101" in codes(dup)
+        missing = analyze_search(self.GOOD,
+                                 objectives=(Objective("total"),
+                                             Objective("goodput")))
+        assert "R101" in codes(missing)
+
+    def test_r102_nonfinite_feasible(self):
+        bad = [dict(self.GOOD[0]), {"feasible": True, "total": math.nan,
+                                    "tco": 1.0, "energy_usd": 1.0}]
+        diags = analyze_search(bad)
+        assert codes(diags) == ["R102"]
+        assert diags[0].severity == "warning"
+        # Infeasible records are allowed to be non-finite.
+        ok = [dict(self.GOOD[0]), {"feasible": False, "total": math.nan,
+                                   "tco": 1.0, "energy_usd": 1.0}]
+        assert analyze_search(ok) == []
+
+    def test_r103_false_frontier_member(self):
+        bad = [dict(r) for r in self.GOOD]
+        bad[2]["pareto_optimal"] = True    # dominated, yet marked optimal
+        diags = analyze_search(bad)
+        assert "R103" in codes(diags)
+
+    def test_r103_incomplete_frontier(self):
+        bad = [dict(r) for r in self.GOOD]
+        bad[1]["pareto_optimal"] = False   # nothing dominates it
+        diags = analyze_search(bad)
+        assert "R103" in codes(diags)
+
+    def test_r103_skips_unannotated(self):
+        plain = [{k: v for k, v in r.items() if k != "pareto_optimal"}
+                 for r in self.GOOD]
+        assert analyze_search(plain) == []
+
+    def test_lifts_study_result_through_real_front(self):
+        res = result_from(TestParetoRank.RECORDS)
+        pareto_front(res, DEFAULT_OBJECTIVES)
+        diags = analyze_search(res, DEFAULT_OBJECTIVES)
+        # record[4] is feasible-but-inf, so R102 warns by design; the
+        # real pareto_front annotation must raise no *errors*.
+        assert codes(diags) == ["R102"]
+        assert all(d.severity != "error" for d in diags)
+
+
+# ===================================================================== #
+# Reserved columns
+# ===================================================================== #
+
+class TestReservedSearchColumns:
+    @pytest.mark.parametrize("name", ["pareto_rank", "pareto_optimal",
+                                      "search_round", "search_fidelity",
+                                      "search_score", "energy_usd",
+                                      "tco"])
+    def test_axis_cannot_shadow_search_columns(self, name):
+        with pytest.raises(ValueError, match="shadow"):
+            StudySpec(name="bad", evaluate=lambda ctx: {},
+                      axes=[Axis(name, (1,))])

@@ -381,68 +381,95 @@ class TestStudyResult:
 # Golden equivalence: declarative dse == frozen seed implementation
 # ===================================================================== #
 
+GOLDEN_REL = 1e-9
+
+
+def assert_deep_close(a, b, rel=GOLDEN_REL, path="$"):
+    """Structural equality with floats compared at ``rel`` relative
+    tolerance — the engine-equivalence envelope (docs/perf.md), not
+    bit-for-bit, now that ``run_study`` defaults to the compiled engine
+    while the legacy seed code walks the event loop directly."""
+    if isinstance(a, dict):
+        assert set(a) == set(b), path
+        for k in a:
+            assert_deep_close(a[k], b[k], rel, f"{path}.{k}")
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert_deep_close(x, y, rel, f"{path}[{i}]")
+    elif isinstance(a, float) or isinstance(b, float):
+        assert a == pytest.approx(b, rel=rel, abs=1e-12), path
+    else:
+        assert a == b, path
+
+
 class TestGoldenEquivalence:
-    """Reduced grids keep runtime bounded; the comparison itself is exact
-    (== on floats: identical inputs through the same simulator)."""
+    """Reduced grids keep runtime bounded; each figure study is locked
+    against the frozen seed implementation at the 1e-9 engine-equivalence
+    tolerance (the dse side now runs the compiled default engine)."""
 
     def test_fig8_mpdp_sweep(self, tcfg):
         new = dse.mpdp_sweep(tcfg, SHAPE, BASELINE_DGX_A100)
         old = legacy.mpdp_sweep(tcfg, SHAPE, BASELINE_DGX_A100)
         assert [(r.mp, r.dp) for r in new] == [(r.mp, r.dp) for r in old]
         for a, b in zip(new, old):
-            assert a.breakdown.as_dict() == b.breakdown.as_dict()
+            assert_deep_close(a.breakdown.as_dict(), b.breakdown.as_dict())
             assert a.footprint_bytes == b.footprint_bytes
 
     def test_fig9_memory_expansion(self, tcfg):
         kw = dict(em_bandwidths_gbs=(100, 1000, 2000),
                   strategies=[(32, 32), (8, 128)])
-        assert dse.memory_expansion_heatmap(
-            tcfg, SHAPE, BASELINE_DGX_A100, **kw) == \
+        assert_deep_close(
+            dse.memory_expansion_heatmap(
+                tcfg, SHAPE, BASELINE_DGX_A100, **kw),
             legacy.memory_expansion_heatmap(
-                tcfg, SHAPE, BASELINE_DGX_A100, **kw)
+                tcfg, SHAPE, BASELINE_DGX_A100, **kw))
 
     def test_fig10_compute_scaling(self, tcfg):
         kw = dict(compute_factors=(0.5, 1.0, 2.0),
                   em_bandwidths_gbs=(500, 2000))
-        assert dse.compute_scaling(
-            tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw) == \
+        assert_deep_close(
+            dse.compute_scaling(
+                tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw),
             legacy.compute_scaling(
-                tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw)
+                tcfg, SHAPE, BASELINE_DGX_A100, 8, 128, **kw))
 
     def test_fig11_network_scaling(self, tcfg):
         kw = dict(intra_factors=(0.5, 2.0), inter_factors=(1.0, 2.0))
-        assert dse.network_scaling(
-            tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw) == \
+        assert_deep_close(
+            dse.network_scaling(
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw),
             legacy.network_scaling(
-                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw)
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw))
 
     def test_fig12_bandwidth_rebalance(self, tcfg):
         kw = dict(ratios=(1, 6, 9.6, 16))
-        assert dse.bandwidth_rebalance(
-            tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw) == \
+        assert_deep_close(
+            dse.bandwidth_rebalance(
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw),
             legacy.bandwidth_rebalance(
-                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw)
+                tcfg, SHAPE, BASELINE_DGX_A100, 64, 16, **kw))
 
     def test_fig13a_dlrm_cluster_size(self):
         dlrm = get_dlrm_config()
         kw = dict(global_batch=65536, node_counts=(64, 16, 8))
-        assert dse.dlrm_cluster_size_sweep(
-            dlrm, BASELINE_DGX_A100, **kw) == \
-            legacy.dlrm_cluster_size_sweep(dlrm, BASELINE_DGX_A100, **kw)
+        assert_deep_close(
+            dse.dlrm_cluster_size_sweep(dlrm, BASELINE_DGX_A100, **kw),
+            legacy.dlrm_cluster_size_sweep(dlrm, BASELINE_DGX_A100, **kw))
 
     def test_fig13b_dlrm_memory_expansion(self):
         dlrm = get_dlrm_config()
         kw = dict(global_batch=65536, em_bandwidths_gbs=(500, 2000),
                   nodes_per_instance_opts=(64, 8))
-        assert dse.dlrm_memory_expansion(
-            dlrm, BASELINE_DGX_A100, **kw) == \
-            legacy.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100, **kw)
+        assert_deep_close(
+            dse.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100, **kw),
+            legacy.dlrm_memory_expansion(dlrm, BASELINE_DGX_A100, **kw))
 
     def test_fig15_cluster_comparison(self, tcfg):
         from repro.core.cluster import TABLE_III_CLUSTERS
         subset = {k: TABLE_III_CLUSTERS[k]
                   for k in ("A0", "A2", "B1", "dojo", "tpu-v4")}
         kw = dict(dlrm_batch=65536, clusters=subset)
-        assert dse.cluster_comparison(
-            tcfg, SHAPE, get_dlrm_config(), **kw) == \
-            legacy.cluster_comparison(tcfg, SHAPE, get_dlrm_config(), **kw)
+        assert_deep_close(
+            dse.cluster_comparison(tcfg, SHAPE, get_dlrm_config(), **kw),
+            legacy.cluster_comparison(tcfg, SHAPE, get_dlrm_config(), **kw))
