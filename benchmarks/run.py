@@ -345,6 +345,34 @@ def _rows_serving() -> List[Row]:
     return rows
 
 
+def _rows_fleet() -> List[Row]:
+    """ISSUE 9 tentpole: elastic-fleet DSE — the mixed-tenant trace
+    replayed under each fleet policy on the half-EM fleet, ranked by
+    turnaround-p99, plus the elastic+burst-vs-static headline ratios."""
+    t0 = time.monotonic()
+    ranked = dse.fleet_ranking(processes=PROCESSES)
+    dt = time.monotonic() - t0
+    rows = [("fleet", "study", "wallclock_s", round(dt, 1),
+             f"{len(ranked)} feasible policy cells")]
+    for r in ranked:
+        rows.append(("fleet", r["policy"], "turnaround_p99_s",
+                     round(r["turnaround_p99"], 1),
+                     "timeline policies beat the static allocation"
+                     if r["policy"] != "static" else ""))
+        rows.append(("fleet", r["policy"], "perf_per_tco_usd",
+                     f"{r['perf_per_dollar']:.3e}",
+                     f"pre={r['preemptions']} rs={r['resize_events']} "
+                     f"bu={r['burst_events']}"))
+    if ranked:
+        head = dse.fleet_headline(ranked)
+        rows.append(("fleet", "headline", "p99_win_x",
+                     round(head["turnaround_p99_ratio"], 2),
+                     "elastic+burst >= 1.3x over static (ISSUE 9)"))
+        rows.append(("fleet", "headline", "perf_per_dollar_win_x",
+                     round(head["perf_per_dollar_ratio"], 2), ""))
+    return rows
+
+
 def _rows_tco() -> List[Row]:
     """Beyond paper: heterogeneous A100+EM pod mix ranked perf-per-dollar
     (§V-D's qualitative perf/$ argument, quantified)."""
@@ -377,6 +405,7 @@ BENCHES = {
     "pp_ep": _rows_pp_ep,
     "placement": _rows_placement,
     "serving": _rows_serving,
+    "fleet": _rows_fleet,
     "tco": _rows_tco,
     "v5e-comet": _rows_v5e_archs,
 }
@@ -448,6 +477,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
     assert comp.records == comp_p.records, \
         "compiled engine: fork and serial records differ"
     serving = _serving_trajectory(smoke=smoke)
+    fleet = _fleet_trajectory(smoke=smoke)
     return {
         "bench": "fig15-transformer" + ("-smoke" if smoke else ""),
         "cells": len(ref),
@@ -466,6 +496,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "jax_max_rel_err": _max_rel_err(ref, jaxr),
         "jax_grid": _jax_grid_trajectory(smoke=smoke),
         "serving": serving,
+        "fleet": fleet,
     }
 
 
@@ -583,6 +614,33 @@ def _serving_trajectory(smoke: bool = False) -> dict:
         "top_rate": top_rate,
         "colocated_goodput_per_dollar": best("colocated"),
         "disaggregated_goodput_per_dollar": best("disaggregated"),
+    }
+
+
+def _fleet_trajectory(smoke: bool = False) -> dict:
+    """Fleet leg of the perf artifact: timeline replay speed
+    (events/sec over every policy cell) plus the elastic+burst-vs-static
+    headline ratio the CI smoke gate asserts stays >= 1.3x."""
+    from repro.core.study import run_study
+    spec = dse.fleet_study(**(dict(num_jobs=8) if smoke else {}))
+    t0 = time.monotonic()
+    res = run_study(spec)
+    dt = time.monotonic() - t0
+    records = [c.record for c in res]
+    feasible = [r for r in records if r["feasible"]]
+    events = sum(r["n_events"] for r in records)
+    head = (dse.fleet_headline(feasible)
+            if {"static", "elastic+burst"}
+            <= {r["policy"] for r in feasible} else {})
+    return {
+        "wallclock_s": round(dt, 3),
+        "cells": len(records),
+        "timeline_events": events,
+        "events_per_sec": round(events / dt, 1) if dt > 0 else 0.0,
+        "jobs_completed": sum(r["jobs_completed"] for r in feasible),
+        "headline_ratio": round(max(
+            head.get("turnaround_p99_ratio", 0.0),
+            head.get("perf_per_dollar_ratio", 0.0)), 3),
     }
 
 

@@ -12,7 +12,10 @@ Five rule packs (codes grouped by hundreds digit):
   servability (KV fits, SLO/trace sane, decode groups exist),
 * ``R1xx`` (:mod:`repro.analysis.rules_search`) — search objective sets
   and Pareto-frontier annotations (degenerate objectives, non-finite
-  values, dominance consistency).
+  values, dominance consistency),
+* ``F1xx`` (:mod:`repro.analysis.rules_fleet`) — FleetSpec timeline
+  sanity (jobs fit some group, positive trace, burst windows, finite
+  preemption/resize costs).
 
 Entry points: the ``analyze_*`` helpers below, the ``validate=`` gate on
 :func:`repro.core.study.run_study`, and the registry sweep CLI
@@ -34,6 +37,7 @@ from repro.analysis.diagnostics import (
 )
 from repro.analysis.rules_cluster import analyze_cluster
 from repro.analysis.rules_compiled import analyze_compiled
+from repro.analysis.rules_fleet import analyze_fleet
 from repro.analysis.rules_search import SearchTarget, analyze_search
 from repro.analysis.rules_serving import analyze_serving
 from repro.analysis.rules_study import analyze_study
@@ -48,6 +52,7 @@ __all__ = [
     "SearchTarget",
     "analyze_cluster",
     "analyze_compiled",
+    "analyze_fleet",
     "analyze_search",
     "analyze_serving",
     "analyze_study",

@@ -11,6 +11,8 @@ Statically checks, without running the simulator:
   paper-figure studies (S1xx, and K1xx on their base clusters);
 * the default ``dse.serving_study`` spec (V1xx on the ServingSpec plus
   S1xx on its lowered StudySpec);
+* the default ``dse.fleet_study`` spec (F1xx on the FleetSpec plus
+  S1xx on its lowered StudySpec);
 * the search pack (R1xx) over a deterministic synthetic Pareto
   annotation — a live gate on the dominance logic.
 
@@ -115,6 +117,12 @@ def sweep(models: Sequence[str], clusters: Sequence[str],
     sspec = serving_study()
     diags += analyze_serving(sspec, config)
     diags += analyze_study(sspec.to_study(), config)
+
+    from repro.analysis.rules_fleet import analyze_fleet
+    from repro.core.dse import fleet_study
+    fspec = fleet_study()
+    diags += analyze_fleet(fspec, config)
+    diags += analyze_study(fspec.to_study(), config)
 
     # Search pack (R1xx) over a deterministic synthetic frontier: annotate
     # a fixed record set through the real pareto_front path, then check

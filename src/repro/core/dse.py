@@ -726,6 +726,99 @@ def serving_ranking(processes: Optional[int] = None,
 
 
 # --------------------------------------------------------------------- #
+# Beyond the paper's static allocation: elastic-fleet DSE (ISSUE 9).
+# A discrete-time timeline over the mixed EM/plain fleet decides when
+# priority preemption + elastic DP resize + burst parallelism beat the
+# static ScheduleModel allocation on turnaround and perf-per-dollar.
+# --------------------------------------------------------------------- #
+
+def _fleet_job_mix(num_iters_scale: float = 1.0):
+    """The mixed-tenant template tuple ``fleet_study`` stamps arrivals
+    onto: a DLRM batch job pinned (by memory) to the EM pods, elastic
+    chat fine-tunes, a wide tenant, and a high-priority burst job."""
+    from repro.fleet import FleetJobSpec
+
+    def n(iters: int) -> int:
+        return max(1, int(round(iters * num_iters_scale)))
+
+    return (
+        FleetJobSpec(name="dlrm-batch", model="dlrm", global_batch=4096,
+                     nodes_per_instance=16, widths=(16, 32),
+                     iterations=n(120_000), priority=0),
+        FleetJobSpec(name="chat-ft", model="chatglm3-6b", mp=2,
+                     global_batch=256, nodes_per_instance=8,
+                     widths=(8, 16, 32), iterations=n(60), priority=0),
+        FleetJobSpec(name="tenant", model="internlm2-20b", mp=4,
+                     global_batch=512, nodes_per_instance=16,
+                     widths=(16, 32), iterations=n(12), priority=1),
+        FleetJobSpec(name="burst", model="internlm2-20b", mp=4,
+                     global_batch=256, nodes_per_instance=8,
+                     widths=(8, 32), iterations=n(24), burst_iters=n(20),
+                     priority=2, preemptible=False),
+    )
+
+
+def fleet_study(
+    fleet: Optional[ClusterLike] = None,
+    policies: Sequence[str] = ("static", "elastic", "elastic+burst"),
+    rate: float = 1 / 600.0,
+    num_jobs: int = 12,
+    seed: int = 0,
+    num_iters_scale: float = 1.0,
+    placement: str = "em-aware",
+):
+    """Elastic-fleet DSE: a mixed job trace replayed under each fleet
+    policy on the half-EM Fig. 13b fleet.
+
+    Each cell materializes a Poisson arrival trace over the
+    ``_fleet_job_mix`` templates, prices every (job, width) with the
+    compiled study engine, and replays the timeline under the cell's
+    ``fleet.policy``.  Static cells hold the PR-4 ``ScheduleModel``
+    allocation for a job's whole life; elastic cells grow/shrink DP
+    width (priced as checkpoint + reshard via ``remesh_delay``) and
+    preempt by priority; ``elastic+burst`` additionally lends the fleet
+    to the high-priority burst job for its bounded window.  Returns a
+    :class:`repro.fleet.FleetSpec` — pass it straight to
+    :func:`run_study`."""
+    from repro.fleet import FleetSpec, FleetTrace
+    return FleetSpec(
+        name="fleet-elastic-dse",
+        jobs=_fleet_job_mix(num_iters_scale),
+        cluster=fleet if fleet is not None else mixed_dlrm_fleet(),
+        ftrace=FleetTrace(kind="poisson", rate=rate, num_jobs=num_jobs,
+                          seed=seed),
+        placement=placement,
+        axes=[Axis("policy", tuple(policies), path="fleet.policy")])
+
+
+def fleet_ranking(processes: Optional[int] = None,
+                  **kwargs) -> List[Dict[str, float]]:
+    """Feasible policy cells, best turnaround-p99 first.  The headline
+    claim — elastic+burst beats the static ScheduleModel allocation by
+    >= 1.3x on turnaround-p99 or perf-per-dollar — reads straight off
+    this table (see ``fleet_headline``)."""
+    res: StudyResult = run_study(fleet_study(**kwargs),
+                                 processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["turnaround_p99"])
+
+
+def fleet_headline(records: Sequence[Dict[str, float]]
+                   ) -> Dict[str, float]:
+    """The elastic+burst-vs-static win ratios from a ``fleet_ranking``
+    table: ``{"turnaround_p99_ratio", "perf_per_dollar_ratio"}``
+    (both >1 means the timeline policies beat the static allocation)."""
+    by_policy = {r["policy"]: r for r in records}
+    static, eb = by_policy["static"], by_policy["elastic+burst"]
+    return {
+        "turnaround_p99_ratio":
+            static["turnaround_p99"] / eb["turnaround_p99"],
+        "perf_per_dollar_ratio":
+            eb["perf_per_dollar"] / static["perf_per_dollar"],
+    }
+
+
+# --------------------------------------------------------------------- #
 # Figure-study registry
 # --------------------------------------------------------------------- #
 

@@ -337,11 +337,16 @@ class ScheduleModel:
         def concurrency(idxs) -> list:
             """Per-group concurrency with the ``max_nodes`` budget handed
             out (in group order) only to the groups in ``idxs`` — an
-            ineligible group must not eat the fleet cap."""
+            ineligible group must not eat the fleet cap, and neither must
+            a group too small to hold even one instance (its ``usable``
+            share would starve later groups that could have hosted
+            instances within the cap)."""
             remaining = job.max_nodes or sum(g.num_nodes for g in groups)
             out = [0] * len(groups)
             for i in idxs:
                 usable = min(groups[i].num_nodes, remaining)
+                if usable // npis[i] == 0:
+                    continue
                 remaining -= usable
                 out[i] = usable // npis[i]
             return out

@@ -448,6 +448,8 @@ class StudySpec:
         "search_round", "search_fidelity", "search_score",
         "concurrent_instances", "waves", "turnaround", "makespan",
         "ttft_p50", "ttft_p99", "tpot", "goodput", "goodput_per_dollar",
+        "fleet_util", "turnaround_p50", "turnaround_p99", "preemptions",
+        "resize_events", "burst_events", "jobs_completed", "n_events",
     })
 
     def __post_init__(self):
@@ -897,6 +899,9 @@ def _validate_spec(spec: StudySpec, mode: str) -> None:
     if getattr(spec, "serving", None) is not None:
         from repro.analysis import analyze_serving
         diags += analyze_serving(spec.serving)
+    if getattr(spec, "fleet", None) is not None:
+        from repro.analysis import analyze_fleet
+        diags += analyze_fleet(spec.fleet)
     # Advisory (info) findings don't warrant interrupting a run; they stay
     # visible through the CLI and analyze_* helpers.
     diags = [d for d in diags if d.severity != "info"]

@@ -1,0 +1,47 @@
+"""repro.fleet: the multi-tenant timeline layer.
+
+COMET's §V-C scheduling story (``ScheduleModel``: waves x iteration
+time) priced a *static* fleet.  This package makes the schedule a
+timeline: heterogeneous jobs arrive on a trace, queue per node group,
+preempt each other by priority, grow/shrink their DP width elastically,
+and lend the fleet to bursting tenants — every transition priced by the
+``remesh_state`` checkpoint/reshard cost model.  ``FleetSpec`` lowers
+straight into ``run_study`` (``fleet.*`` / ``ftrace.*`` dotted-path
+axes), so fleet policy is a study axis like any cluster knob.
+
+See docs/fleet_api.md.
+"""
+
+from repro.fleet.jobs import FleetJob, FleetJobSpec, WidthProfile
+from repro.fleet.resize import (checkpoint_delay, instance_state_bytes,
+                                remesh_delay)
+from repro.fleet.simulator import (FLEET_POLICIES, FleetEvent, FleetModel,
+                                   FleetResult, FleetSimulator, JobOutcome)
+from repro.fleet.spec import (FLEET_COLUMNS, FleetPoint, FleetSpec,
+                              FleetStudy, build_workload, fleet_record,
+                              is_fleet_axis)
+from repro.fleet.trace import FLEET_TRACE_KINDS, FleetTrace
+
+__all__ = [
+    "FLEET_COLUMNS",
+    "FLEET_POLICIES",
+    "FLEET_TRACE_KINDS",
+    "FleetEvent",
+    "FleetJob",
+    "FleetJobSpec",
+    "FleetModel",
+    "FleetPoint",
+    "FleetResult",
+    "FleetSimulator",
+    "FleetSpec",
+    "FleetStudy",
+    "FleetTrace",
+    "JobOutcome",
+    "WidthProfile",
+    "build_workload",
+    "checkpoint_delay",
+    "fleet_record",
+    "instance_state_bytes",
+    "is_fleet_axis",
+    "remesh_delay",
+]

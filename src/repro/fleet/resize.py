@@ -1,0 +1,59 @@
+"""The fleet's one resize/preemption cost formula, priced the way
+:func:`repro.launch.elastic.remesh_state` actually works.
+
+``remesh_state`` restores the latest checkpoint onto a different mesh:
+the checkpointer stores every state leaf *unsharded*, so an elastic
+DP grow/shrink is (1) the full model-state payload through checkpoint
+storage, then (2) a ``device_put`` of every leaf under the new mesh's
+shardings — a redistribution over the training interconnect.  Hence:
+
+    resize_delay = state_bytes / checkpoint_bw + state_bytes / reshard_bw
+
+Preemption pays only the storage half per direction (write on preempt,
+read on restore); a burst lend/return is a preempt/restore pair plus a
+fixed per-hand-off overhead.
+
+``instance_state_bytes`` sizes the payload for a registry workload the
+way the checkpointer does: one unsharded copy of the model states
+(fp16 weights + fp16 grads + fp32 Adam master/moments — ZeRO's 16
+bytes/param), activations excluded.
+"""
+
+from __future__ import annotations
+
+from repro.core.memory import FP16, GRAD, OPTIM
+from repro.core.workload import Workload
+
+
+def checkpoint_delay(state_bytes: float, checkpoint_bw: float) -> float:
+    """One direction through checkpoint storage (preempt writes it,
+    restore reads it back)."""
+    if checkpoint_bw <= 0:
+        raise ValueError(f"checkpoint_bw must be > 0, got {checkpoint_bw}")
+    return state_bytes / checkpoint_bw
+
+
+def remesh_delay(state_bytes: float, checkpoint_bw: float,
+                 reshard_bw: float) -> float:
+    """Elastic resize cost: checkpoint bytes through storage plus the
+    ``device_put`` reshard onto the new mesh (the ``remesh_state``
+    path)."""
+    if reshard_bw <= 0:
+        raise ValueError(f"reshard_bw must be > 0, got {reshard_bw}")
+    return checkpoint_delay(state_bytes, checkpoint_bw) \
+        + state_bytes / reshard_bw
+
+
+def instance_state_bytes(workload: Workload) -> float:
+    """Checkpoint payload for one instance of ``workload``: the
+    unsharded model states exactly as the checkpointer lays them out —
+    16 bytes per parameter (fp16 weights/grads + fp32 Adam states) over
+    every layer the instance owns, replicas excluded (one copy is
+    written no matter the DP degree).  ``layers`` holds the per-MP-shard
+    view, so the unsharded payload scales back up by ``mp``."""
+    shard = sum(ly.weight_bytes * ly.repeat for ly in workload.layers) / FP16
+    params = shard * max(1, workload.mp)
+    return (FP16 + GRAD + OPTIM) * params
+
+
+__all__ = ["checkpoint_delay", "instance_state_bytes", "remesh_delay"]

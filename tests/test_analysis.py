@@ -67,7 +67,7 @@ class TestFramework:
     def test_registry_covers_all_packs(self):
         packs = {r.pack for r in list_rules()}
         assert packs == {"workload", "compiled", "study", "cluster",
-                         "serving", "search"}
+                         "serving", "search", "fleet"}
         assert len(list_rules("workload")) == 5
         assert len(list_rules("compiled")) == 5
         assert len(list_rules("serving")) == 4

@@ -1,0 +1,656 @@
+"""Tests for ``repro.fleet`` (ISSUE 9): the discrete-time elastic fleet
+simulator and its study wiring.
+
+Lockdown: a static single-job no-event trace reproduces
+``ScheduleModel.schedule`` bit-for-bit (makespan AND feasibility) on
+fig13b/fig15 record-equivalent cells.  New behavior: priority preemption
+priced by the checkpoint write, elastic DP grow/shrink priced by the
+``remesh_state`` checkpoint+reshard formula, burst parallelism with
+lend/return hand-offs, the ``FleetSpec`` -> ``run_study`` lowering with
+timeline-native columns, the F1xx rule pack, and the >= 1.3x
+elastic+burst-vs-static headline claim on the mixed EM/plain fleet.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.analysis import AnalysisError, analyze_fleet
+from repro.configs import get_config, get_dlrm_config
+from repro.core import dse
+from repro.core.cluster import TABLE_III_CLUSTERS
+from repro.core.placement import JobSpec, ScheduleModel, get_placement
+from repro.core.simulator import group_breakdowns_compiled
+from repro.core.study import Axis, run_study
+from repro.fleet import (
+    FLEET_COLUMNS,
+    FleetJob,
+    FleetJobSpec,
+    FleetModel,
+    FleetSimulator,
+    FleetSpec,
+    FleetTrace,
+    WidthProfile,
+    build_workload,
+    checkpoint_delay,
+    fleet_record,
+    instance_state_bytes,
+    remesh_delay,
+)
+
+
+def _prof(times, fits=None, sb=8e9):
+    """{width: (t_g0, t_g1, ...)} -> per-width WidthProfile map."""
+    out = {}
+    for w, ts in times.items():
+        ts = ts if isinstance(ts, tuple) else (ts,)
+        ft = fits[w] if fits else (True,) * len(ts)
+        out[w] = WidthProfile(iter_times=ts, fits=ft, state_bytes=sb)
+    return out
+
+
+def _job(uid=0, width=8, iters=1, caps_groups=1, it=1.0, **kw):
+    spec = FleetJobSpec(name=kw.pop("name", f"j{uid}"),
+                        nodes_per_instance=width, iterations=iters, **kw)
+    times = {w: (it,) * caps_groups for w in spec.width_menu}
+    return FleetJob(spec=spec, profiles=_prof(times), uid=uid)
+
+
+STATIC = FleetModel(policy="static")
+ELASTIC = FleetModel(policy="elastic")
+BURSTY = FleetModel(policy="elastic+burst")
+
+
+# ===================================================================== #
+# Specs, traces, and the resize-cost formula
+# ===================================================================== #
+
+class TestFleetJobSpec:
+    def test_width_menu_and_elastic(self):
+        s = FleetJobSpec(name="a", nodes_per_instance=16, widths=(8, 32))
+        assert s.base_width == 16
+        assert s.width_menu == (8, 16, 32)
+        assert s.elastic
+        assert not FleetJobSpec(name="b", nodes_per_instance=8).elastic
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", nodes_per_instance=0)
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", arrival=-1.0)
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", iterations=0)
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", widths=(0,))
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", burst_iters=-1)
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", mp=0)
+
+    def test_fleet_job_needs_full_menu(self):
+        spec = FleetJobSpec(name="a", nodes_per_instance=8, widths=(16,))
+        with pytest.raises(ValueError, match="WidthProfile"):
+            FleetJob(spec=spec, profiles=_prof({8: 1.0}))
+
+    def test_width_profile_validation(self):
+        with pytest.raises(ValueError):
+            WidthProfile(iter_times=(1.0, 2.0), fits=(True,))
+
+
+class TestFleetTrace:
+    def test_static_replays_templates_verbatim(self):
+        tpl = (FleetJobSpec(name="a", nodes_per_instance=8, arrival=3.0),)
+        assert FleetTrace(kind="static").materialize(tpl) == tpl
+
+    def test_poisson_deterministic_per_seed(self):
+        t = FleetTrace(kind="poisson", rate=0.01, num_jobs=6, seed=7)
+        again = FleetTrace(kind="poisson", rate=0.01, num_jobs=6, seed=7)
+        assert t.arrivals == again.arrivals
+        other = FleetTrace(kind="poisson", rate=0.01, num_jobs=6, seed=8)
+        assert t.arrivals != other.arrivals
+        assert t.arrivals[0] == 0.0
+        assert all(b >= a for a, b in zip(t.arrivals, t.arrivals[1:]))
+
+    def test_uniform_spacing(self):
+        t = FleetTrace(kind="uniform", rate=0.5, num_jobs=4)
+        assert t.arrivals == (0.0, 2.0, 4.0, 6.0)
+
+    def test_materialize_cycles_and_stamps(self):
+        tpl = (FleetJobSpec(name="a", nodes_per_instance=8),
+               FleetJobSpec(name="b", nodes_per_instance=4))
+        jobs = FleetTrace(kind="uniform", rate=1.0,
+                          num_jobs=4).materialize(tpl)
+        assert [j.name for j in jobs] == ["a#0", "b#1", "a#2", "b#3"]
+        assert [j.arrival for j in jobs] == [0.0, 1.0, 2.0, 3.0]
+
+    def test_mean_iterations_stamps_durations(self):
+        tpl = (FleetJobSpec(name="a", nodes_per_instance=8,
+                            iterations=5),)
+        jobs = FleetTrace(kind="uniform", rate=1.0, num_jobs=8, seed=3,
+                          mean_iterations=40).materialize(tpl)
+        assert all(j.iterations >= 1 for j in jobs)
+        assert len({j.iterations for j in jobs}) > 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FleetTrace(kind="weird")
+        with pytest.raises(ValueError):
+            FleetTrace(kind="poisson", rate=0.0).materialize(
+                (FleetJobSpec(name="a", nodes_per_instance=1),))
+        with pytest.raises(ValueError):
+            FleetTrace(kind="static").materialize(())
+
+
+class TestResizeCostModel:
+    """Satellite 2: the documented remesh formula, end to end."""
+
+    def test_formula(self):
+        sb = 64e9
+        assert checkpoint_delay(sb, 40e9) == sb / 40e9
+        assert remesh_delay(sb, 40e9, 100e9) == sb / 40e9 + sb / 100e9
+        with pytest.raises(ValueError):
+            checkpoint_delay(sb, 0.0)
+        with pytest.raises(ValueError):
+            remesh_delay(sb, 40e9, -1.0)
+
+    def test_state_bytes_matches_memory_model(self):
+        """(FP16+GRAD+OPTIM)/FP16 x one replica's weight bytes: the
+        ZeRO-gathered tensors ``remesh_state`` moves per instance."""
+        from repro.core.memory import FP16, GRAD, OPTIM
+        spec = FleetJobSpec(name="t", model="chatglm3-6b", mp=2,
+                            global_batch=256, nodes_per_instance=8)
+        wl = build_workload(spec, 8)
+        shard = sum(ly.weight_bytes * ly.repeat for ly in wl.layers) / FP16
+        expect = (FP16 + GRAD + OPTIM) * shard * wl.mp
+        assert instance_state_bytes(wl) == expect
+
+    def test_simulator_resize_delay_matches_formula_registry_model(self):
+        """A registry-model grow pays exactly checkpoint + reshard: the
+        makespan is remesh_delay + remaining x the wide iteration time."""
+        from repro.fleet.spec import _profiles
+        cluster = dse.mixed_dlrm_fleet()
+        spec = FleetJobSpec(name="chat", model="chatglm3-6b", mp=2,
+                            global_batch=256, nodes_per_instance=8,
+                            widths=(8, 16, 32), iterations=100)
+        profiles = _profiles(spec, cluster, 2, get_placement("em-aware"),
+                             {})
+        job = FleetJob(spec=spec, profiles=profiles)
+        model = FleetModel(policy="elastic", checkpoint_bw=40e9,
+                           reshard_bw=100e9)
+        res = FleetSimulator([g.num_nodes for g in cluster.node_groups],
+                             model=model).run([job])
+        sb = instance_state_bytes(build_workload(spec, 8))
+        assert job.state_bytes == sb
+        grow = [e for e in res.events if e.kind == "grow"]
+        assert len(grow) == 1 and grow[0].width == 32
+        cost = remesh_delay(sb, 40e9, 100e9)
+        wide_it = profiles[32].iter_times[grow[0].group]
+        assert res.makespan == cost + 100 * wide_it
+        assert res.resize_events == 1
+
+    def test_preemption_pays_checkpoint_then_restore(self):
+        """The victim's nodes free one checkpoint write after the
+        preemption; its rerun is delayed by the restore charge."""
+        sb = 80e9
+        low = FleetJob(FleetJobSpec(name="low", nodes_per_instance=8,
+                                    iterations=10),
+                       _prof({8: 5.0}, sb=sb), uid=0)
+        hi = FleetJob(FleetJobSpec(name="hi", nodes_per_instance=8,
+                                   iterations=2, priority=5, arrival=12.0),
+                      _prof({8: 1.0}, sb=sb), uid=1)
+        res = FleetSimulator((8,), model=ELASTIC).run([low, hi])
+        ck = checkpoint_delay(sb, ELASTIC.checkpoint_bw)
+        # victim checkpoints at t=12 (2 iters credited), nodes free at
+        # 12+ck, hi runs 2 iters, victim restarts after its restore
+        # charge and reruns 8 iters.
+        hi_out = next(o for o in res.outcomes if o.name == "hi")
+        assert hi_out.first_start == 12.0 + ck
+        assert hi_out.finish == 12.0 + ck + 2 * 1.0
+        low_out = next(o for o in res.outcomes if o.name == "low")
+        assert low_out.preemptions == 1
+        assert low_out.finish == hi_out.finish + ck + 8 * 5.0
+        assert res.feasible
+
+
+# ===================================================================== #
+# Degenerate equivalence: static single-job traces == ScheduleModel
+# ===================================================================== #
+
+class TestDegenerateEquivalence:
+    MODEL = ScheduleModel()
+
+    def _check(self, caps, iter_times, fits, instances, npi,
+               max_nodes=0, placement=None):
+        sched = self.MODEL.schedule(
+            JobSpec(instances=instances, nodes_per_instance=npi,
+                    max_nodes=max_nodes),
+            [_GroupStub(n) for n in caps],
+            iter_times, fits=fits, placement=placement)
+        job = FleetJob(
+            FleetJobSpec(name="j", instances=instances,
+                         nodes_per_instance=npi, max_nodes=max_nodes,
+                         iterations=1),
+            _prof({npi: tuple(iter_times)},
+                  fits={npi: tuple(fits)} if fits else None))
+        res = FleetSimulator(caps, model=STATIC,
+                             placement=placement).run([job])
+        assert res.makespan == sched.makespan          # bit-for-bit
+        assert res.feasible == sched.feasible
+        assert res.jobs_completed == 1
+        assert res.preemptions == res.resize_events == 0
+        return res
+
+    def test_synthetic_grid(self):
+        cases = [
+            ((32, 32), (1.0, 3.0), None, 8, 8, 0),
+            ((64,), (0.1,), None, 8, 8, 0),
+            ((64,), (0.7,), None, 10, 16, 64),
+            ((32, 32), (0.31, 0.17), None, 8, 16, 48),
+            ((12, 8), (1.0, 2.0), None, 3, 16, 0),   # legacy fallback
+            ((32, 32), (0.5, 0.5), (False, True), 8, 16, 0),
+        ]
+        for caps, its, fits, inst, npi, cap in cases:
+            self._check(caps, its, fits, inst, npi, max_nodes=cap)
+
+    @pytest.mark.parametrize("npi", (64, 32, 16))
+    def test_fig13b_record_equivalent(self, npi):
+        """The Fig. 13b cells: N DLRM instances on the half-EM fleet,
+        timed by the compiled engine — the fleet timeline must equal the
+        ScheduleModel makespan exactly, both placements."""
+        cluster = dse.mixed_dlrm_fleet()
+        wl = decompose_dlrm_cached(npi)
+        per = group_breakdowns_compiled(wl.compiled(), cluster,
+                                        zero_stage=2, env_cache={})
+        its = [b.total for b in per]
+        fits = [b.feasible for b in per]
+        for pl in ("paper", "em-aware"):
+            self._check(tuple(g.num_nodes for g in cluster.node_groups),
+                        its, fits, 8, npi, placement=get_placement(pl))
+
+    @pytest.mark.parametrize("cluster_name,mp,dp", [("B0", 8, 128),
+                                                    ("B1", 64, 16)])
+    def test_fig15_record_equivalent(self, cluster_name, mp, dp):
+        """fig15-style transformer cells, multi-instance on one group."""
+        from repro.configs.base import ShapeConfig
+        from repro.core.workload import decompose
+        cluster = TABLE_III_CLUSTERS[cluster_name]
+        wl = decompose(get_config("transformer-1t"),
+                       ShapeConfig("paper", 2048, 1024, "train"),
+                       mp=mp, dp=dp)
+        per = group_breakdowns_compiled(wl.compiled(), cluster,
+                                        zero_stage=2, env_cache={})
+        its = [b.total for b in per]
+        fits = [b.feasible for b in per]
+        for instances, npi in ((1, cluster.num_nodes), (4, 256), (9, 512)):
+            self._check((cluster.num_nodes,), its, fits, instances, npi)
+
+    def test_multi_iteration_scales_linearly(self):
+        job = _job(width=8, iters=7, it=0.31)
+        res = FleetSimulator((8,), model=STATIC).run([job])
+        assert res.makespan == 7 * 0.31      # one multiply, no drift
+
+
+class _GroupStub:
+    def __init__(self, num_nodes):
+        self.num_nodes = num_nodes
+
+
+def decompose_dlrm_cached(npi, _memo={}):
+    from repro.core.workload import decompose_dlrm
+    if npi not in _memo:
+        _memo[npi] = decompose_dlrm(get_dlrm_config(), 4096, npi)
+    return _memo[npi]
+
+
+# ===================================================================== #
+# Timeline behavior: waiting, preemption, elastic resize, burst
+# ===================================================================== #
+
+class TestTimeline:
+    def test_infeasible_on_free_waits_for_fitting_group(self):
+        """A job whose only fitting group is busy queues for it instead
+        of squatting infeasibly on a non-fitting one."""
+        fits = {8: (False, True)}
+        blocker = FleetJob(
+            FleetJobSpec(name="blk", nodes_per_instance=8, iterations=3),
+            _prof({8: (1.0, 1.0)}), uid=0)
+        picky = FleetJob(
+            FleetJobSpec(name="picky", nodes_per_instance=8,
+                         iterations=1, arrival=0.5),
+            _prof({8: (0.1, 2.0)}, fits=fits), uid=1)
+        res = FleetSimulator((8, 8), model=STATIC).run([blocker, picky])
+        # blocker lands on g0 (fastest); picky fits only g1 -> starts
+        # there immediately; no infeasible squat on g0.
+        out = next(o for o in res.outcomes if o.name == "picky")
+        assert out.feasible and res.feasible
+
+    def test_never_feasible_job_adopts_legacy_fallback(self):
+        job = _job(width=16, caps_groups=1)    # wider than the fleet
+        res = FleetSimulator((8,), model=STATIC).run([job])
+        assert res.jobs_completed == 1 and not res.feasible
+
+    def test_unplannable_job_fails_cleanly(self):
+        """A job whose profile does not match the fleet's group count
+        can never be planned: it fails, the rest of the trace runs."""
+        spec = FleetJobSpec(name="j", nodes_per_instance=8, iterations=1)
+        job = FleetJob(spec, _prof({8: (1.0, 1.0)}))   # 2 groups
+        ok = _job(uid=1, width=8, iters=2, it=0.5, caps_groups=1)
+        res = FleetSimulator((8,), model=STATIC).run([job, ok])
+        assert not res.feasible
+        assert any(e.kind == "fail" for e in res.events)
+        assert next(o for o in res.outcomes if o.uid == 1).completed
+
+    def test_profiles_reject_nan_iteration_times(self):
+        with pytest.raises(ValueError, match="NaN"):
+            WidthProfile(iter_times=(float("nan"),), fits=(True,))
+
+    def test_static_policy_never_preempts_or_resizes(self):
+        jobs = [_job(uid=0, width=8, iters=5, it=2.0, caps_groups=1),
+                _job(uid=1, width=8, iters=1, it=1.0, caps_groups=1,
+                     priority=9, arrival=3.0, widths=(8, 16))]
+        res = FleetSimulator((16,), model=STATIC).run(jobs)
+        assert res.preemptions == res.resize_events == 0
+        assert res.feasible
+
+    def test_elastic_grow_beats_static_makespan(self):
+        spec = FleetJobSpec(name="el", nodes_per_instance=8,
+                            iterations=100, widths=(8, 32))
+        profiles = _prof({8: 4.0, 32: 1.0})
+        stat = FleetSimulator((32,), model=STATIC).run(
+            [FleetJob(spec, profiles)])
+        elas = FleetSimulator((32,), model=ELASTIC).run(
+            [FleetJob(spec, profiles)])
+        assert elas.resize_events == 1
+        assert elas.makespan < stat.makespan
+        cost = remesh_delay(8e9, ELASTIC.checkpoint_bw,
+                            ELASTIC.reshard_bw)
+        assert elas.makespan == cost + 100 * 1.0
+
+    def test_grow_skipped_when_remesh_outweighs_gain(self):
+        spec = FleetJobSpec(name="el", nodes_per_instance=8,
+                            iterations=2, widths=(8, 32))
+        res = FleetSimulator((32,), model=ELASTIC).run(
+            [FleetJob(spec, _prof({8: 1.0, 32: 0.9}, sb=400e9))])
+        assert res.resize_events == 0
+        assert res.makespan == 2 * 1.0
+
+    def test_shrink_frees_nodes_for_higher_priority(self):
+        low = FleetJob(FleetJobSpec(name="low", nodes_per_instance=32,
+                                    iterations=40, widths=(8, 32)),
+                       _prof({8: 4.0, 32: 1.0}), uid=0)
+        hi = FleetJob(FleetJobSpec(name="hi", nodes_per_instance=16,
+                                   iterations=4, priority=5, arrival=10.0),
+                      _prof({16: 1.0}), uid=1)
+        res = FleetSimulator((32,), model=ELASTIC).run([low, hi])
+        assert any(e.kind == "shrink" for e in res.events)
+        lo = next(o for o in res.outcomes if o.name == "low")
+        assert lo.resizes >= 1 and lo.preemptions == 0
+        assert res.feasible
+
+    def test_burst_borrows_and_returns(self):
+        lenders = [FleetJob(FleetJobSpec(name=f"l{i}",
+                                         nodes_per_instance=16,
+                                         iterations=50),
+                            _prof({16: 2.0}), uid=i) for i in (0, 1)]
+        burst = FleetJob(
+            FleetJobSpec(name="b", nodes_per_instance=8, iterations=20,
+                         priority=5, arrival=10.0, widths=(8, 32),
+                         burst_iters=16, preemptible=False),
+            _prof({8: 4.0, 32: 0.5}), uid=2)
+        res = FleetSimulator((32,), model=BURSTY).run(lenders + [burst])
+        kinds = [e.kind for e in res.events]
+        assert "lend" in kinds and "return" in kinds
+        bo = next(o for o in res.outcomes if o.name == "b")
+        assert bo.bursts == 1
+        stat = FleetSimulator((32,), model=STATIC).run(lenders + [burst])
+        so = next(o for o in stat.outcomes if o.name == "b")
+        assert bo.turnaround < so.turnaround
+        assert res.feasible and stat.feasible
+
+    def test_result_percentiles_and_util(self):
+        jobs = [_job(uid=i, width=8, iters=1, it=float(i + 1),
+                     caps_groups=1) for i in range(4)]
+        res = FleetSimulator((32,), model=STATIC).run(jobs)
+        assert res.turnaround_p50 == 2.0
+        assert res.turnaround_p99 == 4.0
+        assert 0.0 < res.fleet_util <= 1.0
+        # 4 jobs x 8 nodes x i seconds of busy time over 32 x makespan
+        assert res.fleet_util == pytest.approx(
+            8 * (1 + 2 + 3 + 4) / (32 * 4.0))
+
+    def test_model_validation(self):
+        with pytest.raises(ValueError):
+            FleetModel(policy="greedy")
+        assert not STATIC.elastic and not STATIC.preempt
+        assert ELASTIC.preempt and not ELASTIC.burst
+        assert BURSTY.burst
+        assert not FleetModel(policy="elastic",
+                              preemption=False).preempt
+
+
+# ===================================================================== #
+# Hypothesis properties
+# ===================================================================== #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                # dev container without hypothesis:
+    HAVE_HYPOTHESIS = False        # the deterministic suite still runs.
+
+if HAVE_HYPOTHESIS:
+    _iters = st.integers(min_value=1, max_value=20)
+    _durs = st.floats(min_value=0.05, max_value=30.0, allow_nan=False)
+
+
+if HAVE_HYPOTHESIS:
+    class TestFleetProperties:
+        @given(caps=st.lists(st.integers(min_value=4, max_value=48),
+                             min_size=1, max_size=3),
+               jobs=st.lists(st.tuples(st.integers(2, 32), _iters, _durs,
+                                       st.integers(0, 3),
+                                       st.floats(0.0, 50.0)),
+                             min_size=1, max_size=6),
+               policy=st.sampled_from(("static", "elastic", "elastic+burst")))
+        @settings(max_examples=60, deadline=None)
+        def test_capacity_conserved_at_every_event(self, caps, jobs, policy):
+            """No event may observe more allocated nodes than a group has,
+            and the fleet must be empty again after the last completion."""
+            fleet = []
+            for uid, (w, it_n, dur, pr, arr) in enumerate(jobs):
+                widths = (w, min(2 * w, max(caps))) if uid % 2 else ()
+                spec = FleetJobSpec(
+                    name=f"j{uid}", nodes_per_instance=w, iterations=it_n,
+                    priority=pr, arrival=arr, widths=widths,
+                    burst_iters=it_n // 2 if uid % 3 == 0 else 0)
+                times = {x: (dur,) * len(caps) for x in spec.width_menu}
+                fleet.append(FleetJob(spec, _prof(times), uid=uid))
+            res = FleetSimulator(caps, model=FleetModel(policy=policy)).run(
+                fleet)
+            for ev in res.events:
+                assert all(0 <= a <= c for a, c in zip(ev.alloc, caps)), ev
+            assert res.events[-1].alloc == tuple(0 for _ in caps)
+            assert res.jobs_completed == len(fleet)
+            assert 0.0 <= res.fleet_util <= 1.0 + 1e-12
+
+        @given(base=st.integers(min_value=1, max_value=4),
+               extra=st.integers(min_value=1, max_value=4),
+               durs=st.lists(_durs, min_size=1, max_size=6))
+        @settings(max_examples=60, deadline=None)
+        def test_turnaround_monotone_in_fleet_size(self, base, extra, durs):
+            """Adding nodes to a single-group static fleet never worsens any
+            job's turnaround (all jobs same width, batch arrival)."""
+            w = 8
+
+            def turns(cap):
+                jobs = [_job(uid=i, width=w, iters=1, it=d, caps_groups=1)
+                        for i, d in enumerate(durs)]
+                res = FleetSimulator((cap,), model=STATIC).run(jobs)
+                return [o.turnaround for o in res.outcomes]
+
+            small = turns(w * base)
+            big = turns(w * (base + extra))
+            assert all(b <= s + 1e-9 for s, b in zip(small, big))
+
+        @given(low_iters=st.integers(2, 15), low_dur=_durs,
+               hi_iters=_iters, hi_dur=_durs,
+               frac=st.floats(0.05, 0.95))
+        @settings(max_examples=60, deadline=None)
+        def test_preemption_never_helps_the_victim(self, low_iters, low_dur,
+                                                   hi_iters, hi_dur, frac):
+            """The victim's own turnaround with preemption enabled is never
+            better than when the high-priority job must wait."""
+            arrival = frac * low_iters * low_dur
+
+            def run(preemption):
+                low = FleetJob(FleetJobSpec(name="low", nodes_per_instance=8,
+                                            iterations=low_iters),
+                               _prof({8: low_dur}), uid=0)
+                hi = FleetJob(FleetJobSpec(name="hi", nodes_per_instance=8,
+                                           iterations=hi_iters, priority=5,
+                                           arrival=arrival),
+                              _prof({8: hi_dur}), uid=1)
+                model = FleetModel(policy="elastic", preemption=preemption)
+                res = FleetSimulator((8,), model=model).run([low, hi])
+                return next(o for o in res.outcomes if o.name == "low")
+
+            with_p = run(True)
+            without = run(False)
+            assert with_p.turnaround >= without.turnaround - 1e-9
+
+
+# ===================================================================== #
+# Study integration, rules, and the headline claim
+# ===================================================================== #
+
+def _tiny_fleet_spec(**kw):
+    jobs = kw.pop("jobs", (
+        FleetJobSpec(name="chat", model="chatglm3-6b", mp=2,
+                     global_batch=256, nodes_per_instance=8,
+                     widths=(8, 16, 32), iterations=10),))
+    defaults = dict(name="tiny-fleet", jobs=jobs,
+                    cluster=dse.mixed_dlrm_fleet(),
+                    ftrace=FleetTrace(kind="static"),
+                    placement="em-aware")
+    defaults.update(kw)
+    return FleetSpec(**defaults)
+
+
+class TestFleetStudy:
+    def test_run_study_emits_fleet_columns(self):
+        res = run_study(_tiny_fleet_spec(), processes=1)
+        assert len(res) == 1
+        rec = res.records[0]
+        for col in FLEET_COLUMNS:
+            assert col in rec, col
+        assert rec["feasible"]
+        assert rec["jobs_completed"] == 1
+        assert rec["total"] == rec["makespan"] > 0
+        assert rec["perf_per_dollar"] > 0
+        assert rec["n_events"] > 0
+
+    def test_policy_axis_sweeps_fleet_point(self):
+        spec = _tiny_fleet_spec(axes=[
+            Axis("policy", ("static", "elastic"), path="fleet.policy")])
+        res = run_study(spec, processes=1)
+        by = {r["policy"]: r for r in res.records}
+        assert set(by) == {"static", "elastic"}
+        assert by["static"]["resize_events"] == 0
+        assert by["elastic"]["resize_events"] >= 1
+        assert by["elastic"]["makespan"] < by["static"]["makespan"]
+
+    def test_ftrace_axis_sweeps_trace(self):
+        spec = _tiny_fleet_spec(
+            ftrace=FleetTrace(kind="uniform", rate=1 / 500.0, num_jobs=2),
+            axes=[Axis("njobs", (1, 3), path="ftrace.num_jobs")])
+        res = run_study(spec, processes=1)
+        done = sorted(r["jobs_completed"] for r in res.records)
+        assert done == [1, 3]
+
+    def test_unknown_fleet_axis_path_fails_fast(self):
+        with pytest.raises((AttributeError, ValueError)):
+            _tiny_fleet_spec(axes=[Axis("x", (1,), path="fleet.nope")])
+
+    def test_spec_needs_jobs_and_cluster(self):
+        with pytest.raises(ValueError):
+            _tiny_fleet_spec(jobs=())
+        rec = fleet_record(None, _tiny_fleet_spec(),
+                           _tiny_fleet_spec().point(), "paper")
+        assert not rec["feasible"] and rec["total"] == float("inf")
+
+    def test_validate_gate_raises_on_fleet_errors(self):
+        bad = _tiny_fleet_spec(fleet=FleetModel(policy="elastic",
+                                                checkpoint_bw=0.0))
+        with pytest.raises(AnalysisError, match="F104"):
+            run_study(bad, validate="error", processes=1)
+        ok = _tiny_fleet_spec()
+        assert len(run_study(ok, validate="error", processes=1)) == 1
+
+
+class TestFleetRules:
+    def _diag_codes(self, spec):
+        return {d.code for d in analyze_fleet(spec)}
+
+    def test_clean_default_study(self):
+        assert analyze_fleet(dse.fleet_study()) == []
+
+    def test_f101_job_wider_than_every_group(self):
+        spec = _tiny_fleet_spec(jobs=(
+            FleetJobSpec(name="wide", model="chatglm3-6b", mp=2,
+                         nodes_per_instance=64),))
+        assert "F101" in self._diag_codes(spec)
+        capped = _tiny_fleet_spec(jobs=(
+            FleetJobSpec(name="c", model="chatglm3-6b", mp=2,
+                         nodes_per_instance=16, max_nodes=8),))
+        assert "F101" in self._diag_codes(capped)
+
+    def test_f102_bad_trace(self):
+        spec = _tiny_fleet_spec(
+            ftrace=FleetTrace(kind="poisson", rate=-1.0))
+        assert "F102" in self._diag_codes(spec)
+
+    def test_f103_burst_sanity(self):
+        spec = _tiny_fleet_spec(jobs=(
+            FleetJobSpec(name="b", model="chatglm3-6b", mp=2,
+                         nodes_per_instance=8, iterations=4,
+                         burst_iters=9),))
+        codes = self._diag_codes(spec)
+        assert "F103" in codes
+        odd = _tiny_fleet_spec(jobs=(
+            FleetJobSpec(name="o", model="chatglm3-6b", mp=2,
+                         nodes_per_instance=8, widths=(9,)),))
+        assert "F103" in self._diag_codes(odd)
+
+    def test_f104_bad_costs(self):
+        spec = _tiny_fleet_spec(
+            fleet=FleetModel(policy="elastic", reshard_bw=float("inf")))
+        assert "F104" in self._diag_codes(spec)
+        spec = _tiny_fleet_spec(
+            fleet=FleetModel(policy="elastic", lend_overhead=-2.0))
+        assert "F104" in self._diag_codes(spec)
+
+
+class TestHeadlineClaim:
+    def test_elastic_burst_beats_static_by_1_3x(self):
+        """ISSUE 9 acceptance: on the mixed EM/plain fleet the
+        elastic+burst policy wins >= 1.3x over the static ScheduleModel
+        allocation on turnaround-p99 or perf-per-dollar."""
+        ranked = dse.fleet_ranking()
+        assert {r["policy"] for r in ranked} == {
+            "static", "elastic", "elastic+burst"}
+        head = dse.fleet_headline(ranked)
+        assert max(head["turnaround_p99_ratio"],
+                   head["perf_per_dollar_ratio"]) >= 1.3
+        stat = next(r for r in ranked if r["policy"] == "static")
+        eb = next(r for r in ranked if r["policy"] == "elastic+burst")
+        assert eb["resize_events"] > 0 and eb["burst_events"] > 0
+        assert stat["resize_events"] == stat["burst_events"] == 0
+        assert all(math.isfinite(r["turnaround_p99"]) for r in ranked)
+
+    def test_fleet_study_spec_is_analyzable_and_swept(self):
+        spec = dse.fleet_study()
+        assert analyze_fleet(spec) == []
+        study = spec.to_study()
+        assert study.fleet is spec
+        assert [a.name for a in study.axes] == ["policy"]

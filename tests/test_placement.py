@@ -270,6 +270,21 @@ class TestScheduleModel:
         assert sched.concurrent == 8 and sched.waves == 1
         assert [g.group for g in sched.groups] == [1]
 
+    def test_budget_not_eaten_by_group_too_small_to_host(self):
+        """Regression: a group whose ``max_nodes`` share is too small to
+        hold even one instance must not consume the budget.  Here group 0
+        would swallow the whole 8-node cap (8 // 16 == 0 instances) and
+        starve the 8-node group that hosts the job at npi 8 — the leak
+        forced the one-at-a-time fallback onto group 0 and flipped the
+        two-group fleet from feasible to infeasible."""
+        groups = _groups((80, 12), (560, 8))
+        sched = self.MODEL.schedule(
+            JobSpec(instances=3, nodes_per_instance=16, max_nodes=8),
+            groups, [1.0, 1.0], nodes_per_instance=[16, 8])
+        assert sched.feasible
+        assert [g.group for g in sched.groups] == [1]
+        assert sched.concurrent == 1 and sched.waves == 3
+
     def test_forced_fallback_respects_max_nodes(self):
         """An instance wider than the fleet cap cannot be placed even by
         the one-at-a-time fallback."""
