@@ -373,6 +373,45 @@ def _rows_fleet() -> List[Row]:
     return rows
 
 
+def _rows_reliability() -> List[Row]:
+    """ISSUE 10 tentpole: failure-aware cluster DSE — the Daly-vs-naive
+    checkpoint cadence win, the goodput-per-dollar ranking flip between
+    the two closed-form cluster designs, and the wait-vs-shrink
+    turnaround-p99 fault-injection headline."""
+    t0 = time.monotonic()
+    ranked = dse.reliability_ranking(processes=PROCESSES)
+    dt = time.monotonic() - t0
+    rows = [("reliability", "study", "wallclock_s", round(dt, 1),
+             f"{len(ranked)} feasible cells")]
+    for r in ranked:
+        key = (f"{r['cluster']}_mtbf{r['mtbf_hours']:g}"
+               f"_int{r['ckpt_interval']:g}")
+        rows.append(("reliability", key, "goodput_per_tco_usd",
+                     f"{r['goodput_per_dollar']:.3e}", ""))
+        rows.append(("reliability", key, "goodput_frac",
+                     round(r["goodput_frac"], 4),
+                     f"restarts={round(r['expected_restarts'], 1)}"))
+    head = dse.reliability_headline(ranked)
+    rows.append(("reliability", "headline", "daly_vs_naive_x",
+                 round(head["daly_vs_naive"], 3),
+                 "Young-Daly cadence beats the naive fixed interval"))
+    rows.append(("reliability", "headline", "ranking_flips",
+                 head["ranking_flips"],
+                 f"failure-free {head['best_failure_free']} vs "
+                 f"failure-aware {head['best_failure_aware']}"))
+    fleet_ranked = dse.reliability_fleet_ranking(processes=PROCESSES)
+    fhead = dse.reliability_fleet_headline(fleet_ranked)
+    for r in fleet_ranked:
+        rows.append(("reliability", f"fleet_{r['degradation']}",
+                     "turnaround_p99_s", round(r["turnaround_p99"], 1),
+                     f"failures={r['failures']} "
+                     f"goodput={round(r['goodput'], 3)}"))
+    rows.append(("reliability", "headline", "shrink_vs_wait_p99_x",
+                 round(fhead["p99_ratio"], 2),
+                 "shrink-to-survive beats wait-for-repair (ISSUE 10)"))
+    return rows
+
+
 def _rows_tco() -> List[Row]:
     """Beyond paper: heterogeneous A100+EM pod mix ranked perf-per-dollar
     (§V-D's qualitative perf/$ argument, quantified)."""
@@ -406,6 +445,7 @@ BENCHES = {
     "placement": _rows_placement,
     "serving": _rows_serving,
     "fleet": _rows_fleet,
+    "reliability": _rows_reliability,
     "tco": _rows_tco,
     "v5e-comet": _rows_v5e_archs,
 }
@@ -478,6 +518,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "compiled engine: fork and serial records differ"
     serving = _serving_trajectory(smoke=smoke)
     fleet = _fleet_trajectory(smoke=smoke)
+    reliability = _reliability_trajectory(smoke=smoke)
     return {
         "bench": "fig15-transformer" + ("-smoke" if smoke else ""),
         "cells": len(ref),
@@ -497,6 +538,7 @@ def perf_trajectory(processes: int = 8, smoke: bool = False) -> dict:
         "jax_grid": _jax_grid_trajectory(smoke=smoke),
         "serving": serving,
         "fleet": fleet,
+        "reliability": reliability,
     }
 
 
@@ -641,6 +683,28 @@ def _fleet_trajectory(smoke: bool = False) -> dict:
         "headline_ratio": round(max(
             head.get("turnaround_p99_ratio", 0.0),
             head.get("perf_per_dollar_ratio", 0.0)), 3),
+    }
+
+
+def _reliability_trajectory(smoke: bool = False) -> dict:
+    """Reliability leg of the perf artifact: the closed-form Daly-vs-
+    naive goodput win and the fault-injection shrink-vs-wait p99 win the
+    CI smoke gate asserts stay >= 1x, plus both studies' wall-clock."""
+    t0 = time.monotonic()
+    ranked = dse.reliability_ranking()
+    head = dse.reliability_headline(ranked)
+    fleet_kwargs = dict(num_iters_scale=0.5) if smoke else {}
+    fhead = dse.reliability_fleet_headline(
+        dse.reliability_fleet_ranking(**fleet_kwargs))
+    dt = time.monotonic() - t0
+    return {
+        "wallclock_s": round(dt, 3),
+        "cells": len(ranked),
+        "daly_vs_naive": round(head["daly_vs_naive"], 3),
+        "ranking_flips": head["ranking_flips"],
+        "shrink_vs_wait_p99": round(fhead["p99_ratio"], 3),
+        "shrink_goodput": round(fhead["shrink_goodput"], 4),
+        "wait_goodput": round(fhead["wait_goodput"], 4),
     }
 
 

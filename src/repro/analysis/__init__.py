@@ -15,7 +15,10 @@ Five rule packs (codes grouped by hundreds digit):
   values, dominance consistency),
 * ``F1xx`` (:mod:`repro.analysis.rules_fleet`) — FleetSpec timeline
   sanity (jobs fit some group, positive trace, burst windows, finite
-  preemption/resize costs).
+  preemption/resize costs),
+* ``Y1xx`` (:mod:`repro.analysis.rules_reliability`) — failure models
+  and traces (positive finite MTBF/MTTR/checkpoint-bw, fixed interval
+  shorter than the run, non-empty traces, blast radius in range).
 
 Entry points: the ``analyze_*`` helpers below, the ``validate=`` gate on
 :func:`repro.core.study.run_study`, and the registry sweep CLI
@@ -38,6 +41,7 @@ from repro.analysis.diagnostics import (
 from repro.analysis.rules_cluster import analyze_cluster
 from repro.analysis.rules_compiled import analyze_compiled
 from repro.analysis.rules_fleet import analyze_fleet
+from repro.analysis.rules_reliability import analyze_reliability
 from repro.analysis.rules_search import SearchTarget, analyze_search
 from repro.analysis.rules_serving import analyze_serving
 from repro.analysis.rules_study import analyze_study
@@ -53,6 +57,7 @@ __all__ = [
     "analyze_cluster",
     "analyze_compiled",
     "analyze_fleet",
+    "analyze_reliability",
     "analyze_search",
     "analyze_serving",
     "analyze_study",

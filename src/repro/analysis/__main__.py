@@ -13,6 +13,8 @@ Statically checks, without running the simulator:
   S1xx on its lowered StudySpec);
 * the default ``dse.fleet_study`` spec (F1xx on the FleetSpec plus
   S1xx on its lowered StudySpec);
+* the default ``dse.reliability_study`` and ``dse.reliability_fleet_study``
+  specs (Y1xx on the failure model/trace plus S1xx/F1xx on the carriers);
 * the search pack (R1xx) over a deterministic synthetic Pareto
   annotation — a live gate on the dominance logic.
 
@@ -123,6 +125,16 @@ def sweep(models: Sequence[str], clusters: Sequence[str],
     fspec = fleet_study()
     diags += analyze_fleet(fspec, config)
     diags += analyze_study(fspec.to_study(), config)
+
+    from repro.analysis.rules_reliability import analyze_reliability
+    from repro.core.dse import reliability_fleet_study, reliability_study
+    rspec = reliability_study()
+    diags += analyze_reliability(rspec, config)
+    diags += analyze_study(rspec, config)
+    rfspec = reliability_fleet_study()
+    diags += analyze_reliability(rfspec, config)
+    diags += analyze_fleet(rfspec, config)
+    diags += analyze_study(rfspec.to_study(), config)
 
     # Search pack (R1xx) over a deterministic synthetic frontier: annotate
     # a fixed record set through the real pareto_front path, then check

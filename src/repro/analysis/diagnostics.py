@@ -27,7 +27,7 @@ SEVERITIES: Tuple[str, ...] = ("info", "warning", "error")
 _SEV_RANK: Dict[str, int] = {s: i for i, s in enumerate(SEVERITIES)}
 
 PACKS: Tuple[str, ...] = ("workload", "compiled", "study", "cluster",
-                          "serving", "search", "fleet")
+                          "serving", "search", "fleet", "reliability")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,8 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.analysis.diagnostics import Diagnostic, RuleConfig, rule, run_pack
 from repro.core.placement import get_placement
-from repro.core.study import StudySpec, as_strategy_space, check_path
+from repro.core.study import (StudySpec, as_strategy_space, check_path,
+                              is_reliability_axis)
 
 
 @rule("S101", "study", "error",
@@ -32,6 +33,10 @@ def _check_axis_paths(spec: StudySpec,
     transformed = False
     for axis in spec.axes:
         if axis.kind != "cluster":
+            continue
+        if is_reliability_axis(axis):
+            # resolves against the FailureModel, not the cluster —
+            # already validated by StudySpec and the Y1xx pack
             continue
         if axis.apply is not None:
             # An apply axis may rewrite the cluster arbitrarily (even swap

@@ -8,8 +8,11 @@ Format: one directory per step —
 
 Writes go to ``step_X.tmp`` and are renamed after the commit marker is
 fsynced — a crash mid-write never corrupts the latest checkpoint (restore
-scans for the newest ``.done``). ``save_async`` runs the serialization on a
-worker thread so the train loop only pays for the host transfer.
+scans for the newest ``.done`` whose directory actually holds a
+``meta.json``, falling back past stale markers left by an interrupted
+re-save; orphaned ``step_X.tmp`` buffers are GC'd on construction).
+``save_async`` runs the serialization on a worker thread so the train
+loop only pays for the host transfer.
 
 Elastic restore: leaves are stored unsharded; ``restore`` device_puts them
 under whatever shardings the *current* mesh dictates, so restarting on a
@@ -57,6 +60,13 @@ class Checkpointer:
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # GC orphaned write buffers from a previous crashed save: a
+        # step_X.tmp dir is by construction uncommitted and unreadable.
+        for name in os.listdir(directory):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                path = os.path.join(directory, name)
+                if os.path.isdir(path):
+                    shutil.rmtree(path)
 
     # ------------------------------------------------------------------ #
     def _step_dir(self, step: int) -> str:
@@ -83,10 +93,15 @@ class Checkpointer:
                  "shape": list(arr.shape)})
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+        done = final + ".done"
         if os.path.exists(final):
+            # Re-save of an existing step: drop the commit marker before
+            # touching the directory, so a crash inside the swap window
+            # leaves no marker pointing at a missing/partial checkpoint.
+            if os.path.exists(done):
+                os.remove(done)
             shutil.rmtree(final)
         os.rename(tmp, final)
-        done = final + ".done"
         with open(done, "w") as f:
             f.write(str(step))
             f.flush()
@@ -108,15 +123,24 @@ class Checkpointer:
             self._thread = None
 
     # ------------------------------------------------------------------ #
-    def latest_step(self) -> Optional[int]:
+    def _committed_steps(self) -> List[int]:
         steps = []
         for name in os.listdir(self.directory):
-            if name.endswith(".done"):
+            if name.startswith("step_") and name.endswith(".done"):
                 try:
                     steps.append(int(name[len("step_"):-len(".done")]))
                 except ValueError:
                     continue
-        return max(steps) if steps else None
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        """Newest step that is both committed (``.done``) and readable
+        (``meta.json`` present).  A stale marker left by an interrupted
+        re-save is skipped, falling back to the next-newest step."""
+        for s in reversed(self._committed_steps()):
+            if os.path.isfile(os.path.join(self._step_dir(s), "meta.json")):
+                return s
+        return None
 
     def restore(self, step: Optional[int] = None, target=None,
                 shardings=None) -> Tuple[Any, Dict]:
@@ -142,6 +166,13 @@ class Checkpointer:
             return out, meta.get("extra", {})
 
         flat = _flatten(target)
+        missing = sorted(k for k, _ in flat if k not in by_key)
+        unexpected = sorted(set(by_key) - {k for k, _ in flat})
+        if missing or unexpected:
+            raise KeyError(
+                f"checkpoint step {step} does not match the target tree: "
+                f"missing from checkpoint: {missing or 'none'}; "
+                f"unexpected in checkpoint: {unexpected or 'none'}")
         sh_flat = (_flatten(shardings) if shardings is not None
                    else [(k, None) for k, _ in flat])
         leaves = []

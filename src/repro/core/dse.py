@@ -819,6 +819,209 @@ def fleet_headline(records: Sequence[Dict[str, float]]
 
 
 # --------------------------------------------------------------------- #
+# ISSUE 10 tentpole: failure-aware DSE headline studies.
+# (a) reliability_study — closed-form Young–Daly goodput columns over a
+#     cluster-shape axis engineered so the §V-D perf-per-dollar ranking
+#     flips once failures are priced in (goodput_per_dollar);
+# (b) reliability_fleet_study — fault injection in the fleet timeline:
+#     wait-for-repair vs shrink-to-survive under an explicit failure.
+# --------------------------------------------------------------------- #
+
+def _reliability_clusters() -> Dict[str, ClusterConfig]:
+    """Two same-aggregate-compute cluster shapes: many cheap half-speed
+    nodes vs a quarter as many double-speed ones.  Failure-free, the
+    many-weak shape wins perf-per-dollar (cheaper capex per FLOP); at
+    finite MTBF its 4x node count quadruples the job-level failure rate
+    and the few-strong shape wins goodput-per-dollar — the ranking-flip
+    headline."""
+    from repro.core.cluster import BASELINE_DGX_A100
+    base = BASELINE_DGX_A100
+    assert base.cost is not None
+    weak = base.node.scaled_compute(0.5).with_expansion(
+        cap=1e15, bw=1000 * GB)
+    strong = base.node.scaled_compute(2.0).with_expansion(
+        cap=1e15, bw=1000 * GB)
+    many = dataclasses.replace(
+        base, name="many-weak", num_nodes=2048, node=weak,
+        cost=dataclasses.replace(base.cost, usd_per_node=7_500))
+    few = dataclasses.replace(
+        base, name="few-strong", num_nodes=512, node=strong,
+        cost=dataclasses.replace(base.cost, usd_per_node=29_000))
+    return {"many-weak": many, "few-strong": few}
+
+
+RELIABILITY_SHAPE = ShapeConfig("reliability", 2048, 1024, "train")
+
+
+def reliability_study(
+    cfg: Optional[ModelConfig] = None,
+    shape: Optional[ShapeConfig] = None,
+    clusters: Optional[Dict[str, ClusterLike]] = None,
+    mtbf_hours: Sequence[float] = (float("inf"), 10_000.0),
+    intervals: Sequence[float] = (0.0, 120.0),
+    mttr_hours: float = 2.0,
+    ckpt_bw: float = 400e9,
+    run_hours: float = 168.0,
+) -> StudySpec:
+    """Transformer-1T failure-aware cluster DSE (closed form).
+
+    Sweeps (cluster shape) x (per-node MTBF, inf = failure-free) x
+    (checkpoint cadence: 0 = the Young–Daly optimum, else a naive fixed
+    interval) with each shape's fill-the-cluster strategy, and attaches
+    the ``ckpt_interval_s / ckpt_overhead_frac / expected_restarts /
+    goodput_frac / goodput_per_dollar`` columns through
+    ``StudySpec.reliability``.  ``reliability_headline`` reads the two
+    ISSUE-10 claims off the result: the Daly interval beats the naive
+    cadence on goodput, and the perf-per-dollar ranking flips once
+    failures are priced in."""
+    from repro.reliability import FailureModel
+    cfg = cfg or _default_transformer()
+    shape = shape or RELIABILITY_SHAPE
+    cl = dict(clusters) if clusters is not None else _reliability_clusters()
+    return StudySpec(
+        name="reliability-goodput-dse", model=cfg, shape=shape,
+        strategies=GridSpace(mp=(8,), dp=(64, 256)),
+        axes=[Axis("cluster", tuple(cl), apply=lambda _, n: cl[n]),
+              Axis("mtbf_hours", tuple(mtbf_hours),
+                   path="reliability.mtbf_hours"),
+              Axis("ckpt_interval", tuple(intervals),
+                   path="reliability.interval_s")],
+        reliability=FailureModel(mtbf_hours=50_000.0,
+                                 mttr_hours=mttr_hours, ckpt_bw=ckpt_bw,
+                                 run_hours=run_hours))
+
+
+def reliability_ranking(processes: Optional[int] = None,
+                        engine: str = "compiled",
+                        **kwargs) -> List[Dict[str, float]]:
+    """Feasible (cluster, mtbf, cadence) cells, best failure-aware
+    goodput-per-dollar first."""
+    res = run_study(reliability_study(**kwargs), processes=processes,
+                    engine=engine)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["goodput_per_dollar"],
+                  reverse=True)
+
+
+def reliability_headline(records: Sequence[Dict[str, float]]
+                         ) -> Dict[str, object]:
+    """The two closed-form ISSUE-10 claims from a
+    ``reliability_ranking`` table: ``daly_vs_naive`` (>= 1: the
+    Young–Daly cadence never loses goodput to the naive fixed one) and
+    ``ranking_flips`` (the failure-free perf-per-dollar winner is not
+    the failure-aware goodput-per-dollar winner)."""
+    import math
+    fin = [r for r in records if math.isfinite(r["mtbf_hours"])]
+    free = [r for r in records if math.isinf(r["mtbf_hours"])]
+    best_aware = max(fin, key=lambda r: r["goodput_per_dollar"])
+    best_free = max(free, key=lambda r: r["perf_per_dollar"])
+    same = [r for r in fin if r["cluster"] == best_aware["cluster"]]
+    daly = max(r["goodput_frac"] for r in same if r["ckpt_interval"] == 0.0)
+    naive = max(r["goodput_frac"] for r in same if r["ckpt_interval"] > 0.0)
+    return {
+        "daly_goodput": daly,
+        "naive_goodput": naive,
+        "daly_vs_naive": daly / naive,
+        "best_failure_free": best_free["cluster"],
+        "best_failure_aware": best_aware["cluster"],
+        "ranking_flips": best_free["cluster"] != best_aware["cluster"],
+    }
+
+
+def _reliability_pod(kind: str = "B1") -> ClusterSpec:
+    """A single 16-node Table III pod: with only one group, a killed
+    wide instance cannot relocate — wait-for-repair genuinely waits."""
+    base = TABLE_III_CLUSTERS[kind]
+    pod = base.topology.pod_size
+    return ClusterSpec(
+        name=f"{kind}-pod",
+        pods=(PodSpec(base.node, count=1, nodes_per_pod=pod),),
+        interconnect=base.topology, cost=base.cost,
+        notes=f"One {kind} pod x {pod} nodes for fault-injection studies.")
+
+
+def _reliability_fleet_mix(num_iters_scale: float = 1.0):
+    """Two elastic trainers whose width menu reaches below the base
+    width — the lever shrink-to-survive pulls when a failure leaves
+    fewer than base-width nodes up."""
+    from repro.fleet import FleetJobSpec
+
+    def n(iters: int) -> int:
+        return max(1, int(round(iters * num_iters_scale)))
+
+    return (
+        FleetJobSpec(name="pretrain", model="chatglm3-6b", mp=2,
+                     global_batch=256, nodes_per_instance=8,
+                     widths=(2, 8), iterations=n(40), priority=0),
+        FleetJobSpec(name="finetune", model="chatglm3-6b", mp=2,
+                     global_batch=256, nodes_per_instance=8,
+                     widths=(2, 8), iterations=n(40), arrival=10.0,
+                     priority=0),
+    )
+
+
+def reliability_fleet_study(
+    fleet: Optional[ClusterLike] = None,
+    policies: Sequence[str] = ("wait", "shrink"),
+    fail_time: float = 300.0,
+    fail_nodes: int = 12,
+    repair_s: float = 30_000.0,
+    ckpt_interval_s: float = 120.0,
+    num_iters_scale: float = 1.0,
+    placement: str = "em-aware",
+):
+    """Fault injection in the fleet timeline: an explicit failure downs
+    ``fail_nodes`` of a single 16-node pod mid-run with a long repair,
+    and the ``fleet.degradation`` axis replays the same timeline under
+    wait-for-repair vs shrink-to-survive.  With one group there is
+    nowhere to relocate: the wait cells stall until the repair; the
+    shrink cells restart narrow on what is left —
+    ``reliability_fleet_headline`` reads the turnaround-p99 win off the
+    table.  Returns a :class:`repro.fleet.FleetSpec`."""
+    from repro.fleet import FleetModel, FleetSpec, FleetTrace
+    from repro.reliability import FailureEvent, FailureTrace
+    return FleetSpec(
+        name="fleet-reliability-dse",
+        jobs=_reliability_fleet_mix(num_iters_scale),
+        cluster=fleet if fleet is not None else _reliability_pod(),
+        fleet=FleetModel(policy="elastic",
+                         ckpt_interval_s=ckpt_interval_s),
+        ftrace=FleetTrace(kind="static"),
+        failures=FailureTrace(
+            kind="explicit",
+            events=(FailureEvent(time=fail_time, group=0,
+                                 nodes=fail_nodes, repair_s=repair_s),)),
+        placement=placement,
+        axes=[Axis("degradation", tuple(policies),
+                   path="fleet.degradation")])
+
+
+def reliability_fleet_ranking(processes: Optional[int] = None,
+                              **kwargs) -> List[Dict[str, float]]:
+    """Feasible degradation-policy cells, best turnaround-p99 first."""
+    res: StudyResult = run_study(reliability_fleet_study(**kwargs),
+                                 processes=processes)
+    feasible = [c.record for c in res if c.record["feasible"]]
+    return sorted(feasible, key=lambda r: r["turnaround_p99"])
+
+
+def reliability_fleet_headline(records: Sequence[Dict[str, float]]
+                               ) -> Dict[str, float]:
+    """The fault-injection ISSUE-10 claim from a
+    ``reliability_fleet_ranking`` table: shrink-to-survive beats
+    wait-for-repair on turnaround-p99 (``p99_ratio`` > 1)."""
+    by_policy = {r["degradation"]: r for r in records}
+    wait, shrink = by_policy["wait"], by_policy["shrink"]
+    return {
+        "wait_p99": wait["turnaround_p99"],
+        "shrink_p99": shrink["turnaround_p99"],
+        "p99_ratio": wait["turnaround_p99"] / shrink["turnaround_p99"],
+        "wait_goodput": wait["goodput"],
+        "shrink_goodput": shrink["goodput"],
+    }
+
+
+# --------------------------------------------------------------------- #
 # Figure-study registry
 # --------------------------------------------------------------------- #
 

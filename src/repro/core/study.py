@@ -372,6 +372,17 @@ def placement_axis(values: Sequence[PlacementLike] = ("paper", "em-aware"),
     return Axis(name, tuple(values), kind="placement")
 
 
+_RELIABILITY_PREFIX = "reliability."
+
+
+def is_reliability_axis(axis: Axis) -> bool:
+    """True when the axis path rewrites the spec's FailureModel instead
+    of the cluster (``reliability.*`` — mirrors the fleet's ``fleet.*``
+    convention)."""
+    return (axis.kind == "cluster" and axis.path is not None
+            and axis.path.startswith(_RELIABILITY_PREFIX))
+
+
 # ===================================================================== #
 # Study specification
 # ===================================================================== #
@@ -432,6 +443,13 @@ class StudySpec:
     metrics: Dict[str, Callable[[StudyContext], Any]] = \
         dataclasses.field(default_factory=dict)
     evaluate: Optional[Callable[[StudyContext], Dict[str, Any]]] = None
+    # A repro.reliability.FailureModel: every simulated cell then grows
+    # the closed-form Young–Daly columns (ckpt_interval_s /
+    # ckpt_overhead_frac / expected_restarts / goodput_frac and, with a
+    # cost model, goodput_per_dollar).  ``reliability.*`` dotted-path
+    # axes rewrite it per cell.  None (default) adds nothing — records
+    # are bit-for-bit the pre-reliability output.
+    reliability: Optional[Any] = None
 
     # Record columns the engine itself writes; an axis shadowing one would
     # silently corrupt select()/pivot()/best().  (A kind="placement" axis
@@ -450,6 +468,8 @@ class StudySpec:
         "ttft_p50", "ttft_p99", "tpot", "goodput", "goodput_per_dollar",
         "fleet_util", "turnaround_p50", "turnaround_p99", "preemptions",
         "resize_events", "burst_events", "jobs_completed", "n_events",
+        "ckpt_interval_s", "ckpt_overhead_frac", "expected_restarts",
+        "goodput_frac", "failures", "lost_work_frac",
     })
 
     def __post_init__(self):
@@ -475,10 +495,19 @@ class StudySpec:
         # first cell inside an imap_unordered worker.  An apply axis may
         # rewrite the cluster arbitrarily (even change its type), so paths
         # behind one can only be checked at run time.
+        for axis in self.axes:
+            if is_reliability_axis(axis):
+                if self.reliability is None:
+                    raise ValueError(
+                        f"axis {axis.name!r} sweeps {axis.path!r} but the "
+                        "study has no FailureModel — set "
+                        "StudySpec.reliability")
+                check_path(self.reliability,
+                           (axis.path or "")[len(_RELIABILITY_PREFIX):])
         if self.cluster is not None:
             transformed = False
             for axis in self.axes:
-                if axis.kind != "cluster":
+                if axis.kind != "cluster" or is_reliability_axis(axis):
                     continue
                 if axis.apply is not None:
                     transformed = True
@@ -522,6 +551,8 @@ def _cells(spec: StudySpec) -> List[Tuple[Optional[ParallelSpec],
             if axis.kind == "placement":
                 pl = get_placement(value)
                 point[axis.name] = pl.label if pl is not None else None
+            elif is_reliability_axis(axis):
+                pass   # folded into the FailureModel per cell (_eval_cell)
             else:
                 cluster = axis.override(cluster, value)
         if cluster is None and spec.evaluate is None:
@@ -577,6 +608,42 @@ def _cost_columns(record: Dict[str, Any], cluster: ClusterLike) -> None:
         record["perf_per_dollar"] = 1.0 / (total * tco)
     else:
         record["perf_per_dollar"] = 0.0
+
+
+def _reliability_columns(spec: StudySpec, ctx: StudyContext,
+                         record: Dict[str, Any]) -> None:
+    """Attach the closed-form Young–Daly columns when the spec carries a
+    FailureModel.  ``reliability.*`` axes fold into the model here (the
+    cluster never sees them).  Infeasible cells get zeroed columns so
+    ``best("goodput_per_dollar", maximize=True)`` never recommends a
+    strategy that does not fit."""
+    model = spec.reliability
+    if model is None:
+        return
+    from repro.fleet.resize import instance_state_bytes
+    from repro.reliability.model import reliability_columns
+    for axis in spec.axes:
+        if is_reliability_axis(axis):
+            model = set_by_path(model,
+                                (axis.path or "")[len(_RELIABILITY_PREFIX):],
+                                ctx.point[axis.name],
+                                scale=(axis.mode == "scale"))
+    if not record.get("feasible", True) or ctx.workload is None:
+        record.update(ckpt_interval_s=0.0, ckpt_overhead_frac=0.0,
+                      expected_restarts=0.0, goodput_frac=0.0)
+        if "perf_per_dollar" in record:
+            record["goodput_per_dollar"] = 0.0
+        return
+    num_nodes = (ctx.strategy.num_nodes if ctx.strategy is not None
+                 else ctx.cluster.num_nodes if ctx.cluster is not None
+                 else 0)
+    record.update(reliability_columns(
+        model, instance_state_bytes(ctx.workload), num_nodes))
+    if "perf_per_dollar" in record:
+        # iterations of *useful* work per second per TCO dollar — the
+        # failure-aware §V-D ranking metric.
+        record["goodput_per_dollar"] = \
+            record["goodput_frac"] * record["perf_per_dollar"]
 
 
 _DEFAULT_SCHEDULER = ScheduleModel()
@@ -682,6 +749,7 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
                           turnaround=float("inf"), makespan=float("inf"))
         if cluster is not None:
             _cost_columns(record, cluster)
+        _reliability_columns(spec, ctx, record)
         for mname, fn in spec.metrics.items():
             try:
                 record[mname] = fn(ctx)
@@ -727,6 +795,7 @@ def _eval_cell(spec: StudySpec, strategy: Optional[ParallelSpec],
     if spec.job is not None:
         _job_columns(spec, ctx, record, sim_memo, skey, group_sim=group_sim)
     _cost_columns(record, cluster)
+    _reliability_columns(spec, ctx, record)
     for mname, fn in spec.metrics.items():
         record[mname] = fn(ctx)
     return CellResult(strategy, ctx.point, cluster, br, br.footprint, record)
@@ -902,6 +971,13 @@ def _validate_spec(spec: StudySpec, mode: str) -> None:
     if getattr(spec, "fleet", None) is not None:
         from repro.analysis import analyze_fleet
         diags += analyze_fleet(spec.fleet)
+    fleet_failures = getattr(getattr(spec, "fleet", None), "failures", None)
+    if getattr(spec, "reliability", None) is not None:
+        from repro.analysis import analyze_reliability
+        diags += analyze_reliability(spec)
+    elif fleet_failures is not None and fleet_failures.enabled:
+        from repro.analysis import analyze_reliability
+        diags += analyze_reliability(spec.fleet)
     # Advisory (info) findings don't warrant interrupting a run; they stay
     # visible through the CLI and analyze_* helpers.
     diags = [d for d in diags if d.severity != "info"]

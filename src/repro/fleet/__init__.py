@@ -6,8 +6,11 @@ timeline: heterogeneous jobs arrive on a trace, queue per node group,
 preempt each other by priority, grow/shrink their DP width elastically,
 and lend the fleet to bursting tenants — every transition priced by the
 ``remesh_state`` checkpoint/reshard cost model.  ``FleetSpec`` lowers
-straight into ``run_study`` (``fleet.*`` / ``ftrace.*`` dotted-path
-axes), so fleet policy is a study axis like any cluster knob.
+straight into ``run_study`` (``fleet.*`` / ``ftrace.*`` / ``fail.*``
+dotted-path axes), so fleet policy is a study axis like any cluster
+knob.  A ``repro.reliability.FailureTrace`` injects node failures into
+the timeline (interval-quantized rollback, wait-vs-shrink degradation)
+and surfaces ``failures / lost_work_frac / goodput`` columns.
 
 See docs/fleet_api.md.
 """
@@ -15,14 +18,16 @@ See docs/fleet_api.md.
 from repro.fleet.jobs import FleetJob, FleetJobSpec, WidthProfile
 from repro.fleet.resize import (checkpoint_delay, instance_state_bytes,
                                 remesh_delay)
-from repro.fleet.simulator import (FLEET_POLICIES, FleetEvent, FleetModel,
-                                   FleetResult, FleetSimulator, JobOutcome)
+from repro.fleet.simulator import (DEGRADATION_POLICIES, FLEET_POLICIES,
+                                   FleetEvent, FleetModel, FleetResult,
+                                   FleetSimulator, JobOutcome)
 from repro.fleet.spec import (FLEET_COLUMNS, FleetPoint, FleetSpec,
                               FleetStudy, build_workload, fleet_record,
                               is_fleet_axis)
 from repro.fleet.trace import FLEET_TRACE_KINDS, FleetTrace
 
 __all__ = [
+    "DEGRADATION_POLICIES",
     "FLEET_COLUMNS",
     "FLEET_POLICIES",
     "FLEET_TRACE_KINDS",

@@ -37,7 +37,11 @@ class FleetJobSpec(JobSpec):
     * ``burst_iters`` — > 0 marks the first ``burst_iters`` iterations
       as a burst-parallel phase that may borrow the fleet;
     * ``preemptible`` — whether higher-priority tenants may checkpoint
-      this job off its nodes.
+      this job off its nodes;
+    * ``on_failure`` — per-job degradation policy when a node failure
+      kills an instance: ``"wait"`` re-queues at the base width,
+      ``"shrink"`` at the narrowest menu width; ``""`` (default)
+      inherits ``FleetModel.degradation``.
     """
 
     model: str = ""
@@ -49,6 +53,7 @@ class FleetJobSpec(JobSpec):
     widths: Tuple[int, ...] = ()
     burst_iters: int = 0
     preemptible: bool = True
+    on_failure: str = ""
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -69,6 +74,10 @@ class FleetJobSpec(JobSpec):
         for w in self.widths:
             if w < 1:
                 raise ValueError(f"widths must be >= 1, got {self.widths}")
+        if self.on_failure not in ("", "wait", "shrink"):
+            raise ValueError(
+                f"on_failure must be '', 'wait' or 'shrink', "
+                f"got {self.on_failure!r}")
 
     @property
     def base_width(self) -> int:

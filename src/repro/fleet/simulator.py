@@ -29,6 +29,21 @@ Policies (:class:`FleetModel.policy`):
   borrow lower-priority tenants' nodes for its first ``burst_iters``
   iterations (lend/return hand-offs priced as checkpoint/restore plus
   ``lend_overhead``).
+
+Fault injection (PR 10): a :class:`repro.reliability.FailureTrace`
+passed to the simulator downs nodes mid-timeline.  A failure first
+absorbs idle capacity; the remainder kills running instances
+(lowest-priority, latest-arrival first), whose work rolls back to the
+last *interval-quantized* checkpoint boundary — the cadence is the
+fixed ``FleetModel.ckpt_interval_s`` or the per-segment Young–Daly
+optimum, and every running segment's iteration time is inflated by
+``1 + C/tau`` to charge the checkpoint writes themselves.  Capacity
+returns at the repair event.  The per-job degradation policy
+(``on_failure``, defaulting to ``FleetModel.degradation``) chooses
+wait-for-repair (re-queue at the base width) vs shrink-to-survive
+(re-queue at the narrowest menu width).  With no trace (or a disabled
+one) every inflation factor is exactly 1.0 and no new events enter the
+heap: the timeline is bit-for-bit the failure-free one.
 """
 
 from __future__ import annotations
@@ -42,8 +57,10 @@ from repro.core.placement import (JobSpec, Placement, ScheduleModel,
                                   get_placement)
 from repro.fleet.jobs import FleetJob, WidthProfile
 from repro.fleet.resize import checkpoint_delay, remesh_delay
+from repro.reliability.trace import FailureEvent, FailureTrace
 
 FLEET_POLICIES: Tuple[str, ...] = ("static", "elastic", "elastic+burst")
+DEGRADATION_POLICIES: Tuple[str, ...] = ("wait", "shrink")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,18 +72,36 @@ class FleetModel:
     is the fixed per-hand-off tax a burst lend/return adds on top of
     the checkpoint/restore pair.  ``preemption`` only takes effect
     under the elastic policies — ``static`` is the pure
-    ``ScheduleModel``-equivalent baseline."""
+    ``ScheduleModel``-equivalent baseline.
+
+    ``degradation`` is the fleet-default failure policy a job without
+    an ``on_failure`` override inherits (``"wait"`` re-queues a killed
+    instance at its base width; ``"shrink"`` re-queues it at the
+    narrowest menu width so it can restart on degraded capacity).
+    ``ckpt_interval_s`` fixes the checkpoint cadence fault injection
+    quantizes rollback to; 0 picks the per-segment Young–Daly optimum
+    from the active failure trace's rate.  Both are inert without a
+    failure trace."""
 
     policy: str = "elastic+burst"
     checkpoint_bw: float = 40e9
     reshard_bw: float = 100e9
     preemption: bool = True
     lend_overhead: float = 1.0
+    degradation: str = "wait"
+    ckpt_interval_s: float = 0.0
 
     def __post_init__(self) -> None:
         if self.policy not in FLEET_POLICIES:
             raise ValueError(f"policy must be one of {FLEET_POLICIES}, "
                              f"got {self.policy!r}")
+        if self.degradation not in DEGRADATION_POLICIES:
+            raise ValueError(
+                f"degradation must be one of {DEGRADATION_POLICIES}, "
+                f"got {self.degradation!r}")
+        if self.ckpt_interval_s < 0:
+            raise ValueError(f"ckpt_interval_s must be >= 0 (0 = "
+                             f"Young–Daly), got {self.ckpt_interval_s}")
 
     @property
     def elastic(self) -> bool:
@@ -88,7 +123,7 @@ class FleetEvent:
 
     time: float
     kind: str        # arrive|start|finish|complete|preempt|resume|grow|
-    #                  shrink|lend|return|fail
+    #                  shrink|lend|return|fail|fail_node|repair|fault
     job: str
     group: int
     width: int
@@ -110,6 +145,7 @@ class JobOutcome:
     preemptions: int = 0
     resizes: int = 0
     bursts: int = 0
+    failures: int = 0
 
     @property
     def turnaround(self) -> float:
@@ -134,6 +170,8 @@ class FleetResult:
     capacities: Tuple[int, ...]
     makespan: float
     busy_node_seconds: float
+    useful_node_seconds: float = 0.0
+    lost_node_seconds: float = 0.0
 
     @property
     def turnarounds(self) -> Tuple[float, ...]:
@@ -169,6 +207,27 @@ class FleetResult:
     @property
     def jobs_completed(self) -> int:
         return sum(1 for o in self.outcomes if o.completed)
+
+    @property
+    def failures(self) -> int:
+        """Instance kills charged to node failures (not preemptions)."""
+        return sum(o.failures for o in self.outcomes)
+
+    @property
+    def lost_work_frac(self) -> float:
+        """Failure-discarded compute as a fraction of busy node-time."""
+        if self.busy_node_seconds <= 0:
+            return 0.0
+        return self.lost_node_seconds / self.busy_node_seconds
+
+    @property
+    def goodput(self) -> float:
+        """Credited-iteration compute as a fraction of busy node-time
+        (checkpoint writes, restores, remeshes and rework are the
+        complement)."""
+        if self.busy_node_seconds <= 0:
+            return 0.0
+        return self.useful_node_seconds / self.busy_node_seconds
 
     @property
     def feasible(self) -> bool:
@@ -224,6 +283,8 @@ class _Inst:
     seg_iters: int = 0           # iterations covered by the running segment
     resizing: bool = False       # a remesh is in flight
     epoch: int = 0               # invalidates stale heap events
+    f: float = 1.0               # checkpoint-cadence inflation (1 + C/tau)
+    tau: float = math.inf        # checkpoint interval for this segment
 
     @property
     def key(self) -> Tuple[int, float, int, int]:
@@ -238,7 +299,9 @@ class FleetSimulator:
     def __init__(self, capacities: Sequence[int],
                  model: Optional[FleetModel] = None,
                  placement: object = None,
-                 schedule_model: Optional[ScheduleModel] = None) -> None:
+                 schedule_model: Optional[ScheduleModel] = None,
+                 failures: Optional[FailureTrace] = None,
+                 pod_sizes: Optional[Sequence[int]] = None) -> None:
         if not capacities or any(c < 1 for c in capacities):
             raise ValueError(
                 f"capacities must be positive per group, got {capacities}")
@@ -246,6 +309,15 @@ class FleetSimulator:
         self.model = model or FleetModel()
         self.placement: Optional[Placement] = get_placement(placement)
         self.scheduler = schedule_model or ScheduleModel()
+        self.failures = failures
+        self.pod_sizes: Optional[Tuple[int, ...]] = \
+            tuple(int(p) for p in pod_sizes) if pod_sizes is not None \
+            else None
+        if self.pod_sizes is not None \
+                and len(self.pod_sizes) != len(self.capacities):
+            raise ValueError(
+                f"pod_sizes must match capacities per group, got "
+                f"{len(self.pod_sizes)} vs {len(self.capacities)}")
 
     # ------------------------------------------------------------------ #
     def run(self, jobs: Sequence[FleetJob]) -> FleetResult:
@@ -281,10 +353,20 @@ class _RunState:
         # (job uid, group, width, dur) -> (anchor, wave) wave-succession
         # hints left by finish events, consumed by same-timestamp admission
         self.hints: Dict[Tuple[int, int, int, float], Tuple[float, int]] = {}
+        # --- fault injection (all zero / empty when no trace) ---------- #
+        self.ftrace = sim.failures
+        self.rel = self.ftrace is not None and self.ftrace.enabled
+        self.down = [0] * len(self.cap)          # nodes currently failed
+        self.transit_down = [0] * len(self.cap)  # failed while ckpt-writing
+        self.useful = 0.0                        # credited compute node-s
+        self.lost = 0.0                          # failure-discarded node-s
+        if self.rel and self.ftrace is not None:
+            for fe in self.ftrace.materialize(self.cap, sim.pod_sizes):
+                self._push(fe.time, "fail_node", fe)
 
     # --- bookkeeping --------------------------------------------------- #
     def _advance(self, t: float) -> None:
-        used = sum(self.cap) - sum(self.free)
+        used = sum(self.cap) - sum(self.free) - sum(self.down)
         self.busy += used * (t - self._last_t)
         self._last_t = t
         self.now = t
@@ -304,6 +386,25 @@ class _RunState:
     def _remesh(self, bytes_: float) -> float:
         return remesh_delay(bytes_, self.model.checkpoint_bw,
                             self.model.reshard_bw)
+
+    def _ckpt(self, job: "_Job", width: int) -> Tuple[float, float]:
+        """(inflation factor, checkpoint interval) for a segment of
+        ``job`` at ``width``: the fixed ``FleetModel.ckpt_interval_s``
+        cadence or the per-segment Young–Daly optimum at the trace's
+        node failure rate.  Exactly ``(1.0, inf)`` without failures —
+        the bit-for-bit degenerate."""
+        if not self.rel or self.ftrace is None:
+            return 1.0, math.inf
+        tau = self.model.ckpt_interval_s
+        if tau <= 0:
+            lam = width * self.ftrace.rate_per_node
+            if lam <= 0:
+                return 1.0, math.inf    # explicit trace, no cadence set
+            write = self._delay(job.job.state_bytes)
+            tau = math.sqrt(2.0 * write / lam) if write > 0 else math.inf
+        if not (tau > 0) or math.isinf(tau):
+            return 1.0, math.inf
+        return 1.0 + self._delay(job.job.state_bytes) / tau, tau
 
     # --- planning ------------------------------------------------------ #
     def _plan(self, job: _Job, avail: Sequence[int], width: int,
@@ -375,6 +476,10 @@ class _RunState:
                 self._on_free(payload)            # type: ignore[arg-type]
             elif kind == "resize":
                 self._on_resize(payload)          # type: ignore[arg-type]
+            elif kind == "fail_node":
+                self._on_fail_node(payload)       # type: ignore[arg-type]
+            elif kind == "repair":
+                self._on_repair(payload)          # type: ignore[arg-type]
             self.hints.clear()
         makespan = max((o.finish for o in self.outcomes() if o.completed),
                        default=0.0)
@@ -382,7 +487,9 @@ class _RunState:
                            events=tuple(self.events),
                            capacities=tuple(self.cap),
                            makespan=makespan,
-                           busy_node_seconds=self.busy)
+                           busy_node_seconds=self.busy,
+                           useful_node_seconds=self.useful,
+                           lost_node_seconds=self.lost)
 
     def outcomes(self) -> List[JobOutcome]:
         return [j.outcome for j in self.jobs]
@@ -402,6 +509,7 @@ class _RunState:
             return
         job = inst.job
         inst.remaining -= inst.seg_iters
+        self.useful += inst.seg_iters * (inst.it / inst.f) * inst.alloc
         self.free[inst.group] += inst.alloc
         was_burst = inst.burst_width > 0
         if was_burst:
@@ -436,9 +544,12 @@ class _RunState:
 
     def _on_free(self, payload: object) -> None:
         """Checkpoint write finished after a preempt/lend: the nodes
-        come back (unconditionally — the victim already re-queued)."""
+        come back (unless a failure downed them mid-write — those are
+        already counted in ``down`` and return at their repair)."""
         group, nodes = payload  # type: ignore[misc]
-        self.free[group] += nodes
+        taken = min(nodes, self.transit_down[group])
+        self.transit_down[group] -= taken
+        self.free[group] += nodes - taken
         self._dispatch()
 
     def _on_resize(self, payload: object) -> None:
@@ -457,7 +568,8 @@ class _RunState:
             self.free[inst.group] += inst.alloc - unit
         inst.alloc = unit
         inst.width = new_width
-        inst.it = prof.iter_times[inst.group]
+        inst.f, inst.tau = self._ckpt(job, new_width)
+        inst.it = prof.iter_times[inst.group] * inst.f
         inst.anchor = self.now
         inst.wave = 1
         inst.dur = inst.remaining * inst.it
@@ -467,6 +579,101 @@ class _RunState:
         inst.epoch += 1
         self._push(inst.anchor + inst.dur, "finish", (inst, inst.epoch))
         self._dispatch()
+
+    # --- fault injection ----------------------------------------------- #
+    def _on_fail_node(self, ev: FailureEvent) -> None:
+        """``ev.nodes`` nodes of group ``ev.group`` go down: idle
+        capacity absorbs the hit first, then running instances die
+        (lowest-priority, latest-arrival first).  Nodes mid-checkpoint
+        (a preempt/lend write in flight) are downed via the transit
+        debt their pending free event settles."""
+        g = ev.group
+        want = min(ev.nodes, self.cap[g] - self.down[g])
+        if want <= 0:
+            return
+        self.down[g] += want
+        absorbed = min(want, self.free[g])
+        self.free[g] -= absorbed
+        need = want - absorbed
+        if need > 0:
+            victims = sorted(
+                (i for j in self.jobs for i in j.instances
+                 if i.state == "running" and i.group == g and i.alloc > 0),
+                key=lambda i: i.key, reverse=True)
+            for v in victims:
+                if need <= 0:
+                    break
+                hit = min(need, v.alloc)
+                need -= hit
+                self._kill(v, hit)
+        # any leftover lands on nodes whose checkpoint write is in flight
+        self.transit_down[g] += need
+        self._emit("fail_node", "fleet", g, want)
+        self._push(self.now + ev.repair_s, "repair", (g, want))
+        self._dispatch()
+
+    def _on_repair(self, payload: object) -> None:
+        """Repaired nodes rejoin the pool: outstanding transit debt is
+        cancelled first (those nodes free when their write event
+        fires), the rest move down -> free."""
+        group, nodes = payload  # type: ignore[misc]
+        taken = min(nodes, self.transit_down[group])
+        self.transit_down[group] -= taken
+        self.down[group] -= taken
+        back = min(nodes - taken, self.down[group])
+        self.down[group] -= back
+        self.free[group] += back
+        self._emit("repair", "fleet", group, nodes)
+        self._dispatch()
+
+    def _kill(self, inst: _Inst, down_nodes: int) -> None:
+        """A node failure kills this instance: work rolls back to the
+        last interval-quantized checkpoint boundary, surviving nodes
+        free immediately (the job died — no checkpoint write), and the
+        instance re-queues per its degradation policy with the restore
+        charge."""
+        job = inst.job
+        self._fail_credit(inst)
+        self.free[inst.group] += inst.alloc - down_nodes
+        group = inst.group
+        if inst.burst_width > 0:
+            inst.burst_width = 0
+            job.burst_done = True
+        job.outcome.failures += 1
+        inst.alloc = 0
+        inst.resizing = False
+        if inst.remaining <= 0:
+            # the last interval boundary already committed the segment
+            inst.state = "done"
+            self._emit("finish", job.job.spec.name, group, inst.width)
+            if job.done:
+                job.outcome.finish = self.now
+                job.outcome.completed = True
+                self._emit("complete", job.job.spec.name, group, inst.width)
+            return
+        policy = job.job.spec.on_failure or self.model.degradation
+        width = job.job.spec.width_menu[0] if policy == "shrink" \
+            else job.job.spec.base_width
+        inst.state = "queued"
+        inst.group = -1
+        inst.width = width
+        inst.pending = self._delay(job.job.state_bytes)
+        self._emit("fault", job.job.spec.name, group, width)
+
+    def _fail_credit(self, inst: _Inst) -> None:
+        """Interval-quantized rollback: only whole checkpoint intervals
+        before the failure are committed; everything since the last
+        boundary is discarded into ``lost``."""
+        elapsed = max(0.0, self.now - inst.compute_start)
+        done = 0
+        if inst.it > 0 and elapsed > 0 and inst.tau > 0 \
+                and not math.isinf(inst.tau):
+            committed = math.floor(elapsed / inst.tau) * inst.tau
+            done = min(inst.seg_iters, int(committed / inst.it))
+        inst.remaining -= done
+        self.useful += done * (inst.it / inst.f) * inst.alloc
+        self.lost += max(0.0, elapsed - done * inst.it) * inst.alloc
+        inst.epoch += 1
 
     # --- admission ----------------------------------------------------- #
     def _queued(self, job: _Job, planned: Optional[bool] = None
@@ -595,7 +802,8 @@ class _RunState:
         inst.state = "running"
         width = inst.burst_width or inst.width
         prof = job.job.profile(width)
-        inst.it = prof.iter_times[g]
+        inst.f, inst.tau = self._ckpt(job, width)
+        inst.it = prof.iter_times[g] * inst.f
         inst.seg_iters = min(inst.remaining, job.job.spec.burst_iters) \
             if inst.burst_width else inst.remaining
         inst.dur = inst.seg_iters * inst.it
@@ -628,6 +836,7 @@ class _RunState:
             done = min(inst.seg_iters,
                        int((self.now - inst.compute_start) / inst.it))
         inst.remaining -= done
+        self.useful += done * (inst.it / inst.f) * inst.alloc
         inst.epoch += 1
 
     def _preempt(self, inst: _Inst, kind: str = "preempt") -> int:
@@ -697,7 +906,8 @@ class _RunState:
                     prof = job.job.profile(w)
                     if not prof.fits[g]:
                         continue
-                    gain = left * (inst.it - prof.iter_times[g])
+                    f_w, _ = self._ckpt(job, w)
+                    gain = left * (inst.it - prof.iter_times[g] * f_w)
                     if gain > cost:
                         best = w
                 if best:
@@ -755,5 +965,5 @@ class _RunState:
         inst.pending = self._remesh(job.job.state_bytes)
 
 
-__all__ = ["FLEET_POLICIES", "FleetEvent", "FleetModel", "FleetResult",
-           "FleetSimulator", "JobOutcome"]
+__all__ = ["DEGRADATION_POLICIES", "FLEET_POLICIES", "FleetEvent",
+           "FleetModel", "FleetResult", "FleetSimulator", "JobOutcome"]

@@ -9,11 +9,14 @@ resize_events / burst_events / jobs_completed`` next to the usual cost
 columns (``total`` is the timeline makespan, so ``perf_per_dollar``
 prices the whole fleet's throughput per TCO dollar).
 
-Axes whose dotted path starts with ``fleet.`` / ``ftrace.`` rewrite the
-fleet point (``Axis("policy", ("static", "elastic+burst"),
-path="fleet.policy")``, ``Axis("rate", (...), path="ftrace.rate")``)
-through the same :func:`repro.core.study.set_by_path` machinery cluster
-axes use.  Per-iteration times are re-queried from the compiled study
+Axes whose dotted path starts with ``fleet.`` / ``ftrace.`` / ``fail.``
+rewrite the fleet point (``Axis("policy", ("static", "elastic+burst"),
+path="fleet.policy")``, ``Axis("rate", (...), path="ftrace.rate")``,
+``Axis("mtbf", (...), path="fail.mtbf_hours")``) through the same
+:func:`repro.core.study.set_by_path` machinery cluster axes use.  The
+``failures`` trace (default: disabled) injects node failures into the
+timeline and populates the ``failures / lost_work_frac / goodput``
+columns.  Per-iteration times are re-queried from the compiled study
 engine at every width on a job's elastic menu
 (:func:`repro.core.simulator.group_breakdowns_compiled`), memoized per
 (job identity, width, cluster).
@@ -33,12 +36,14 @@ from repro.fleet.jobs import FleetJob, FleetJobSpec, WidthProfile
 from repro.fleet.resize import instance_state_bytes
 from repro.fleet.simulator import FleetModel, FleetResult, FleetSimulator
 from repro.fleet.trace import FleetTrace
+from repro.reliability.trace import FailureTrace
 
 FLEET_COLUMNS: Tuple[str, ...] = (
     "fleet_util", "turnaround_p50", "turnaround_p99", "preemptions",
-    "resize_events", "burst_events", "jobs_completed")
+    "resize_events", "burst_events", "jobs_completed", "failures",
+    "lost_work_frac", "goodput")
 
-_POINT_FIELDS: Tuple[str, ...] = ("fleet", "ftrace")
+_POINT_FIELDS: Tuple[str, ...] = ("fleet", "ftrace", "fail")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +52,7 @@ class FleetPoint:
 
     fleet: FleetModel
     ftrace: FleetTrace
+    fail: FailureTrace = dataclasses.field(default_factory=FailureTrace)
 
 
 def is_fleet_axis(axis: Axis) -> bool:
@@ -89,6 +95,7 @@ class FleetSpec:
     fleet: FleetModel = dataclasses.field(default_factory=FleetModel)
     ftrace: FleetTrace = dataclasses.field(
         default_factory=lambda: FleetTrace(kind="static"))
+    failures: FailureTrace = dataclasses.field(default_factory=FailureTrace)
     axes: Sequence[Axis] = ()
     placement: Any = "paper"
     zero_stage: int = 2
@@ -104,7 +111,7 @@ class FleetSpec:
                 check_path(point, axis.path or "")
 
     def point(self) -> FleetPoint:
-        return FleetPoint(self.fleet, self.ftrace)
+        return FleetPoint(self.fleet, self.ftrace, self.failures)
 
     def to_study(self) -> "FleetStudy":
         """Lower to a StudySpec the study engine runs unchanged: fleet
@@ -149,6 +156,7 @@ def _infeasible(reason: str) -> Dict[str, Any]:
     return {"fleet_util": 0.0, "turnaround_p50": float("inf"),
             "turnaround_p99": float("inf"), "preemptions": 0,
             "resize_events": 0, "burst_events": 0, "jobs_completed": 0,
+            "failures": 0, "lost_work_frac": 0.0, "goodput": 0.0,
             "makespan": float("inf"), "total": float("inf"),
             "feasible": False, "n_events": 0,
             "infeasible_reason": reason}
@@ -210,9 +218,13 @@ def fleet_record(cluster: Optional[ClusterLike], spec: FleetSpec,
         except ValueError as exc:
             return _infeasible(str(exc))
         jobs.append(FleetJob(spec=js, profiles=profiles, uid=uid))
+    groups = cluster.node_groups
     sim = FleetSimulator(
-        capacities=[g.num_nodes for g in cluster.node_groups],
-        model=point.fleet, placement=placement)
+        capacities=[g.num_nodes for g in groups],
+        model=point.fleet, placement=placement,
+        failures=point.fail,
+        pod_sizes=[min(getattr(g.topology, "pod_size", g.num_nodes),
+                       g.num_nodes) for g in groups])
     res: FleetResult = sim.run(jobs)
     return {
         "fleet_util": res.fleet_util,
@@ -222,6 +234,9 @@ def fleet_record(cluster: Optional[ClusterLike], spec: FleetSpec,
         "resize_events": res.resize_events,
         "burst_events": res.burst_events,
         "jobs_completed": res.jobs_completed,
+        "failures": res.failures,
+        "lost_work_frac": res.lost_work_frac,
+        "goodput": res.goodput,
         "makespan": res.makespan,
         # "total" prices the cell: 1 / (makespan * tco) becomes the
         # fleet's perf_per_dollar through the standard cost columns.

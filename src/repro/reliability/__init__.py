@@ -1,0 +1,39 @@
+"""repro.reliability: failure-aware cluster DSE.
+
+At COMET's target scale (thousands of nodes, week-long runs) node MTBF,
+checkpoint bandwidth, and restart policy are provisioning axes like
+compute and network.  This package prices them two ways:
+
+* **Closed form** — :class:`FailureModel` + the Young–Daly optimal
+  checkpoint interval turn every training study cell into
+  ``ckpt_interval_s / ckpt_overhead_frac / expected_restarts /
+  goodput_frac`` columns (``StudySpec.reliability`` attaches the model;
+  ``reliability.*`` dotted-path axes sweep it), and
+  ``goodput_per_dollar`` re-ranks clusters failure-aware.
+* **Fault injection** — :class:`FailureTrace` feeds failure/repair
+  events into the :class:`repro.fleet.FleetSimulator` timeline: a
+  failed node kills its instance back to the last interval-quantized
+  checkpoint boundary, capacity returns at repair, and the per-job
+  degradation policy chooses wait-for-repair vs elastic
+  shrink-to-survive.
+
+See docs/reliability_api.md.
+"""
+
+from repro.reliability.trace import (BLAST_RADII, FAILURE_TRACE_KINDS,
+                                     FailureEvent, FailureTrace)
+from repro.reliability.model import (FailureModel, daly_interval,
+                                     goodput_frac, overhead,
+                                     reliability_columns)
+
+__all__ = [
+    "BLAST_RADII",
+    "FAILURE_TRACE_KINDS",
+    "FailureEvent",
+    "FailureModel",
+    "FailureTrace",
+    "daly_interval",
+    "goodput_frac",
+    "overhead",
+    "reliability_columns",
+]

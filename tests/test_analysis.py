@@ -67,11 +67,12 @@ class TestFramework:
     def test_registry_covers_all_packs(self):
         packs = {r.pack for r in list_rules()}
         assert packs == {"workload", "compiled", "study", "cluster",
-                         "serving", "search", "fleet"}
+                         "serving", "search", "fleet", "reliability"}
         assert len(list_rules("workload")) == 5
         assert len(list_rules("compiled")) == 5
         assert len(list_rules("serving")) == 4
         assert len(list_rules("search")) == 3
+        assert len(list_rules("reliability")) == 5
 
     def test_rule_config_disable(self, small_cfg):
         wl = decompose(small_cfg, SMALL_SHAPE, mp=2, dp=4)

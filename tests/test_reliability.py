@@ -1,0 +1,560 @@
+"""Tests for ``repro.reliability`` (ISSUE 10): failure-aware cluster DSE.
+
+Young–Daly closed-form math (analytic optimum vs numeric scan, goodput
+bounds and monotonicity), the checkpointer crash-window recovery path,
+fault injection in the fleet timeline (explicit traces, interval-
+quantized rollback, wait-vs-shrink degradation), the degenerate
+failure-free equivalence over the fleet simulator AND all seven figure
+studies, the Y1xx rule pack, and the two headline claims: Daly beats a
+naive fixed cadence on goodput, and shrink-to-survive beats
+wait-for-repair on turnaround-p99.
+"""
+
+import dataclasses
+import math
+import os
+import shutil
+import tempfile
+
+import pytest
+
+from repro.analysis import analyze_reliability
+from repro.core import dse
+from repro.core.cluster import BASELINE_DGX_A100
+from repro.core.study import Axis, StudySpec, run_study
+from repro.fleet import (
+    FleetJob,
+    FleetJobSpec,
+    FleetModel,
+    FleetSimulator,
+    FleetSpec,
+    WidthProfile,
+)
+from repro.reliability import (
+    FailureEvent,
+    FailureModel,
+    FailureTrace,
+    daly_interval,
+    goodput_frac,
+    overhead,
+    reliability_columns,
+)
+
+STATE = 8e9
+
+
+def _prof(times, sb=STATE):
+    out = {}
+    for w, ts in times.items():
+        ts = ts if isinstance(ts, tuple) else (ts,)
+        out[w] = WidthProfile(iter_times=ts, fits=(True,) * len(ts),
+                              state_bytes=sb)
+    return out
+
+
+def _job(uid=0, width=8, iters=10, it=1.0, **kw):
+    spec = FleetJobSpec(name=kw.pop("name", f"j{uid}"),
+                        nodes_per_instance=width, iterations=iters, **kw)
+    times = {w: (it,) for w in spec.width_menu}
+    return FleetJob(spec=spec, profiles=_prof(times), uid=uid)
+
+
+def _one_failure(time=4.5, nodes=8, repair_s=100.0):
+    return FailureTrace(kind="explicit",
+                        events=(FailureEvent(time=time, group=0,
+                                             nodes=nodes,
+                                             repair_s=repair_s),))
+
+
+# --------------------------------------------------------------------- #
+# Young–Daly closed form
+# --------------------------------------------------------------------- #
+
+class TestDalyMath:
+    def test_goodput_in_unit_interval(self):
+        for tau in (1.0, 60.0, 600.0, 86400.0):
+            for c in (0.1, 10.0, 300.0):
+                for lam in (1e-8, 1e-5, 1e-3):
+                    g = goodput_frac(tau, c, lam, restart_cost_s=1800.0)
+                    assert 0.0 < g <= 1.0
+
+    def test_analytic_optimum_matches_numeric_scan(self):
+        c, lam = 120.0, 1.0 / 3600.0
+        tau_star = daly_interval(c, lam)
+        best = min((overhead(t, c, lam), t)
+                   for t in [tau_star * s for s in
+                             (0.25, 0.5, 0.9, 0.99, 1.0, 1.01, 1.1, 2, 4)])
+        assert best[1] == tau_star
+
+    def test_goodput_monotone_in_cluster_size(self):
+        model = FailureModel(mtbf_hours=10_000.0)
+        prev = 1.1
+        for n in (64, 256, 1024, 4096, 16384):
+            g = reliability_columns(model, 1e12, n)["goodput_frac"]
+            assert g <= prev
+            prev = g
+
+    def test_zero_rate_degenerates_exactly(self):
+        cols = reliability_columns(FailureModel(mtbf_hours=math.inf),
+                                   1e12, 2048)
+        assert cols == {"ckpt_interval_s": math.inf,
+                        "ckpt_overhead_frac": 0.0,
+                        "expected_restarts": 0.0,
+                        "goodput_frac": 1.0}
+        assert daly_interval(100.0, 0.0) == math.inf
+        assert overhead(600.0, 100.0, 0.0) == 0.0
+        assert goodput_frac(600.0, 100.0, 0.0) == 1.0
+
+    def test_fixed_interval_never_beats_daly(self):
+        model = FailureModel(mtbf_hours=5_000.0, ckpt_bw=100e9)
+        daly = reliability_columns(model, 5e12, 1024)["goodput_frac"]
+        for s in (30.0, 300.0, 3000.0, 30000.0):
+            fixed = reliability_columns(
+                dataclasses.replace(model, interval_s=s),
+                5e12, 1024)["goodput_frac"]
+            assert fixed <= daly + 1e-12
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            daly_interval(-1.0, 1e-5)
+        with pytest.raises(ValueError):
+            daly_interval(10.0, -1e-5)
+        with pytest.raises(ValueError):
+            FailureModel(mtbf_hours=0.0)
+        with pytest.raises(ValueError):
+            FailureModel(ckpt_bw=0.0)
+        with pytest.raises(ValueError):
+            FailureModel(blast="rack")
+
+
+class TestDalyProperties:
+    """Hypothesis property tests (skipped when hypothesis is absent)."""
+
+    def test_goodput_bounds_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, strategies as st
+
+        @given(st.floats(1.0, 1e6), st.floats(0.01, 1e4),
+               st.floats(1e-9, 1e-2), st.floats(0.0, 1e5))
+        def check(tau, c, lam, r):
+            assert 0.0 < goodput_frac(tau, c, lam, r) <= 1.0
+
+        check()
+
+    def test_daly_is_global_minimum_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, strategies as st
+
+        @given(st.floats(0.01, 1e4), st.floats(1e-9, 1e-2),
+               st.floats(0.1, 10.0))
+        def check(c, lam, scale):
+            tau = daly_interval(c, lam)
+            assert overhead(tau, c, lam) <= \
+                overhead(tau * scale, c, lam) + 1e-9
+
+        check()
+
+    def test_goodput_monotone_in_n_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, strategies as st
+
+        @given(st.floats(100.0, 1e6), st.integers(1, 12))
+        def check(mtbf, k):
+            model = FailureModel(mtbf_hours=mtbf)
+            g1 = reliability_columns(model, 1e12, 2 ** k)["goodput_frac"]
+            g2 = reliability_columns(model, 1e12,
+                                     2 ** (k + 1))["goodput_frac"]
+            assert g2 <= g1 + 1e-12
+
+        check()
+
+
+# --------------------------------------------------------------------- #
+# Failure traces
+# --------------------------------------------------------------------- #
+
+class TestFailureTrace:
+    def test_default_is_disabled_and_empty(self):
+        t = FailureTrace()
+        assert not t.enabled
+        assert t.rate_per_node == 0.0
+        assert t.materialize([16, 16]) == ()
+
+    def test_poisson_is_deterministic(self):
+        t = FailureTrace(kind="poisson", mtbf_hours=50.0, horizon_hours=48.0)
+        a, b = t.materialize([64]), t.materialize([64])
+        assert a == b and len(a) > 0
+        assert t.materialize([64]) != \
+            dataclasses.replace(t, seed=7).materialize([64])
+
+    def test_pod_blast_downs_the_pod(self):
+        t = FailureTrace(kind="poisson", mtbf_hours=50.0, blast="pod",
+                         horizon_hours=48.0)
+        evs = t.materialize([64], pod_sizes=[8])
+        assert evs and all(e.nodes == 8 for e in evs)
+
+    def test_explicit_replays_sorted(self):
+        evs = (FailureEvent(time=9.0, group=0), FailureEvent(time=1.0,
+                                                             group=0))
+        t = FailureTrace(kind="explicit", events=evs)
+        out = t.materialize([8])
+        assert [e.time for e in out] == [1.0, 9.0]
+        bad = FailureTrace(kind="explicit",
+                           events=(FailureEvent(time=0.0, group=3),))
+        with pytest.raises(ValueError):
+            bad.materialize([8])
+
+    def test_model_hands_off_trace(self):
+        assert FailureModel(mtbf_hours=math.inf).trace().kind == "none"
+        tr = FailureModel(mtbf_hours=100.0, mttr_hours=1.0).trace(seed=3)
+        assert tr.kind == "poisson" and tr.seed == 3
+        assert tr.mtbf_hours == 100.0 and tr.mttr_hours == 1.0
+
+
+# --------------------------------------------------------------------- #
+# Checkpointer crash-window recovery
+# --------------------------------------------------------------------- #
+
+class TestCheckpointCrashWindow:
+    def _save(self, ck, step, val):
+        ck.save(step, {"w": __import__("numpy").full((4,), float(val))})
+
+    def test_stale_done_with_missing_dir_falls_back(self):
+        from repro.checkpoint import Checkpointer
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            self._save(ck, 1, 1.0)
+            self._save(ck, 2, 2.0)
+            # crash inside the old re-save window: dir gone, marker left
+            shutil.rmtree(os.path.join(d, "step_00000002"))
+            assert ck.latest_step() == 1
+            tree, _ = ck.restore()
+            assert float(tree["w"][0]) == 1.0
+
+    def test_missing_meta_falls_back(self):
+        from repro.checkpoint import Checkpointer
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            self._save(ck, 1, 1.0)
+            self._save(ck, 2, 2.0)
+            os.remove(os.path.join(d, "step_00000002", "meta.json"))
+            assert ck.latest_step() == 1
+            tree, _ = ck.restore()
+            assert float(tree["w"][0]) == 1.0
+
+    def test_resave_crash_window_leaves_no_stale_marker(self):
+        """save() must drop the commit marker before clearing the old
+        directory, so no crash instant has a marker without a dir."""
+        from repro.checkpoint import Checkpointer
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            self._save(ck, 5, 1.0)
+            orig_rmtree = shutil.rmtree
+
+            def boom(path, *a, **kw):
+                orig_rmtree(path, *a, **kw)
+                if path.endswith("step_00000005"):
+                    raise RuntimeError("crash mid-resave")
+
+            shutil.rmtree = boom
+            try:
+                with pytest.raises(RuntimeError):
+                    self._save(ck, 5, 2.0)
+            finally:
+                shutil.rmtree = orig_rmtree
+            # the marker went first: nothing claims the missing dir
+            assert ck.latest_step() is None
+
+    def test_orphan_tmp_gc_on_init(self):
+        from repro.checkpoint import Checkpointer
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            self._save(ck, 1, 1.0)
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))
+            ck2 = Checkpointer(d)
+            assert not os.path.exists(os.path.join(d, "step_00000009.tmp"))
+            assert ck2.latest_step() == 1
+
+    def test_manager_restore_latest_recovers(self):
+        from repro.checkpoint import CheckpointManager
+        import numpy as np
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, interval=1, keep=5, async_save=False)
+            mgr.maybe_save(1, {"w": np.ones((2,))})
+            mgr.maybe_save(2, {"w": np.full((2,), 2.0)})
+            shutil.rmtree(os.path.join(d, "step_00000002"))
+            tree, _ = mgr.restore_latest()
+            assert float(tree["w"][0]) == 1.0
+
+    def test_restore_target_mismatch_is_descriptive(self):
+        from repro.checkpoint import Checkpointer
+        import numpy as np
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, {"a": np.ones((2,)), "b": np.ones((2,))})
+            with pytest.raises(KeyError) as exc:
+                ck.restore(target={"a": np.ones((2,)), "c": np.ones((2,))})
+            msg = str(exc.value)
+            assert "missing from checkpoint" in msg and "c" in msg
+            assert "unexpected in checkpoint" in msg and "b" in msg
+
+
+# --------------------------------------------------------------------- #
+# Fault injection in the fleet timeline
+# --------------------------------------------------------------------- #
+
+class TestFaultInjection:
+    def test_disabled_trace_is_bit_for_bit_identical(self):
+        jobs = lambda: [_job(0, width=8, iters=10),
+                        _job(1, width=4, iters=6, arrival=2.0, priority=1)]
+        model = FleetModel(policy="elastic", ckpt_interval_s=2.0)
+        base = FleetSimulator((8,), model=model).run(jobs())
+        off = FleetSimulator((8,), model=model,
+                             failures=FailureTrace()).run(jobs())
+        assert off.makespan == base.makespan
+        assert off.busy_node_seconds == base.busy_node_seconds
+        assert off.events == base.events
+        assert off.failures == 0 and off.lost_work_frac == 0.0
+
+    def test_failure_kills_and_recovers(self):
+        job = _job(0, width=8, iters=10, it=1.0)
+        model = FleetModel(policy="static", ckpt_interval_s=2.0)
+        res = FleetSimulator((8,), model=model,
+                             failures=_one_failure()).run([job])
+        clean = FleetSimulator((8,), model=model).run([_job(0, width=8,
+                                                            iters=10)])
+        assert res.failures == 1
+        assert res.jobs_completed == 1
+        assert res.makespan > clean.makespan
+        assert res.lost_node_seconds > 0.0
+        assert 0.0 < res.goodput < 1.0
+        kinds = {e.kind for e in res.events}
+        assert {"fail_node", "repair", "fault"} <= kinds
+
+    def test_rollback_is_interval_quantized(self):
+        """With a checkpoint cadence, a failure rolls back only to the
+        last committed interval boundary — strictly less work lost than
+        the same failure with no checkpoints (whole segment discarded)."""
+        mk = lambda interval: FleetSimulator(
+            (8,), model=FleetModel(policy="static",
+                                   ckpt_interval_s=interval),
+            failures=_one_failure(time=4.5, nodes=8)
+        ).run([_job(0, width=8, iters=100, it=1.0)])
+        with_ckpt, without = mk(2.0), mk(0.0)
+        # no cadence: everything since segment start (4.5s x 8 nodes)
+        assert without.lost_node_seconds == pytest.approx(4.5 * 8)
+        assert 0.0 < with_ckpt.lost_node_seconds < without.lost_node_seconds
+
+    def test_wait_stalls_until_repair(self):
+        job = _job(0, width=8, iters=10, it=1.0)
+        model = FleetModel(policy="static", degradation="wait",
+                           ckpt_interval_s=2.0)
+        res = FleetSimulator((8,), model=model,
+                             failures=_one_failure(time=4.5, nodes=8,
+                                                   repair_s=500.0)
+                             ).run([job])
+        assert res.jobs_completed == 1
+        assert res.makespan > 4.5 + 500.0
+
+    def test_shrink_survives_on_remaining_nodes(self):
+        job = _job(0, width=8, iters=10, it=1.0, widths=(2, 8))
+        model = FleetModel(policy="static", degradation="shrink",
+                           ckpt_interval_s=2.0)
+        res = FleetSimulator((8,), model=model,
+                             failures=_one_failure(time=4.5, nodes=6,
+                                                   repair_s=5000.0)
+                             ).run([job])
+        assert res.jobs_completed == 1
+        assert res.makespan < 5000.0
+
+    def test_per_job_on_failure_overrides_fleet_default(self):
+        job = _job(0, width=8, iters=10, it=1.0, widths=(2, 8),
+                   on_failure="shrink")
+        model = FleetModel(policy="static", degradation="wait",
+                           ckpt_interval_s=2.0)
+        res = FleetSimulator((8,), model=model,
+                             failures=_one_failure(time=4.5, nodes=6,
+                                                   repair_s=5000.0)
+                             ).run([job])
+        assert res.makespan < 5000.0
+
+    def test_capacity_conserved_through_repair(self):
+        """After repair the full width is available again: a second job
+        arriving post-repair starts at full width."""
+        j0 = _job(0, width=8, iters=5, it=1.0)
+        j1 = _job(1, width=8, iters=2, it=1.0, arrival=300.0)
+        model = FleetModel(policy="static", ckpt_interval_s=2.0)
+        res = FleetSimulator((8,), model=model,
+                             failures=_one_failure(time=2.5, nodes=8,
+                                                   repair_s=50.0)
+                             ).run([j0, j1])
+        assert res.jobs_completed == 2
+        starts = [e for e in res.events if e.kind == "start"
+                  and e.job == "j1"]
+        assert starts and starts[0].width == 8
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FleetModel(degradation="panic")
+        with pytest.raises(ValueError):
+            FleetModel(ckpt_interval_s=-1.0)
+        with pytest.raises(ValueError):
+            FleetJobSpec(name="x", nodes_per_instance=4, iterations=1,
+                         on_failure="retry")
+        with pytest.raises(ValueError):
+            FleetSimulator((8,), failures=FailureTrace(), pod_sizes=[8, 8])
+
+
+# --------------------------------------------------------------------- #
+# Study columns + degenerate equivalence
+# --------------------------------------------------------------------- #
+
+def _tiny_spec(reliability=None, axes=()):
+    from repro.configs import get_config
+    from repro.core.study import GridSpace
+    from repro.configs.base import ShapeConfig
+    return StudySpec(
+        name="rel-test", model=get_config("chatglm3-6b"),
+        shape=ShapeConfig("t", seq_len=2048, global_batch=256, kind="train"),
+        cluster=BASELINE_DGX_A100,
+        strategies=GridSpace(mp=(8,), dp=(128,)),
+        reliability=reliability, axes=list(axes))
+
+
+class TestStudyColumns:
+    def test_no_model_no_columns(self):
+        rec = run_study(_tiny_spec()).cells[0].record
+        assert "goodput_frac" not in rec and "ckpt_interval_s" not in rec
+
+    def test_disabled_model_is_identity(self):
+        base = run_study(_tiny_spec()).cells[0].record
+        rec = run_study(_tiny_spec(
+            reliability=FailureModel(mtbf_hours=math.inf))).cells[0].record
+        for k, v in base.items():
+            assert rec[k] == v, k
+        assert rec["goodput_frac"] == 1.0
+        assert rec["expected_restarts"] == 0.0
+        assert rec["goodput_per_dollar"] == rec["perf_per_dollar"]
+
+    def test_reliability_axis_folds_into_model(self):
+        res = run_study(_tiny_spec(
+            reliability=FailureModel(mtbf_hours=math.inf),
+            axes=[Axis("mtbf_hours", (math.inf, 1000.0),
+                       path="reliability.mtbf_hours")]))
+        by = {c.record["mtbf_hours"]: c.record for c in res}
+        assert by[math.inf]["goodput_frac"] == 1.0
+        assert 0.0 < by[1000.0]["goodput_frac"] < 1.0
+        assert by[1000.0]["goodput_per_dollar"] < \
+            by[1000.0]["perf_per_dollar"]
+        assert by[1000.0]["expected_restarts"] > 0.0
+
+    def test_figure_studies_unchanged_by_disabled_model(self):
+        """All seven figure-study records are bit-for-bit identical with
+        a disabled (MTBF = inf) failure model attached."""
+        for name, spec in dse.figure_studies().items():
+            base = run_study(spec)
+            rel = run_study(dataclasses.replace(
+                spec, reliability=FailureModel(mtbf_hours=math.inf)))
+            assert len(base.cells) == len(rel.cells), name
+            for b, r in zip(base.cells, rel.cells):
+                for k, v in b.record.items():
+                    assert r.record[k] == v, (name, k)
+                if r.record.get("feasible"):
+                    assert r.record["goodput_frac"] == 1.0
+
+    def test_fleet_spec_failure_columns(self):
+        spec = dse.reliability_fleet_study(num_iters_scale=0.25,
+                                           fail_time=60.0,
+                                           repair_s=3_000.0)
+        res = run_study(spec)
+        for cell in res:
+            rec = cell.record
+            assert rec["feasible"]
+            assert rec["failures"] >= 1
+            assert 0.0 <= rec["lost_work_frac"] < 1.0
+            assert 0.0 < rec["goodput"] <= 1.0
+
+
+# --------------------------------------------------------------------- #
+# Y1xx rules
+# --------------------------------------------------------------------- #
+
+class TestRules:
+    def _fleet_spec(self, failures):
+        return FleetSpec(name="y-test",
+                         jobs=(FleetJobSpec(name="j", nodes_per_instance=4,
+                                            iterations=4),),
+                         cluster=BASELINE_DGX_A100, failures=failures)
+
+    def test_clean_specs_are_clean(self):
+        assert analyze_reliability(
+            _tiny_spec(reliability=FailureModel())) == []
+        assert analyze_reliability(dse.reliability_study()) == []
+        assert analyze_reliability(dse.reliability_fleet_study()) == []
+
+    def test_y101_bad_swept_rate(self):
+        spec = _tiny_spec(reliability=FailureModel(),
+                          axes=[Axis("mtbf_hours", (1000.0, -5.0),
+                                     path="reliability.mtbf_hours")])
+        codes = {d.code for d in analyze_reliability(spec)}
+        assert "Y101" in codes
+
+    def test_y102_interval_longer_than_run(self):
+        spec = _tiny_spec(reliability=FailureModel(
+            interval_s=200 * 3600.0, run_hours=168.0))
+        diags = analyze_reliability(spec)
+        assert any(d.code == "Y102" and d.severity == "error"
+                   for d in diags)
+
+    def test_y103_empty_explicit_trace(self):
+        # FailureTrace(kind="explicit") with no events is constructible
+        # (enabled=False) but as a study knob it is a silent no-op.
+        diags = analyze_reliability(
+            self._fleet_spec(FailureTrace(kind="explicit")))
+        assert any(d.code == "Y103" for d in diags)
+
+    def test_y104_blast_out_of_range(self):
+        bad = FailureTrace(kind="explicit",
+                           events=(FailureEvent(time=1.0, group=9),))
+        diags = analyze_reliability(self._fleet_spec(bad))
+        assert any(d.code == "Y104" for d in diags)
+        toobig = FailureTrace(
+            kind="explicit",
+            events=(FailureEvent(time=1.0, group=0, nodes=10 ** 6),))
+        diags = analyze_reliability(self._fleet_spec(toobig))
+        assert any(d.code == "Y104" for d in diags)
+
+    def test_y105_zero_draw_warns(self):
+        quiet = FailureTrace(kind="poisson", mtbf_hours=1e9,
+                             horizon_hours=0.01)
+        diags = analyze_reliability(self._fleet_spec(quiet))
+        assert any(d.code == "Y105" and d.severity == "warning"
+                   for d in diags)
+
+    def test_run_study_validate_gates_reliability(self):
+        from repro.analysis import AnalysisError
+        spec = _tiny_spec(reliability=FailureModel(
+            interval_s=200 * 3600.0, run_hours=168.0))
+        with pytest.raises(AnalysisError):
+            run_study(spec, validate="error")
+
+
+# --------------------------------------------------------------------- #
+# Headlines
+# --------------------------------------------------------------------- #
+
+class TestHeadlines:
+    def test_daly_beats_naive_and_ranking_flips(self):
+        recs = dse.reliability_ranking()
+        h = dse.reliability_headline(recs)
+        assert h["daly_vs_naive"] >= 1.0
+        assert h["daly_goodput"] > h["naive_goodput"]
+        assert h["ranking_flips"]
+        assert h["best_failure_free"] != h["best_failure_aware"]
+
+    def test_shrink_beats_wait_on_turnaround_p99(self):
+        recs = dse.reliability_fleet_ranking()
+        h = dse.reliability_fleet_headline(recs)
+        assert h["p99_ratio"] > 1.0
+        assert h["shrink_p99"] < h["wait_p99"]
+        assert h["shrink_goodput"] > h["wait_goodput"]
